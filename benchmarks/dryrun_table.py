@@ -1,0 +1,61 @@
+"""Render experiments/dryrun/*.json into the §Dry-run markdown table
+(experiments/dryrun/summary.md): per cell and mesh, status, FLOPs, HBM
+bytes, wire bytes, and per-device memory (args+temp vs the 16 GB budget).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+DRY_DIR = os.environ.get(
+    "REPRO_DRYRUN_DIR",
+    os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                 "experiments", "dryrun"))
+
+
+def main(argv=None):
+    argparse.ArgumentParser().parse_args(argv)
+    rows = []
+    for fn in sorted(os.listdir(DRY_DIR)):
+        if not fn.endswith(".json") or "calib" in fn:
+            continue
+        with open(os.path.join(DRY_DIR, fn)) as fh:
+            d = json.load(fh)
+        if d.get("kind") == "paper":
+            f = d["full"]
+            mem = f.get("memory", {})
+            rows.append((d["arch"], d["shape"], d["mesh"], "ok",
+                         f["flops"], f["bytes_accessed"],
+                         f["collectives"]["total_bytes"], mem))
+            continue
+        if d.get("status") == "skipped":
+            rows.append((d["arch"], d["shape"], d["mesh"], "skipped",
+                         0, 0, 0, {}))
+            continue
+        rows.append((d["arch"], d["shape"], d["mesh"], "ok",
+                     d["flops"], d["bytes_accessed"],
+                     d["collectives"]["total_bytes"], d.get("memory", {})))
+
+    md = ["| arch | shape | mesh | status | GFLOP/dev | HBM GB/dev "
+          "| wire GB/dev | mem GB/dev (args+temp) |",
+          "|---|---|---|---|---|---|---|---|"]
+    for a, s, m, st, fl, by, wi, mem in rows:
+        if st == "skipped":
+            md.append(f"| {a} | {s} | {m} | skipped | -- | -- | -- | -- |")
+            continue
+        gb = (mem.get("argument_size_in_bytes", 0)
+              + mem.get("temp_size_in_bytes", 0)) / 2**30
+        fit = "" if gb <= 15.5 else " **OVER**"
+        md.append(f"| {a} | {s} | {m} | ok | {fl/1e9:.1f} | {by/1e9:.1f} | "
+                  f"{wi/1e9:.3f} | {gb:.2f}{fit} |")
+    out = "\n".join(md) + "\n"
+    path = os.path.join(DRY_DIR, "summary.md")
+    with open(path, "w") as fh:
+        fh.write(out)
+    print(out)
+    print(f"-> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Paper Figure 6: weak scaling.  Per-processor workload constant
+(block 40,000 x 5,000 scaled by --scale); P grows 1..7 for Q in {2,3,4}
+and two sparsity levels; efficiency = t(P=1) / t(P)."""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.configs.svm_paper import WEAK_P, WEAK_Q, WEAK_SPARSITY
+from repro.core import (D3CAConfig, RADiSAConfig, d3ca_simulated, objective,
+                        partition, radisa_simulated, rel_opt, serial_sdca)
+from repro.data import make_sparse_svm_data
+
+from .common import emit_csv_row, save_result
+
+
+def time_to_tol(runner, f, f_star, tol=0.05):
+    t0 = time.perf_counter()
+    done = {}
+
+    def cb(t, w, *rest):
+        if "t" not in done and float(rel_opt(f(w), f_star)) < tol:
+            done["t"] = time.perf_counter() - t0
+    runner(cb)
+    return done.get("t", time.perf_counter() - t0)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.01)
+    ap.add_argument("--iters", type=int, default=12)
+    ap.add_argument("--max-p", type=int, default=4)
+    args = ap.parse_args(argv)
+
+    bn, bm = int(40000 * args.scale), int(5000 * args.scale)
+    out = {}
+    for r in WEAK_SPARSITY:
+        for Q in WEAK_Q[:2] if args.max_p < 7 else WEAK_Q:
+            base = {}
+            for P in [p for p in WEAK_P if p <= args.max_p]:
+                n, m = P * bn, Q * bm
+                X, y = make_sparse_svm_data(n, m, density=max(r, 0.05),
+                                            seed=P)
+                for method, lam in (("radisa", 0.1), ("d3ca", 1.0)):
+                    w_ref, _ = serial_sdca("hinge", X, y, lam=lam, epochs=60)
+                    f_star = float(objective("hinge", X, y, w_ref, lam))
+                    f = lambda w: float(objective("hinge", X, y, w, lam))
+                    data = partition(X, y, P, Q)
+                    if method == "radisa":
+                        if data.m_q % P:
+                            continue
+                        runner = lambda cb: radisa_simulated(
+                            "hinge", data, RADiSAConfig(
+                                lam=lam, gamma=0.05 / P,
+                                outer_iters=args.iters), callback=cb)
+                    else:
+                        runner = lambda cb: d3ca_simulated(
+                            "hinge", data, D3CAConfig(
+                                lam=lam, outer_iters=args.iters), callback=cb)
+                    t = time_to_tol(runner, f, f_star)
+                    kk = f"{method}_r{r}_Q{Q}"
+                    base.setdefault(kk, {})
+                    base[kk][P] = t
+                    eff = base[kk][min(base[kk])] / t * 100.0
+                    emit_csv_row(f"fig6/{kk}/P{P}", t * 1e6,
+                                 f"efficiency={eff:.1f}%")
+            out.update(base)
+    save_result("fig6_weak", out)
+
+
+if __name__ == "__main__":
+    main()

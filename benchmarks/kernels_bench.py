@@ -1,0 +1,62 @@
+"""Micro-benchmarks for the Pallas kernels (interpret mode on CPU: these
+numbers validate plumbing, not TPU throughput -- the roofline table is the
+TPU performance story) plus the pure-jnp reference timings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash import flash_attention
+from repro.kernels.linattn import rwkv_linattn
+from repro.kernels.sdca import sdca_epoch
+from repro.kernels.svrg import svrg_inner
+
+from .common import emit_csv_row, save_result, timed
+
+
+def main(argv=None):
+    rng = np.random.default_rng(0)
+    out = {}
+
+    n_p, m_q, steps = 256, 256, 256
+    x = jnp.asarray(rng.normal(size=(n_p, m_q)), jnp.float32)
+    y = jnp.asarray(np.sign(rng.normal(size=n_p)), jnp.float32)
+    mask = jnp.ones((n_p,))
+    a0 = jnp.zeros((n_p,))
+    w0 = jnp.zeros((m_q,))
+    idx = jnp.asarray(rng.integers(0, n_p, steps), jnp.int32)
+    for backend in ("ref",):
+        t = timed(lambda: sdca_epoch(x, y, mask, a0, w0, idx, lam=0.1,
+                                     n=1000, Q=2, backend=backend))
+        emit_csv_row(f"kernels/sdca_{backend}", t * 1e6,
+                     f"rows={n_p};feat={m_q};steps={steps}")
+        out[f"sdca_{backend}_us"] = t * 1e6
+
+    wa = jnp.zeros((m_q,))
+    za = jnp.zeros((n_p,))
+    t = timed(lambda: svrg_inner(x, y, mask, za, wa, jnp.zeros((m_q,)), idx,
+                                 lam=0.1, eta=0.01, backend="ref"))
+    emit_csv_row("kernels/svrg_ref", t * 1e6, f"L={steps}")
+    out["svrg_ref_us"] = t * 1e6
+
+    B, S, H, KV, D = 1, 512, 4, 2, 64
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.bfloat16)
+    t = timed(lambda: flash_attention(q, k, v, backend="ref"))
+    emit_csv_row("kernels/flash_ref", t * 1e6, f"S={S}")
+    out["flash_ref_us"] = t * 1e6
+
+    r = jnp.asarray(rng.normal(size=(4, 256, 64)), jnp.float32)
+    logw = -jnp.exp(jnp.asarray(rng.normal(size=(4, 256, 64)), jnp.float32))
+    u = jnp.ones((64,))
+    t = timed(lambda: rwkv_linattn(r, r, r, logw, u, backend="ref"))
+    emit_csv_row("kernels/linattn_ref", t * 1e6, "S=256")
+    out["linattn_ref_us"] = t * 1e6
+
+    save_result("kernels", out)
+
+
+if __name__ == "__main__":
+    main()

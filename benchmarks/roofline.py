@@ -1,0 +1,167 @@
+"""Roofline table assembly (deliverable g).
+
+Reads experiments/dryrun/*.json (full-model compiles + per-period
+calibrations produced by repro.launch.dryrun) and emits per
+(arch x shape) on the single-pod 16x16 mesh:
+
+  * the three roofline terms (compute / memory / collective, seconds),
+  * the dominant bottleneck,
+  * MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) + attention quadratic,
+  * MODEL_FLOPS / HLO_FLOPs utilization ratio,
+  * a one-line "what would move the dominant term" note.
+
+HLO numbers are scan-corrected: cost_analysis counts a lax.scan body once,
+so totals are extrapolated with the calibrated per-period costs:
+    total = full + (n_periods - 1) * per_period,   per_period = B - A.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.configs import ARCHS, get_config
+from repro.models.config import LM_SHAPES
+from repro.roofline.model import HW_V5E, model_flops, roofline_terms
+
+DRY_DIR = os.environ.get(
+    "REPRO_DRYRUN_DIR",
+    os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                 "experiments", "dryrun"))
+OUT = os.path.join(os.path.dirname(DRY_DIR), "roofline")
+
+CHIPS = 256
+
+
+def _load(name):
+    p = os.path.join(DRY_DIR, name)
+    if not os.path.exists(p):
+        return None
+    with open(p) as fh:
+        return json.load(fh)
+
+
+def _advice(dominant, cfg, shape):
+    if dominant == "compute":
+        return ("compute-bound: raise MXU utilization (fuse attention "
+                "blocks, bf16 everywhere, avoid remat recompute)")
+    if dominant == "memory":
+        if shape.kind == "decode":
+            return ("HBM-bound (weight streaming): shrink bytes/step via "
+                    "weight quantization or larger decode batch per chip")
+        return ("HBM-bound: fuse elementwise chains, keep activations "
+                "bf16, reuse tiles in VMEM (bigger attention blocks)")
+    return ("collective-bound: overlap collectives with compute (latency "
+            "hiding scheduler), reduce-scatter instead of all-reduce, "
+            "shard so the gradient reduction crosses fewer links, or "
+            "int8-compress the DP all-reduce")
+
+
+def build_table(emit=print):
+    rows = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        n_full, n_rem = cfg.n_periods()
+        for shape in LM_SHAPES:
+            full = _load(f"{arch}__{shape.name}__16x16.json")
+            if full is None:
+                continue
+            if full.get("status") == "skipped":
+                rows.append({"arch": cfg.name, "shape": shape.name,
+                             "status": "skipped",
+                             "reason": full.get("reason", "")})
+                continue
+            calib = _load(f"{arch}__{shape.name}__calib.json")
+            flops = full["flops"]
+            bts = full["bytes_accessed"]
+            wire = full["collectives"]["total_bytes"]
+            extrap = False
+            if calib and n_full >= 1:
+                A, B = calib["variants"]["A"], calib["variants"]["B"]
+                pp_f = max(B["flops"] - A["flops"], 0.0)
+                pp_b = max(B["bytes_accessed"] - A["bytes_accessed"], 0.0)
+                pp_w = max(B["collectives"]["total_bytes"]
+                           - A["collectives"]["total_bytes"], 0.0)
+                flops += (n_full - 1) * pp_f
+                bts += (n_full - 1) * pp_b
+                wire += (n_full - 1) * pp_w
+                extrap = True
+            terms = roofline_terms(flops, bts, wire)
+            mf = model_flops(cfg, shape) / CHIPS   # per device
+            ratio = mf / flops if flops else 0.0
+            rows.append({
+                "arch": cfg.name, "shape": shape.name, "status": "ok",
+                "scan_corrected": extrap,
+                "hlo_flops_per_dev": flops,
+                "hlo_bytes_per_dev": bts,
+                "wire_bytes_per_dev": wire,
+                "compute_s": terms["compute_s"],
+                "memory_s": terms["memory_s"],
+                "collective_s": terms["collective_s"],
+                "dominant": terms["dominant"],
+                "bound_s": terms["bound_s"],
+                "model_flops_per_dev": mf,
+                "useful_ratio": ratio,
+                "advice": _advice(terms["dominant"], cfg, shape),
+            })
+    # the paper's own SVM workload (hinge, one 40960x5120 block per chip)
+    for algo in ("d3ca", "radisa"):
+        d = _load(f"paper_svm_{algo}__16x16.json")
+        if d is None:
+            continue
+        A, B, F = d["calib_A"], d["calib_B"], d["full"]
+        steps = d["inner_steps"]
+        pf = max(B["flops"] - A["flops"], 0.0)
+        pb = max(B["bytes_accessed"] - A["bytes_accessed"], 0.0)
+        flops = F["flops"] + (steps - 1) * pf
+        bts = F["bytes_accessed"] + (steps - 1) * pb
+        wire = F["collectives"]["total_bytes"]
+        terms = roofline_terms(flops, bts, wire)
+        rows.append({
+            "arch": f"paper-svm-{algo}", "shape": d["shape"], "status": "ok",
+            "scan_corrected": True,
+            "hlo_flops_per_dev": flops, "hlo_bytes_per_dev": bts,
+            "wire_bytes_per_dev": wire,
+            "compute_s": terms["compute_s"], "memory_s": terms["memory_s"],
+            "collective_s": terms["collective_s"],
+            "dominant": terms["dominant"], "bound_s": terms["bound_s"],
+            "model_flops_per_dev": flops, "useful_ratio": 1.0,
+            "advice": ("sequential coordinate updates are latency-bound; "
+                       "the Pallas kernel keeps (w, dalpha) in VMEM so HBM "
+                       "traffic/step is one x-row"),
+        })
+
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, "roofline.json"), "w") as fh:
+        json.dump(rows, fh, indent=1)
+
+    md = ["| arch | shape | compute_s | memory_s | collective_s | dominant "
+          "| useful FLOP ratio | note |",
+          "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] == "skipped":
+            md.append(f"| {r['arch']} | {r['shape']} | -- | -- | -- | "
+                      f"skipped | -- | {r['reason'][:60]} |")
+        else:
+            md.append(
+                f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+                f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+                f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+                f"{r['advice'][:58]} |")
+    table = "\n".join(md)
+    with open(os.path.join(OUT, "roofline.md"), "w") as fh:
+        fh.write(table + "\n")
+    emit(table)
+    return rows
+
+
+def main(argv=None):
+    argparse.ArgumentParser().parse_args(argv)
+    rows = build_table()
+    ok = [r for r in rows if r.get("status") == "ok"]
+    print(f"\n{len(ok)} cells analysed, "
+          f"{sum(1 for r in rows if r['status'] == 'skipped')} skipped")
+
+
+if __name__ == "__main__":
+    main()

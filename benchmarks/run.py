@@ -1,0 +1,61 @@
+"""Benchmark harness entry point: one benchmark per paper table/figure,
+plus kernel micro-benchmarks and (if dry-run artifacts exist) the roofline
+table.  Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller instances (CI-sized)")
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig3,fig4,fig5,fig6,kernels,roofline")
+    args = ap.parse_args(argv)
+
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    print("name,us_per_call,derived")
+
+    if want("fig3"):
+        from . import fig3_time
+        fig3_time.main(["--scale", "0.05" if args.quick else "0.08",
+                        "--iters", "8" if args.quick else "15"])
+    if want("fig4"):
+        from . import fig4_iters
+        fig4_iters.main(["--scale", "0.05" if args.quick else "0.08",
+                         "--iters", "20" if args.quick else "50"])
+    if want("fig5"):
+        from . import fig5_strong
+        fig5_strong.main(["--scale", "0.02" if args.quick else "0.05",
+                          "--iters", "10" if args.quick else "25"])
+    if want("fig6"):
+        from . import fig6_weak
+        fig6_weak.main(["--scale", "0.005" if args.quick else "0.01",
+                        "--iters", "6" if args.quick else "12",
+                        "--max-p", "3" if args.quick else "4"])
+    if want("kernels"):
+        from . import kernels_bench
+        kernels_bench.main([])
+    if want("roofline"):
+        from . import roofline
+        try:
+            roofline.main([])
+        except Exception as e:
+            print(f"roofline,0.0,unavailable({e!r})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""End-to-end driver: train a ~100M-parameter qwen3-family model for a few
+hundred steps on the doubly distributed mesh, with checkpointing and the
+fault-tolerant trainer.  (Reduced further with --small for CI.)
+
+    PYTHONPATH=src python examples/lm_train.py [--small]
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--small", action="store_true")
+    ap.add_argument("--steps", type=int, default=None)
+    args = ap.parse_args()
+
+    from repro.launch import train as train_mod
+
+    if args.small:
+        argv = ["--arch", "qwen3-1.7b", "--reduced",
+                "--steps", str(args.steps or 60),
+                "--batch", "4", "--seq", "64", "--lr", "5e-3",
+                "--ckpt-dir", "/tmp/repro_lm_small"]
+    else:
+        # ~100M params: qwen3 family scaled (12L x 768 x 12H, vocab 32k)
+        import dataclasses
+        import repro.configs.qwen3_1_7b as q
+        from repro.models.config import MoEConfig  # noqa: F401
+        cfg100m = dataclasses.replace(
+            q.CONFIG, name="qwen3-100m", n_layers=12, d_model=768,
+            n_heads=12, n_kv=4, d_ff=2048, vocab=32768, head_dim=64)
+        # register it under a temp name by monkeypatching get_config
+        import repro.configs as configs
+        configs._ALIASES["qwen3-100m"] = "qwen3_100m"
+        import types
+        mod = types.ModuleType("repro.configs.qwen3_100m")
+        mod.CONFIG = cfg100m
+        sys.modules["repro.configs.qwen3_100m"] = mod
+        argv = ["--arch", "qwen3-100m",
+                "--steps", str(args.steps or 300),
+                "--batch", "8", "--seq", "256", "--lr", "3e-4",
+                "--ckpt-dir", "/tmp/repro_lm_100m", "--ckpt-every", "100"]
+
+    hist = train_mod.main(argv)
+    import numpy as np
+    losses = [h["loss"] for h in hist]
+    print(f"\nfirst 5 losses: {[round(l, 3) for l in losses[:5]]}")
+    print(f"last 5 losses:  {[round(l, 3) for l in losses[-5:]]}")
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]), "did not learn!"
+    print("OK: loss decreased")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Quickstart: the paper's doubly distributed setting in ~40 lines.
+
+Trains a hinge-loss SVM whose data matrix is partitioned BOTH across
+observations (P=4) and features (Q=2) -- no node ever sees a full row or a
+full column of the data -- using all three optimizers, and prints their
+convergence against a serial reference.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.core import (ADMMConfig, D3CAConfig, RADiSAConfig, admm_simulated,
+                        d3ca_simulated, objective, partition,
+                        radisa_simulated, rel_opt, serial_sdca)
+from repro.data import make_svm_data
+
+
+def main():
+    # 1. the paper's synthetic binary classification data (§IV)
+    X, y = make_svm_data(n=1200, m=360, seed=0)
+    lam = 1e-1
+
+    # 2. reference optimum from long serial SDCA
+    w_star, _ = serial_sdca("hinge", X, y, lam=lam, epochs=300)
+    f_star = float(objective("hinge", X, y, w_star, lam))
+    print(f"f* = {f_star:.5f}")
+
+    # 3. doubly distributed partition: P=4 observation x Q=2 feature blocks
+    data = partition(X, y, P=4, Q=2)
+
+    # 4. the two proposed methods + the ADMM baseline
+    report = lambda name: (lambda t, w, *_: print(
+        f"  {name} iter {t:3d}: rel-opt "
+        f"{float(rel_opt(objective('hinge', X, y, w, lam), f_star)):.4f}")
+        if t % 5 == 0 else None)
+
+    print("D3CA (dual coordinate ascent):")
+    d3ca_simulated("hinge", data, D3CAConfig(lam=lam, outer_iters=15),
+                   callback=report("d3ca"))
+    print("RADiSA (SGD x CD + SVRG):")
+    radisa_simulated("hinge", data,
+                     RADiSAConfig(lam=lam, gamma=0.05, outer_iters=15),
+                     callback=report("radisa"))
+    print("block-splitting ADMM (baseline):")
+    admm_simulated("hinge", data, ADMMConfig(lam=lam, rho=lam,
+                                             outer_iters=60),
+                   callback=report("admm"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Batched serving example: prefill a batch of prompts, decode with a KV
+cache (ring buffer for SWA archs), report per-token latency.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch mixtral-8x7b]
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+import argparse
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--gen", type=int, default=12)
+    args = ap.parse_args()
+    serve_mod.main(["--arch", args.arch, "--reduced", "--batch", "4",
+                    "--prompt-len", "24", "--gen", str(args.gen)])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Architecture registry: one module per assigned arch (+ the paper's own
+SVM workloads).  ``get_config(name)`` -> ModelConfig; ``ARCHS`` lists all.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "granite_20b",
+    "qwen3_1_7b",
+    "stablelm_12b",
+    "mistral_nemo_12b",
+    "rwkv6_3b",
+    "llama32_vision_90b",
+    "mixtral_8x7b",
+    "moonshot_v1_16b_a3b",
+    "musicgen_large",
+    "recurrentgemma_9b",
+]
+
+_ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+_ALIASES.update({
+    "granite-20b": "granite_20b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "stablelm-12b": "stablelm_12b",
+    "mistral-nemo-12b": "mistral_nemo_12b",
+    "rwkv6-3b": "rwkv6_3b",
+    "llama-3.2-vision-90b": "llama32_vision_90b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "musicgen-large": "musicgen_large",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+})
+
+
+def get_config(name: str):
+    mod_name = _ALIASES.get(name, name)
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def all_configs():
+    return {a: get_config(a) for a in ARCHS}

@@ -1,0 +1,45 @@
+"""The paper's own experiment configurations (§IV).
+
+Part 1: dense synthetic SVM instances with 2,000 x 3,000 blocks at
+(P,Q) in {(4,2), (5,3), (7,4)}.  Part 2: strong scaling on realsim/news20
+-shaped data; weak scaling with 40,000 x 5,000 blocks.
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SVMExperiment:
+    name: str
+    P: int
+    Q: int
+    block_n: int
+    block_m: int
+    lam: float
+    loss: str = "hinge"
+    sparsity: float = 1.0     # fraction of nonzeros (1.0 = dense)
+
+    @property
+    def n(self):
+        return self.P * self.block_n
+
+    @property
+    def m(self):
+        return self.Q * self.block_m
+
+
+# Paper Table I (scaled down ~1/10 per side for CPU benchmarking; the
+# benchmark harness also accepts --full for the paper-sized instances).
+PART1 = [
+    SVMExperiment("4x2", 4, 2, 2000, 3000, 1e-2),
+    SVMExperiment("5x3", 5, 3, 2000, 3000, 1e-2),
+    SVMExperiment("7x4", 7, 4, 2000, 3000, 1e-2),
+]
+
+# strong scaling partition ladders (paper Fig. 5)
+STRONG_CONFIGS = [(1, 1), (2, 1), (1, 2), (4, 1), (2, 2), (1, 4),
+                  (8, 1), (4, 2), (2, 4), (1, 8)]
+
+# weak scaling (paper Fig. 6): block 40k x 5k, P in 1..7, Q in {2,3,4}
+WEAK_P = list(range(1, 8))
+WEAK_Q = [2, 3, 4]
+WEAK_SPARSITY = [0.01, 0.05]

@@ -1,0 +1,20 @@
+"""Core: the paper's doubly distributed optimization algorithms."""
+from .admm import (ADMMConfig, admm_distributed,
+                   admm_setup_simulated, admm_simulated)
+from .d3ca import D3CAConfig, d3ca_distributed, d3ca_simulated, make_d3ca_step
+from .losses import LOSSES, get_loss
+from .partition import DoublyPartitioned, partition
+from .radisa import (RADiSAConfig, make_radisa_step, radisa_distributed,
+                     radisa_simulated)
+from .reference import duality_gap, objective, rel_opt, serial_sdca
+
+__all__ = [
+    "ADMMConfig", "admm_distributed", "admm_setup_simulated",
+    "admm_simulated",
+    "D3CAConfig", "d3ca_distributed", "d3ca_simulated", "make_d3ca_step",
+    "LOSSES", "get_loss",
+    "DoublyPartitioned", "partition",
+    "RADiSAConfig", "make_radisa_step", "radisa_distributed",
+    "radisa_simulated",
+    "duality_gap", "objective", "rel_opt", "serial_sdca",
+]

@@ -1,0 +1,192 @@
+"""Block-splitting ADMM baseline (Parikh & Boyd 2014) for doubly
+distributed data.
+
+The paper compares D3CA/RADiSA against the block-splitting ADMM -- the only
+prior doubly distributed optimizer.  We implement the graph-form
+consensus/exchange splitting specialized to
+
+    min_w  (1/n) sum_i f_i(x_i . w) + lam ||w||^2
+
+with the data split into the same P x Q block grid.  Introducing partial
+predictions s_pq = A_pq w_q, the augmented Lagrangian alternates:
+
+  1. *exchange* (rows; one reduction over the "model" axis):
+       v_p   = sum_q (A_pq w_q - u_pq)
+       z_p   = prox_{(Q/(rho)) f_p}(v_p)          (elementwise prox of the loss)
+       s_pq  = c_pq + (z_p - v_p) / Q
+  2. *ridge solve* (columns; one reduction over the "data" axis):
+       (2 lam/rho I + sum_p A_pq^T A_pq) w_q = sum_p A_pq^T (s_pq + u_pq)
+     The normal matrix is factorized (Cholesky) ONCE at setup and cached,
+     exactly as the paper caches the factorization (and, like the paper, the
+     factorization time is excluded from benchmark timings).
+  3. dual ascent: u_pq += s_pq - A_pq w_q.
+
+All three loss proxes are provided (hinge / squared / logistic-Newton).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.linalg import cho_factor, cho_solve
+from jax.sharding import PartitionSpec as P
+
+from .losses import Loss, get_loss
+from .partition import DoublyPartitioned
+from .util import pvary
+
+
+@dataclasses.dataclass(frozen=True)
+class ADMMConfig:
+    lam: float = 1e-2
+    rho: float = 1e-2      # paper sets rho = lam
+    outer_iters: int = 50
+
+
+# ---------------------------------------------------------------------------
+# elementwise proxes of c * f(., y)
+# ---------------------------------------------------------------------------
+
+def prox_loss(loss_name: str, v, y, c):
+    """prox_{c f(., y)}(v) = argmin_z c f(z, y) + 0.5 (z - v)^2."""
+    if loss_name == "hinge":
+        yv = y * v
+        z = jnp.where(yv >= 1.0, v,
+                      jnp.where(yv <= 1.0 - c, v + c * y, y))
+        return z
+    if loss_name == "squared":
+        return (v + 2.0 * c * y) / (1.0 + 2.0 * c)
+    if loss_name == "logistic":
+        def body(z, _):
+            g = z - v - c * y * jax.nn.sigmoid(-y * z)
+            gp = 1.0 + c * (y * y) * jax.nn.sigmoid(-y * z) * jax.nn.sigmoid(y * z)
+            return z - g / gp, None
+        z, _ = jax.lax.scan(body, v, None, length=12)
+        return z
+    raise ValueError(loss_name)
+
+
+# ---------------------------------------------------------------------------
+# simulated grid engine
+# ---------------------------------------------------------------------------
+
+def admm_setup_simulated(data: DoublyPartitioned, cfg: ADMMConfig):
+    """Cache the per-column-block Cholesky factors (excluded from timing)."""
+    # M_q = (2 lam / rho) I + sum_p A_pq^T A_pq   (m_q x m_q)
+    gram = jnp.einsum("pqnm,pqnk->qmk", data.x_blocks, data.x_blocks)
+    eye = jnp.eye(data.m_q)
+    M = gram + (cfg.lam / cfg.rho) * eye[None]
+    return jax.vmap(lambda Mq: cho_factor(Mq)[0])(M)     # (Q, m_q, m_q)
+
+
+def admm_simulated(loss_name: str, data: DoublyPartitioned, cfg: ADMMConfig,
+                   callback=None, chol=None):
+    Pn, Qn = data.P, data.Q
+    n = data.n
+    if chol is None:
+        chol = admm_setup_simulated(data, cfg)
+    c_prox = Qn / (cfg.rho * n)   # f_p carries the global 1/n factor
+
+    s = jnp.zeros((Pn, Qn, data.n_p))
+    u = jnp.zeros((Pn, Qn, data.n_p))
+    w = jnp.zeros((Qn, data.m_q))
+
+    @jax.jit
+    def step(s, u, w):
+        Aw = jnp.einsum("pqnm,qm->pqn", data.x_blocks, w)
+        cmat = Aw - u                                    # c_pq
+        v = cmat.sum(axis=1)                             # (P, n_p)
+        z = prox_loss(loss_name, v, data.y_blocks, c_prox)
+        z = jnp.where(data.mask[:, :] > 0, z, v)         # padded rows: identity
+        s = cmat + ((z - v) / Qn)[:, None, :]
+        b = s + u
+        rhs = jnp.einsum("pqn,pqnm->qm", b, data.x_blocks)
+        w = jax.vmap(lambda Lq, r: cho_solve((Lq, False), r))(chol, rhs)
+        u = u + s - jnp.einsum("pqnm,qm->pqn", data.x_blocks, w)
+        return s, u, w
+
+    for t in range(1, cfg.outer_iters + 1):
+        s, u, w = step(s, u, w)
+        if callback is not None:
+            callback(t, data.w_from_blocks(w))
+    return data.w_from_blocks(w)
+
+
+# ---------------------------------------------------------------------------
+# shard_map engine
+# ---------------------------------------------------------------------------
+
+def make_admm_step(loss_name: str, mesh, cfg: ADMMConfig, *, n: int,
+                   data_axis: str = "data", model_axis: str = "model"):
+    """Distributed block-splitting ADMM step.
+
+    Layouts: x (n, m) -> (data, model); y/mask (n,) -> (data,);
+    s,u (n, Q) -> (data, model) [one column per feature block];
+    w (m,) -> (model,); chol (Q, m_q, m_q) -> (model,) on axis 0.
+    """
+    Qn = mesh.shape[model_axis]
+    c_prox = Qn / (cfg.rho * n)
+
+    def step(x, y, mask, s, u, w, chol):
+        def cell(x_b, y_b, mask_b, s_b, u_b, w_b, chol_b):
+            y_b = pvary(y_b, (model_axis,))
+            mask_b = pvary(mask_b, (model_axis,))
+            w_b = pvary(w_b, (data_axis,))
+            chol_b = pvary(chol_b, (data_axis,))
+            s_b, u_b = s_b[:, 0], u_b[:, 0]
+            Aw = x_b @ w_b
+            cvec = Aw - u_b
+            v = jax.lax.psum(cvec, model_axis)
+            z = prox_loss(loss_name, v, y_b, c_prox)
+            z = jnp.where(mask_b > 0, z, v)
+            s_new = cvec + (z - v) / Qn
+            b = s_new + u_b
+            rhs = jax.lax.psum(b @ x_b, data_axis)
+            w_new = cho_solve((chol_b[0], False), rhs)
+            u_new = u_b + s_new - x_b @ w_new
+            return s_new[:, None], u_new[:, None], w_new
+
+        return jax.shard_map(
+            cell, mesh=mesh, check_vma=False,
+            in_specs=(P(data_axis, model_axis), P(data_axis), P(data_axis),
+                      P(data_axis, model_axis), P(data_axis, model_axis),
+                      P(model_axis), P(model_axis)),
+            out_specs=(P(data_axis, model_axis), P(data_axis, model_axis),
+                       P(model_axis)),
+        )(x, y, mask, s, u, w, chol)
+
+    return jax.jit(step)
+
+
+def admm_setup_distributed(mesh, x, cfg: ADMMConfig, *,
+                           data_axis: str = "data", model_axis: str = "model"):
+    """Cached Cholesky factors, computed once with a psum over rows."""
+    m_q = x.shape[1] // mesh.shape[model_axis]
+
+    def cell(x_b):
+        gram = jax.lax.psum(x_b.T @ x_b, data_axis)
+        M = gram + (cfg.lam / cfg.rho) * jnp.eye(m_q, dtype=x_b.dtype)
+        return cho_factor(M)[0][None]
+
+    return jax.jit(jax.shard_map(
+        cell, mesh=mesh, check_vma=False,
+        in_specs=P(data_axis, model_axis),
+        out_specs=P(model_axis),
+    ))(x)
+
+
+def admm_distributed(loss_name: str, mesh, x, y, mask, cfg: ADMMConfig,
+                     callback=None):
+    n, m = x.shape
+    Qn = mesh.shape["model"]
+    chol = admm_setup_distributed(mesh, x, cfg)
+    step = make_admm_step(loss_name, mesh, cfg, n=n)
+    s = jnp.zeros((n, Qn))
+    u = jnp.zeros((n, Qn))
+    w = jnp.zeros((m,))
+    for t in range(1, cfg.outer_iters + 1):
+        s, u, w = step(x, y, mask, s, u, w, chol)
+        if callback is not None:
+            callback(t, w)
+    return w

@@ -1,0 +1,155 @@
+"""D3CA -- Doubly Distributed Dual Coordinate Ascent (Algorithm 1).
+
+Two execution engines share the cell-local solver ``local.local_sdca``:
+
+  * ``d3ca_simulated``   -- the P x Q grid is materialized as leading array
+    axes and cells run under ``vmap``; used on one device for correctness
+    tests, small problems, and the paper-figure benchmarks.
+  * ``make_d3ca_step``   -- a ``shard_map`` step over a (data=P, model=Q)
+    mesh: each device owns one (n_p, m_q) block; the dual average of step 6
+    is a ``pmean`` over the "model" axis and the primal-dual map of step 9
+    is a ``psum`` over the "data" axis.  This is the production path and is
+    what the multi-pod dry-run lowers.
+
+The two are tested to agree to float tolerance (tests/test_distributed.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .local import local_sdca
+from .losses import Loss, get_loss
+from .partition import DoublyPartitioned
+from .util import pvary
+
+
+@dataclasses.dataclass(frozen=True)
+class D3CAConfig:
+    lam: float = 1e-2
+    local_steps: Optional[int] = None   # H; default = one local epoch (n_p)
+    step_mode: str = "exact"            # "exact" | "beta" (paper's lam/t)
+    outer_iters: int = 20
+    seed: int = 0
+
+
+# ----------------------------------------------------------------------------
+# simulated grid engine
+# ----------------------------------------------------------------------------
+
+def d3ca_simulated(loss_name: str, data: DoublyPartitioned, cfg: D3CAConfig,
+                   callback=None):
+    """Run D3CA on the block grid with vmap-over-cells. Returns (w, alpha)."""
+    loss = get_loss(loss_name)
+    Pn, Qn = data.P, data.Q
+    n, lam = data.n, cfg.lam
+    steps = cfg.local_steps or data.n_p
+    key0 = jax.random.PRNGKey(cfg.seed)
+
+    alpha = jnp.zeros((Pn, data.n_p))            # alpha_[p, .]
+    w_blocks = jnp.zeros((Qn, data.m_q))         # w_[., q]
+
+    local = partial(local_sdca, loss, lam=lam, n=n, Q=Qn, steps=steps)
+
+    @jax.jit
+    def outer(t, alpha, w_blocks):
+        beta = lam / t
+        key_t = jax.random.fold_in(key0, t)
+
+        def cell(p, q):
+            key_p = jax.random.fold_in(key_t, p)  # coordinate order per p
+            return local(data.x_blocks[p, q], data.y_blocks[p], data.mask[p],
+                         alpha[p], w_blocks[q], key=key_p,
+                         step_mode=cfg.step_mode, beta=beta)
+
+        dalpha = jax.vmap(lambda p: jax.vmap(lambda q: cell(p, q))(
+            jnp.arange(Qn)))(jnp.arange(Pn))     # (P, Q, n_p)
+
+        # step 6: alpha_[p,.] += (1/(P*Q)) sum_q dalpha[p, q]
+        alpha = alpha + dalpha.sum(axis=1) / (Pn * Qn)
+        # step 9: w_[., q] = (1/(lam n)) sum_p alpha_[p,q]^T x_[p,q]
+        w_blocks = jnp.einsum("pn,pqnm->qm", alpha * data.mask,
+                              data.x_blocks) / (lam * n)
+        return alpha, w_blocks
+
+    for t in range(1, cfg.outer_iters + 1):
+        alpha, w_blocks = outer(t, alpha, w_blocks)
+        if callback is not None:
+            callback(t, data.w_from_blocks(w_blocks),
+                     data.alpha_from_blocks(alpha * data.mask))
+    return data.w_from_blocks(w_blocks), data.alpha_from_blocks(alpha * data.mask)
+
+
+# ----------------------------------------------------------------------------
+# shard_map engine (production): one cell per device on a (data, model) mesh
+# ----------------------------------------------------------------------------
+
+def make_d3ca_step(loss: Loss, mesh, cfg: D3CAConfig, *, n: int, n_p: int,
+                   data_axis: str = "data", model_axis: str = "model"):
+    """Build the jitted distributed D3CA outer step.
+
+    Array layouts (global shapes; sharding in parens):
+      x:      (n, m)    (data, model)   -- block x_[p,q] per device
+      y,mask: (n,)      (data,)
+      alpha:  (n,)      (data,)         -- replicated over model
+      w:      (m,)      (model,)        -- replicated over data
+    """
+    from .util import as_axes, axes_index, axes_size
+    lam = cfg.lam
+    daxes = as_axes(data_axis)
+    Qn = axes_size(mesh, model_axis)
+    Pn = axes_size(mesh, data_axis)
+    steps = cfg.local_steps or n_p
+
+    def step(t, key0, x, y, mask, alpha, w):
+        beta = lam / t
+        key_t = jax.random.fold_in(key0, t)
+
+        def cell(x_b, y_b, mask_b, a_b, w_b):
+            # promote partially-replicated operands to fully varying
+            y_b = pvary(y_b, (model_axis,))
+            mask_b = pvary(mask_b, (model_axis,))
+            a_b = pvary(a_b, (model_axis,))
+            w_b = pvary(w_b, daxes)
+            p = axes_index(data_axis)
+            key_p = jax.random.fold_in(key_t, p)
+            dalpha = local_sdca(loss, x_b, y_b, mask_b, a_b, w_b,
+                                lam=lam, n=n, Q=Qn, steps=steps, key=key_p,
+                                step_mode=cfg.step_mode, beta=beta)
+            # step 6: average the dual deltas of the Q feature blocks
+            a_new = a_b + jax.lax.pmean(dalpha, model_axis) / Pn
+            # step 9: primal-dual map, reduced over observation partitions
+            w_new = jax.lax.psum((a_new * mask_b) @ x_b, data_axis) / (lam * n)
+            return a_new, w_new
+
+        return jax.shard_map(
+            cell, mesh=mesh, check_vma=False,
+            in_specs=(P(data_axis, model_axis), P(data_axis), P(data_axis),
+                      P(data_axis), P(model_axis)),
+            out_specs=(P(data_axis), P(model_axis)),
+        )(x, y, mask, alpha, w)
+
+    return jax.jit(step, static_argnums=())
+
+
+def d3ca_distributed(loss_name: str, mesh, x, y, mask, cfg: D3CAConfig,
+                     callback=None):
+    """Convenience driver for the shard_map engine (single-controller)."""
+    loss = get_loss(loss_name)
+    n, m = x.shape
+    Pn = mesh.shape["data"]
+    n_p = n // Pn
+    step = make_d3ca_step(loss, mesh, cfg, n=n, n_p=n_p)
+    key0 = jax.random.PRNGKey(cfg.seed)
+    alpha = jnp.zeros((n,))
+    w = jnp.zeros((m,))
+    for t in range(1, cfg.outer_iters + 1):
+        alpha, w = step(t, key0, x, y, mask, alpha, w)
+        if callback is not None:
+            callback(t, w, alpha)
+    return w, alpha

@@ -1,0 +1,120 @@
+"""Cell-local solvers shared by the simulated grid and shard_map executions.
+
+Each function sees exactly the data one worker of the P x Q grid owns:
+``x`` of shape (n_p, m_q), labels/mask (n_p,), and the relevant slices of
+the primal/dual vectors.  They are pure and jit/vmap/shard_map friendly.
+
+These are the pure-jnp *reference* implementations; drop-in Pallas TPU
+kernels for the two hot loops live in ``repro.kernels.sdca`` and
+``repro.kernels.svrg`` (selected via ``backend="pallas"``).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .losses import Loss
+
+
+# ----------------------------------------------------------------------------
+# Local SDCA (Algorithm 2): one epoch of randomized dual coordinate ascent on
+# the local block, with the conjugate term scaled by 1/Q.
+# ----------------------------------------------------------------------------
+
+def local_sdca(loss: Loss, x, y, mask, alpha0, w0, *, lam, n, Q,
+               steps, key, step_mode: str = "exact", beta=None):
+    """Run ``steps`` SDCA coordinate updates on the local block.
+
+    Args:
+      x: (n_p, m_q) local data block.
+      y, mask: (n_p,) labels and row-validity mask.
+      alpha0: (n_p,) local view of the shared dual block alpha_[p, .].
+      w0: (m_q,) local view of the shared primal block w_[., q].
+      lam, n: global regularization and *global* observation count.
+      Q: number of feature partitions (scales the conjugate by 1/Q).
+      steps: number of coordinate updates (H in Algorithm 2).
+      key: PRNG key for the coordinate order (shared across q so every
+        feature block visits the same observation sequence, matching the
+        paper's per-partition sampling).
+      step_mode: "exact" uses ||x_i||^2; "beta" uses the paper's step-size
+        parameter ``beta`` (they use beta = lam / t).
+
+    Returns:
+      delta_alpha: (n_p,) accumulated dual change of this cell.
+    """
+    n_p = x.shape[0]
+    idx = jax.random.randint(key, (steps,), 0, n_p)
+    x_sq = jnp.sum(x * x, axis=1)  # (n_p,)
+    use_beta = step_mode == "beta"
+
+    def body(carry, i):
+        w, dalpha = carry
+        xi = x[i]
+        zloc = xi @ w                     # local contribution to x_i . w
+        a_i = alpha0[i] + dalpha[i]
+        d = loss.sdca_delta(a_i, x_sq[i], zloc, y[i], lam, n, Q,
+                            beta=(beta if use_beta else None))
+        d = d * mask[i]                   # padded rows never move
+        w = w + (d / (lam * n)) * xi
+        dalpha = dalpha.at[i].add(d)
+        return (w, dalpha), None
+
+    (w_fin, dalpha), _ = jax.lax.scan(body, (w0, jnp.zeros_like(alpha0)), idx)
+    del w_fin  # D3CA recomputes w from the primal-dual map (step 9)
+    return dalpha
+
+
+# ----------------------------------------------------------------------------
+# Local RADiSA inner loop (Algorithm 3 steps 6-10): L SVRG steps on the
+# assigned sub-block of coordinates.
+# ----------------------------------------------------------------------------
+
+def local_svrg(loss: Loss, x_sub, y, mask, z_anchor, w_anchor_sub, mu_sub,
+               *, lam, L, eta, key, lo=None):
+    """L SVRG steps on one feature sub-block.
+
+    The stochastic partial gradient uses the anchor inner products
+    ``z_anchor[j] = x_j^T w_tilde`` (computed once, doubly distributed) and
+    corrects locally:  x_j^T w  ~=  z_anchor[j] + x_j[sub]^T (w - w_tilde[sub]).
+
+    Args:
+      x_sub: (n_p, m_sub) columns of the assigned sub-block -- OR, when
+        ``lo`` is given, the full (n_p, m_q) block from which each sampled
+        ROW's ``[lo:lo+m_sub]`` columns are sliced inside the loop.
+        Slicing the block before the loop reads pathologically: XLA fuses
+        the loop-invariant column slice into the per-step row gather, so
+        every inner step re-reads the whole sub-block (104.9 MB/step
+        measured; EXPERIMENTS.md §Perf cell 3).  Row-first gather then a
+        column slice of ONE row keeps the step at ~KB.
+      z_anchor: (n_p,) full inner products at the anchor point w_tilde.
+      w_anchor_sub: (m_sub,) anchor coordinates of the sub-block.
+      mu_sub: (m_sub,) coordinates of the full anchor gradient of F
+        (includes the 2*lam*w_tilde term).
+      eta: learning rate eta_t.
+
+    Returns:
+      w_sub: (m_sub,) updated sub-block.
+    """
+    n_p = x_sub.shape[0]
+    m_sub = w_anchor_sub.shape[0]
+    idx = jax.random.randint(key, (L,), 0, n_p)
+
+    def body(w, j):
+        if lo is None:
+            xj = x_sub[j]
+        else:
+            xj = jax.lax.dynamic_slice(x_sub[j], (lo,), (m_sub,))
+        corr = xj @ (w - w_anchor_sub)
+        z = z_anchor[j] + corr
+        g_new = loss.grad(z, y[j])
+        g_old = loss.grad(z_anchor[j], y[j])
+        # SVRG direction on the sub-block; the regularizer is corrected from
+        # the anchor to the current point exactly (it is quadratic).
+        g = (g_new - g_old) * xj * mask[j] + mu_sub \
+            + lam * (w - w_anchor_sub)
+        return w - eta * g, None
+
+    w_fin, _ = jax.lax.scan(body, w_anchor_sub, idx)
+    return w_fin

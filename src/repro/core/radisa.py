@@ -1,0 +1,220 @@
+"""RADiSA -- RAndom Distributed Stochastic Algorithm (Algorithm 3).
+
+Primal SGD x CD hybrid with SVRG variance reduction in the doubly
+distributed setting.  Engines mirror ``d3ca.py``:
+
+  * ``radisa_simulated``  -- vmap-over-cells on one device.
+  * ``make_radisa_step``  -- shard_map over a (data=P, model=Q) mesh.
+
+Communication pattern (per outer iteration):
+  1. anchor pass: z = X w_tilde        -> psum over "model" (row inner
+     products need every feature block)
+  2. full gradient mu_tilde            -> psum over "data" (column blocks
+     need every observation partition)
+  3. L local SVRG steps on the assigned sub-block -- NO communication
+  4. concatenate sub-blocks            -> psum of disjoint deltas over "data"
+
+``variant="avg"`` implements RADiSA-avg: sub-blocks fully overlap (every
+cell updates the whole local feature block) and solutions are averaged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .local import local_svrg
+from .losses import Loss, get_loss
+from .partition import DoublyPartitioned, subblock_slices
+from .util import pvary
+
+
+@dataclasses.dataclass(frozen=True)
+class RADiSAConfig:
+    lam: float = 1e-3
+    L: Optional[int] = None          # batch size (inner steps); default n_p
+    gamma: float = 1.0               # step size constant
+    outer_iters: int = 20
+    variant: str = "block"           # "block" | "avg"
+    seed: int = 0
+
+    def eta(self, t):
+        # paper: eta_t = gamma / (1 + sqrt(t - 1))
+        return self.gamma / (1.0 + jnp.sqrt(jnp.maximum(t - 1.0, 0.0)))
+
+
+def _anchor_quantities(loss: Loss, data: DoublyPartitioned, w_blocks, lam):
+    """z = X w_tilde (P, n_p) and mu = grad F(w_tilde) (Q, m_q), simulated."""
+    z = jnp.einsum("pqnm,qm->pn", data.x_blocks, w_blocks)
+    gz = loss.grad(z, data.y_blocks) * data.mask          # (P, n_p)
+    mu = jnp.einsum("pn,pqnm->qm", gz, data.x_blocks) / data.n \
+        + lam * w_blocks
+    return z, mu
+
+
+# ----------------------------------------------------------------------------
+# simulated grid engine
+# ----------------------------------------------------------------------------
+
+def radisa_simulated(loss_name: str, data: DoublyPartitioned,
+                     cfg: RADiSAConfig, callback=None):
+    loss = get_loss(loss_name)
+    Pn, Qn = data.P, data.Q
+    if data.m_q % Pn:
+        # RADiSA pre-splits each feature block into P sub-blocks; repartition
+        # with extra (inert, all-zero) column padding so that P | m_q.
+        from .partition import partition as _partition
+        X, y = data.dense()
+        import jax.numpy as _jnp
+        m_pad = ((data.m + Pn * Qn - 1) // (Pn * Qn)) * (Pn * Qn)
+        Xp = _jnp.zeros((data.n, m_pad), X.dtype).at[:, : data.m].set(X)
+        padded = _partition(Xp, y, Pn, Qn)
+        true_m = data.m
+
+        def unpad_cb(t, w):
+            if callback is not None:
+                callback(t, w[:true_m])
+
+        w = radisa_simulated(loss_name, padded, cfg,
+                             callback=unpad_cb if callback else None)
+        return w[:true_m]
+    lam = cfg.lam
+    L = cfg.L or data.n_p
+    m_sub = subblock_slices(data.m_q, Pn)
+    key0 = jax.random.PRNGKey(cfg.seed)
+
+    w_blocks = jnp.zeros((Qn, data.m_q))
+
+    @partial(jax.jit, static_argnums=())
+    def outer(t, w_blocks):
+        eta = cfg.eta(t)
+        key_t = jax.random.fold_in(key0, t)
+        z, mu = _anchor_quantities(loss, data, w_blocks, lam)
+        # step 5: non-overlapping random sub-block exchange, shared perm
+        perm = jax.random.permutation(jax.random.fold_in(key_t, 0), Pn)
+        key_cells = jax.random.fold_in(key_t, 1)
+
+        def cell(p, q):
+            key_pq = jax.random.fold_in(key_cells, p * Qn + q)
+            s = perm[p]                                   # assigned sub-block
+            lo = s * m_sub
+            w_anchor = jax.lax.dynamic_slice(w_blocks[q], (lo,), (m_sub,))
+            mu_sub = jax.lax.dynamic_slice(mu[q], (lo,), (m_sub,))
+            lo_arg = lo
+            if cfg.variant == "avg":
+                lo_arg, w_anchor, mu_sub = None, w_blocks[q], mu[q]
+            w_new = local_svrg(loss, data.x_blocks[p, q], data.y_blocks[p],
+                               data.mask[p], z[p], w_anchor, mu_sub,
+                               lam=lam, L=L, eta=eta, key=key_pq, lo=lo_arg)
+            return w_new
+
+        w_cells = jax.vmap(lambda p: jax.vmap(lambda q: cell(p, q))(
+            jnp.arange(Qn)))(jnp.arange(Pn))              # (P, Q, m_sub|m_q)
+
+        if cfg.variant == "avg":
+            # RADiSA-avg: average the P overlapping solutions per block
+            return w_cells.mean(axis=0)                   # (Q, m_q)
+
+        # step 12: concatenate -- scatter each cell's sub-block back
+        def place(q):
+            blk = jnp.zeros((data.m_q,))
+            def body(blk, p):
+                lo = perm[p] * m_sub
+                return jax.lax.dynamic_update_slice(blk, w_cells[p, q], (lo,)), None
+            blk, _ = jax.lax.scan(body, blk, jnp.arange(Pn))
+            return blk
+        return jax.vmap(place)(jnp.arange(Qn))
+
+    for t in range(1, cfg.outer_iters + 1):
+        w_blocks = outer(t, w_blocks)
+        if callback is not None:
+            callback(t, data.w_from_blocks(w_blocks))
+    return data.w_from_blocks(w_blocks)
+
+
+# ----------------------------------------------------------------------------
+# shard_map engine (production)
+# ----------------------------------------------------------------------------
+
+def make_radisa_step(loss: Loss, mesh, cfg: RADiSAConfig, *, n: int, n_p: int,
+                     m_q: int, data_axis: str = "data",
+                     model_axis: str = "model"):
+    """Distributed RADiSA outer step.
+
+    Layouts: x (n, m) sharded (data, model); y/mask (n,) (data,);
+    w (m,) (model,) replicated over data.
+    """
+    from .util import as_axes, axes_index, axes_size
+    lam = cfg.lam
+    daxes = as_axes(data_axis)
+    Pn, Qn = axes_size(mesh, data_axis), axes_size(mesh, model_axis)
+    L = cfg.L or n_p
+    m_sub = m_q // Pn
+    avg = cfg.variant == "avg"
+
+    def step(t, key0, x, y, mask, w):
+        eta = cfg.eta(t)
+        key_t = jax.random.fold_in(key0, t)
+
+        def cell(x_b, y_b, mask_b, w_b):
+            y_b = pvary(y_b, (model_axis,))
+            mask_b = pvary(mask_b, (model_axis,))
+            w_b = pvary(w_b, daxes)
+            p = axes_index(data_axis)
+            q = axes_index(model_axis)
+            # (1) anchor inner products, reduced across feature blocks
+            z = jax.lax.psum(x_b @ w_b, model_axis)            # (n_p,)
+            # (2) full gradient of F at the anchor, reduced across rows
+            gz = loss.grad(z, y_b) * mask_b
+            mu = jax.lax.psum(gz @ x_b, data_axis) / n + lam * w_b
+            # (3) sub-block assignment (shared permutation) + local SVRG
+            perm = jax.random.permutation(jax.random.fold_in(key_t, 0), Pn)
+            key_pq = jax.random.fold_in(jax.random.fold_in(key_t, 1),
+                                        p * Qn + q)
+            s = perm[p]
+            lo = s * m_sub
+            if avg:
+                lo_arg, w_anchor, mu_sub = None, w_b, mu
+            else:
+                # NOTE: the sub-block columns are sliced per sampled ROW
+                # inside local_svrg (lo=...), never as a (n_p, m_sub)
+                # block -- see local_svrg's docstring for why.
+                lo_arg = lo
+                w_anchor = jax.lax.dynamic_slice(w_b, (lo,), (m_sub,))
+                mu_sub = jax.lax.dynamic_slice(mu, (lo,), (m_sub,))
+            w_new = local_svrg(loss, x_b, y_b, mask_b, z, w_anchor, mu_sub,
+                               lam=lam, L=L, eta=eta, key=key_pq, lo=lo_arg)
+            # (4) recombine
+            if avg:
+                return jax.lax.pmean(w_new, data_axis)
+            delta = jnp.zeros_like(w_b)
+            delta = jax.lax.dynamic_update_slice(delta, w_new - w_anchor, (lo,))
+            return w_b + jax.lax.psum(delta, data_axis)
+
+        return jax.shard_map(
+            cell, mesh=mesh, check_vma=False,
+            in_specs=(P(data_axis, model_axis), P(data_axis), P(data_axis),
+                      P(model_axis)),
+            out_specs=P(model_axis),
+        )(x, y, mask, w)
+
+    return jax.jit(step)
+
+
+def radisa_distributed(loss_name: str, mesh, x, y, mask, cfg: RADiSAConfig,
+                       callback=None):
+    loss = get_loss(loss_name)
+    n, m = x.shape
+    Pn, Qn = mesh.shape["data"], mesh.shape["model"]
+    step = make_radisa_step(loss, mesh, cfg, n=n, n_p=n // Pn, m_q=m // Qn)
+    key0 = jax.random.PRNGKey(cfg.seed)
+    w = jnp.zeros((m,))
+    for t in range(1, cfg.outer_iters + 1):
+        w = step(t, key0, x, y, mask, w)
+        if callback is not None:
+            callback(t, w)
+    return w

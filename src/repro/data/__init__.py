@@ -1,0 +1,3 @@
+from .synthetic import make_svm_data, make_sparse_svm_data
+from .libsvm import load_libsvm, save_libsvm
+from .tokens import TokenPipeline, synthetic_token_batch

@@ -1,0 +1,42 @@
+"""Minimal LIBSVM-format text reader/writer (realsim / news20 style files).
+
+No third-party deps; tolerant of 0- or 1-based feature indices.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def load_libsvm(path: str, n_features: int | None = None):
+    """Parse a libsvm text file into dense (X, y) float32 arrays."""
+    rows, cols, vals, ys = [], [], [], []
+    with open(path, "r") as fh:
+        for r, line in enumerate(fh):
+            parts = line.split()
+            if not parts:
+                continue
+            ys.append(float(parts[0]))
+            for tok in parts[1:]:
+                c, v = tok.split(":")
+                rows.append(r)
+                cols.append(int(c))
+                vals.append(float(v))
+    n = len(ys)
+    if not cols:
+        raise ValueError(f"{path}: no features parsed")
+    base = min(cols)          # 1-based files -> shift to 0
+    m = (n_features or (max(cols) - base + 1))
+    X = np.zeros((n, m), dtype=np.float32)
+    for r, c, v in zip(rows, cols, vals):
+        X[r, c - base] = v
+    y = np.asarray(ys, dtype=np.float32)
+    y = np.where(y > 0, 1.0, -1.0).astype(np.float32)
+    return X, y
+
+
+def save_libsvm(path: str, X, y):
+    with open(path, "w") as fh:
+        for xi, yi in zip(np.asarray(X), np.asarray(y)):
+            nz = np.nonzero(xi)[0]
+            feats = " ".join(f"{j + 1}:{xi[j]:.6g}" for j in nz)
+            fh.write(f"{int(yi)} {feats}\n")

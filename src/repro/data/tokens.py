@@ -1,0 +1,78 @@
+"""Deterministic sharded LM token pipeline.
+
+Production shape: every host generates (or reads) only its shard of the
+global batch, determined by (step, process_index) -- no host ever
+materializes the global batch.  Here the source is a seeded PRNG stream
+standing in for a tokenized corpus; swapping in a real corpus reader only
+changes ``_shard_tokens``.
+
+A double-buffering prefetch thread hides host->device transfer behind the
+previous step's compute (the standard input-pipeline overlap trick).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+import jax
+import numpy as np
+
+
+def synthetic_token_batch(step: int, *, batch: int, seq: int, vocab: int,
+                          seed: int = 0, shard: tuple[int, int] = (0, 1)):
+    """Deterministic batch for global ``step``; returns this host's rows.
+
+    shard = (shard_index, shard_count).  Row r of the global batch is
+    generated independently of sharding, so re-sharding (elastic scaling)
+    replays identical data.
+    """
+    idx, count = shard
+    rows = batch // count
+    lo = idx * rows
+    out = np.empty((rows, seq + 1), dtype=np.int32)
+    for r in range(rows):
+        rng = np.random.default_rng(
+            np.random.SeedSequence([seed, step, lo + r]))
+        out[r] = rng.integers(0, vocab, size=(seq + 1,), dtype=np.int32)
+    return {"tokens": out[:, :-1], "labels": out[:, 1:]}
+
+
+class TokenPipeline:
+    """Background prefetcher with a bounded buffer (depth 2 by default)."""
+
+    def __init__(self, make_batch, start_step: int = 0, depth: int = 2,
+                 sharding=None):
+        self._make = make_batch
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._step = start_step
+        self._stop = threading.Event()
+        self._sharding = sharding
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = self._make(step)
+            if self._sharding is not None:
+                batch = jax.device_put(batch, self._sharding)
+            try:
+                self._q.put((step, batch), timeout=0.5)
+            except queue.Full:
+                continue
+            step += 1
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2.0)

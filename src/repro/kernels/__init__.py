@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+  sdca/    local dual coordinate ascent epoch (paper Algorithm 2)
+  svrg/    RADiSA inner loop (paper Algorithm 3 steps 7-10)
+  flash/   blockwise causal/windowed attention (LM stack)
+  linattn/ chunked RWKV6 data-dependent-decay linear attention
+
+Each package: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper), ref.py (pure-jnp oracle).  Validated in interpret mode on CPU;
+on TPU pass interpret=False.
+"""

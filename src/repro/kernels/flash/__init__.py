@@ -1,0 +1,3 @@
+from .flash import flash_attention_pallas
+from .ops import flash_attention
+from .ref import mha_ref

@@ -1,0 +1,32 @@
+"""Jitted GQA-aware wrapper for the flash attention kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .flash import flash_attention_pallas
+from .ref import mha_ref
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "backend",
+                                   "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal=True, window=None, backend="pallas",
+                    block_q=512, block_k=512):
+    """q: (B,S,H,D); k,v: (B,Skv,KV,D). Returns (B,S,H,D)."""
+    B, S, H, D = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    # expand kv to H heads, flatten (B, H)
+    k = jnp.repeat(k, G, axis=2) if G > 1 else k
+    v = jnp.repeat(v, G, axis=2) if G > 1 else v
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, Skv, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, Skv, D)
+    if backend == "ref":
+        of = mha_ref(qf, kf, vf, causal=causal, window=window)
+    else:
+        of = flash_attention_pallas(qf, kf, vf, causal=causal, window=window,
+                                    block_q=block_q, block_k=block_k)
+    return of.reshape(B, H, S, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,29 @@
+"""Oracle for the flash attention kernel: plain masked softmax attention.
+
+Layout (BH, S, D): batch*heads flattened, kv already expanded to H heads.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+NEG_INF = -1e30
+
+
+def mha_ref(q, k, v, *, causal=True, window=None, scale=None):
+    BH, S, D = q.shape
+    Skv = k.shape[1]
+    scale = scale if scale is not None else D ** -0.5
+    s = jnp.einsum("bsd,bxd->bsx", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((S, Skv), bool)
+    if causal:
+        mask &= qp >= kp
+    if window is not None:
+        mask &= qp - kp < window
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bsx,bxd->bsd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)

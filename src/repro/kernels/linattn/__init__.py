@@ -1,0 +1,3 @@
+from .linattn import rwkv_linattn_pallas
+from .ops import rwkv_linattn
+from .ref import rwkv_linattn_ref

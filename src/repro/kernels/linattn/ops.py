@@ -1,0 +1,16 @@
+"""Jitted wrapper for the chunked RWKV6 linear-attention kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .linattn import rwkv_linattn_pallas
+from .ref import rwkv_linattn_ref
+
+
+@partial(jax.jit, static_argnames=("chunk", "backend"))
+def rwkv_linattn(r, k, v, logw, u, *, chunk=64, backend="pallas"):
+    if backend == "ref":
+        return rwkv_linattn_ref(r, k, v, logw, u)
+    return rwkv_linattn_pallas(r, k, v, logw, u, chunk=chunk)

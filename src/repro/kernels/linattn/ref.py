@@ -1,0 +1,28 @@
+"""Oracle for the chunked RWKV6 linear-attention kernel: the exact
+sequential recurrence (same math as repro.models.rwkv.rwkv_scan, layout
+(BH, S, D))."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv_linattn_ref(r, k, v, logw, u, state0=None):
+    """r,k,v,logw: (BH, S, D); u: (D,). Returns (out (BH,S,D), state (BH,D,D))."""
+    BH, S, D = r.shape
+    rt = jnp.moveaxis(r, 1, 0).astype(jnp.float32)
+    kt = jnp.moveaxis(k, 1, 0).astype(jnp.float32)
+    vt = jnp.moveaxis(v, 1, 0).astype(jnp.float32)
+    wt = jnp.exp(jnp.moveaxis(logw, 1, 0).astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+    if state0 is None:
+        state0 = jnp.zeros((BH, D, D), jnp.float32)
+
+    def step(S_, inp):
+        r_, k_, v_, w_ = inp
+        kv = k_[:, :, None] * v_[:, None, :]
+        o = jnp.einsum("bd,bde->be", r_, S_ + uf[None, :, None] * kv)
+        return w_[:, :, None] * S_ + kv, o
+
+    state, out = jax.lax.scan(step, state0, (rt, kt, vt, wt))
+    return jnp.moveaxis(out, 0, 1), state

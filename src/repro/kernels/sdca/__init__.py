@@ -1,0 +1,3 @@
+from .ops import sdca_epoch
+from .ref import sdca_epoch_ref
+from .sdca import sdca_epoch_pallas

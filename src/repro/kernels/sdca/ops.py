@@ -1,0 +1,24 @@
+"""Jitted public wrapper for the SDCA epoch kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .ref import sdca_epoch_ref
+from .sdca import sdca_epoch_pallas
+
+
+@partial(jax.jit, static_argnames=("lam", "n", "Q", "loss", "backend"))
+def sdca_epoch(x, y, mask, alpha0, w0, idx, *, lam, n, Q, loss="hinge",
+               backend="pallas"):
+    """One local SDCA epoch on a data block.
+
+    backend="pallas": TPU kernel (interpret-mode on CPU).
+    backend="ref": pure-jnp oracle.
+    """
+    if backend == "ref":
+        return sdca_epoch_ref(x, y, mask, alpha0, w0, idx,
+                              lam=lam, n=n, Q=Q, loss=loss)
+    return sdca_epoch_pallas(x, y, mask, alpha0, w0, idx,
+                             lam=lam, n=n, Q=Q, loss=loss)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the local SDCA epoch kernel (hinge / squared).
+
+Identical math to ``repro.core.local.local_sdca`` but taking the
+coordinate order as an explicit array (the kernel consumes a
+host-materialized order via scalar prefetch).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sdca_epoch_ref(x, y, mask, alpha0, w0, idx, *, lam, n, Q,
+                   loss: str = "hinge"):
+    """x: (n_p, m_q); idx: (steps,) int32 coordinate order.
+
+    Returns (dalpha (n_p,), w_final (m_q,)) in float32.
+    """
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    x_sq = jnp.sum(x * x, axis=1)
+
+    def body(carry, i):
+        w, dalpha = carry
+        xi = x[i]
+        zloc = xi @ w
+        a_i = alpha0[i] + dalpha[i]
+        if loss == "hinge":
+            d = (y[i] / Q - zloc) * lam * n / jnp.maximum(x_sq[i], 1e-12)
+            lo = jnp.where(y[i] > 0, 0.0, -1.0)
+            hi = jnp.where(y[i] > 0, 1.0, 0.0)
+            d = jnp.clip(a_i + d, lo, hi) - a_i
+        elif loss == "squared":
+            num = y[i] / Q - a_i / (2.0 * Q) - zloc
+            den = 1.0 / (2.0 * Q) + x_sq[i] / (lam * n)
+            d = num / jnp.maximum(den, 1e-12)
+        else:
+            raise ValueError(loss)
+        d = d * mask[i]
+        w = w + (d / (lam * n)) * xi
+        dalpha = dalpha.at[i].add(d)
+        return (w, dalpha), None
+
+    (w, dalpha), _ = jax.lax.scan(
+        body, (w0.astype(jnp.float32), jnp.zeros_like(alpha0,
+                                                      jnp.float32)), idx)
+    return dalpha, w

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: local SDCA epoch (Algorithm 2 inner loop).
+
+TPU adaptation of the paper's random-access CPU loop (DESIGN.md §2):
+
+  * the random coordinate order is materialized ONCE per epoch on the host
+    and fed through scalar prefetch (``PrefetchScalarGridSpec``) -- the
+    row DMA for step h+1 is issued while step h computes (Pallas
+    double-buffers the gathered row blocks);
+  * the grid is the step counter (TPU grids execute sequentially, which
+    is exactly the dependency structure of dual coordinate ascent);
+  * the running primal block w and the dual deltas live in VMEM scratch
+    for the whole epoch; nothing but one data row moves per step;
+  * outputs are flushed on the last step.
+
+Supported losses: hinge (closed form), squared.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref,            # scalar prefetch: (steps,) int32
+            x_row_ref,          # (1, m_q) gathered row
+            y_row_ref,          # (1, 1) label
+            mask_row_ref,       # (1, 1)
+            alpha_row_ref,      # (1, 1) alpha0[i]
+            w0_ref,             # (1, m_q) initial w block
+            dalpha_ref,         # out: (n_p, 1)
+            w_out_ref,          # out: (1, m_q)
+            w_vmem,             # scratch: (1, m_q) f32
+            dal_vmem,           # scratch: (n_p, 1) f32
+            *, lam, n, Q, steps, loss):
+    h = pl.program_id(0)
+
+    @pl.when(h == 0)
+    def _init():
+        w_vmem[...] = w0_ref[...].astype(jnp.float32)
+        dal_vmem[...] = jnp.zeros_like(dal_vmem)
+
+    i = idx_ref[h]
+    xi = x_row_ref[0, :].astype(jnp.float32)
+    yi = y_row_ref[0, 0].astype(jnp.float32)
+    mi = mask_row_ref[0, 0].astype(jnp.float32)
+    a_i = alpha_row_ref[0, 0].astype(jnp.float32) + dal_vmem[i, 0]
+
+    w = w_vmem[0, :]
+    zloc = jnp.sum(xi * w)
+    x_sq = jnp.sum(xi * xi)
+
+    if loss == "hinge":
+        d = (yi / Q - zloc) * lam * n / jnp.maximum(x_sq, 1e-12)
+        lo = jnp.where(yi > 0, 0.0, -1.0)
+        hi = jnp.where(yi > 0, 1.0, 0.0)
+        d = jnp.clip(a_i + d, lo, hi) - a_i
+    elif loss == "squared":
+        num = yi / Q - a_i / (2.0 * Q) - zloc
+        den = 1.0 / (2.0 * Q) + x_sq / (lam * n)
+        d = num / jnp.maximum(den, 1e-12)
+    else:
+        raise ValueError(loss)
+    d = d * mi
+
+    w_vmem[0, :] = w + (d / (lam * n)) * xi
+    dal_vmem[i, 0] = dal_vmem[i, 0] + d
+
+    @pl.when(h == steps - 1)
+    def _flush():
+        dalpha_ref[...] = dal_vmem[...]
+        w_out_ref[...] = w_vmem[...]
+
+
+def sdca_epoch_pallas(x, y, mask, alpha0, w0, idx, *, lam, n, Q,
+                      loss: str = "hinge", interpret: bool = True):
+    """Drop-in kernel version of ``ref.sdca_epoch_ref``.
+
+    x: (n_p, m_q) f32; idx: (steps,) int32.  Returns (dalpha, w_final).
+    """
+    n_p, m_q = x.shape
+    steps = idx.shape[0]
+    kern = functools.partial(_kernel, lam=float(lam), n=int(n), Q=int(Q),
+                             steps=steps, loss=loss)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((1, m_q), lambda h, idx_ref: (idx_ref[h], 0)),
+            pl.BlockSpec((1, 1), lambda h, idx_ref: (idx_ref[h], 0)),
+            pl.BlockSpec((1, 1), lambda h, idx_ref: (idx_ref[h], 0)),
+            pl.BlockSpec((1, 1), lambda h, idx_ref: (idx_ref[h], 0)),
+            pl.BlockSpec((1, m_q), lambda h, idx_ref: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n_p, 1), lambda h, idx_ref: (0, 0)),
+            pl.BlockSpec((1, m_q), lambda h, idx_ref: (0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, m_q), jnp.float32),
+            pltpu.VMEM((n_p, 1), jnp.float32),
+        ],
+    )
+    dalpha, w_fin = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_p, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, m_q), jnp.float32),
+        ],
+        interpret=interpret,
+    )(idx, x, y[:, None], mask[:, None], alpha0[:, None], w0[None, :])
+    return dalpha[:, 0], w_fin[0]

@@ -1,0 +1,3 @@
+from .ops import svrg_inner
+from .ref import svrg_inner_ref
+from .svrg import svrg_inner_pallas

@@ -1,0 +1,19 @@
+"""Jitted public wrapper for the SVRG inner-loop kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .ref import svrg_inner_ref
+from .svrg import svrg_inner_pallas
+
+
+@partial(jax.jit, static_argnames=("lam", "eta", "loss", "backend"))
+def svrg_inner(x_sub, y, mask, z_anchor, w_anchor, mu_sub, idx, *,
+               lam, eta, loss="hinge", backend="pallas"):
+    if backend == "ref":
+        return svrg_inner_ref(x_sub, y, mask, z_anchor, w_anchor, mu_sub,
+                              idx, lam=lam, eta=eta, loss=loss)
+    return svrg_inner_pallas(x_sub, y, mask, z_anchor, w_anchor, mu_sub,
+                             idx, lam=lam, eta=eta, loss=loss)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the RADiSA SVRG inner-loop kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _grad(loss, z, y):
+    if loss == "hinge":
+        return jnp.where(y * z < 1.0, -y, 0.0)
+    if loss == "squared":
+        return 2.0 * (z - y)
+    raise ValueError(loss)
+
+
+def svrg_inner_ref(x_sub, y, mask, z_anchor, w_anchor, mu_sub, idx, *,
+                   lam, eta, loss: str = "hinge"):
+    """x_sub: (n_p, m_sub); idx: (L,) minibatch order. Returns w (m_sub,)."""
+    x_sub = x_sub.astype(jnp.float32)
+
+    def body(w, j):
+        xj = x_sub[j]
+        z = z_anchor[j] + xj @ (w - w_anchor)
+        g = (_grad(loss, z, y[j]) - _grad(loss, z_anchor[j], y[j])) \
+            * xj * mask[j] + mu_sub + lam * (w - w_anchor)
+        return w - eta * g, None
+
+    w, _ = jax.lax.scan(body, w_anchor.astype(jnp.float32), idx)
+    return w

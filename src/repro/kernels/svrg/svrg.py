@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: RADiSA inner loop (Algorithm 3 steps 7-10).
+
+Same TPU scheme as the SDCA kernel: sequential step grid, scalar-prefetched
+minibatch order driving the row gather (pipelined DMA), sub-block iterate w
+and the anchor quantities resident in VMEM for all L steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _grad(loss, z, y):
+    if loss == "hinge":
+        return jnp.where(y * z < 1.0, -y, 0.0)
+    if loss == "squared":
+        return 2.0 * (z - y)
+    raise ValueError(loss)
+
+
+def _kernel(idx_ref, x_row_ref, y_row_ref, mask_row_ref, z_row_ref,
+            w_anchor_ref, mu_ref, w_out_ref, w_vmem,
+            *, lam, eta, L, loss):
+    h = pl.program_id(0)
+
+    @pl.when(h == 0)
+    def _init():
+        w_vmem[...] = w_anchor_ref[...].astype(jnp.float32)
+
+    xj = x_row_ref[0, :].astype(jnp.float32)
+    yj = y_row_ref[0, 0].astype(jnp.float32)
+    mj = mask_row_ref[0, 0].astype(jnp.float32)
+    zj = z_row_ref[0, 0].astype(jnp.float32)
+    wa = w_anchor_ref[0, :].astype(jnp.float32)
+    mu = mu_ref[0, :].astype(jnp.float32)
+
+    w = w_vmem[0, :]
+    z = zj + jnp.sum(xj * (w - wa))
+    g = (_grad(loss, z, yj) - _grad(loss, zj, yj)) * xj * mj \
+        + mu + lam * (w - wa)
+    w_vmem[0, :] = w - eta * g
+
+    @pl.when(h == L - 1)
+    def _flush():
+        w_out_ref[...] = w_vmem[...]
+
+
+def svrg_inner_pallas(x_sub, y, mask, z_anchor, w_anchor, mu_sub, idx, *,
+                      lam, eta, loss: str = "hinge", interpret: bool = True):
+    n_p, m_sub = x_sub.shape
+    L = idx.shape[0]
+    kern = functools.partial(_kernel, lam=float(lam), eta=float(eta),
+                             L=L, loss=loss)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(L,),
+        in_specs=[
+            pl.BlockSpec((1, m_sub), lambda h, idx_ref: (idx_ref[h], 0)),
+            pl.BlockSpec((1, 1), lambda h, idx_ref: (idx_ref[h], 0)),
+            pl.BlockSpec((1, 1), lambda h, idx_ref: (idx_ref[h], 0)),
+            pl.BlockSpec((1, 1), lambda h, idx_ref: (idx_ref[h], 0)),
+            pl.BlockSpec((1, m_sub), lambda h, idx_ref: (0, 0)),
+            pl.BlockSpec((1, m_sub), lambda h, idx_ref: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m_sub), lambda h, idx_ref: (0, 0)),
+        scratch_shapes=[pltpu.VMEM((1, m_sub), jnp.float32)],
+    )
+    w = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, m_sub), jnp.float32),
+        interpret=interpret,
+    )(idx, x_sub, y[:, None], mask[:, None], z_anchor[:, None],
+      w_anchor[None, :], mu_sub[None, :])
+    return w[0]

@@ -1,0 +1,24 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (required by the dry-run's forced host-device count).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 two pods (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_grid_mesh(P: int, Q: int):
+    """The paper's P x Q doubly distributed grid."""
+    return jax.make_mesh((P, Q), ("data", "model"))

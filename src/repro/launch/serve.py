@@ -1,0 +1,84 @@
+"""Batched serving driver: prefill + decode loop with a KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config
+from ..models import Transformer, reduced
+from .mesh import make_mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    mesh = make_mesh((jax.device_count(), 1), ("data", "model"))
+    model = Transformer(cfg, mesh=mesh)
+
+    with jax.set_mesh(mesh):
+        params = jax.jit(lambda k: model.init(k)[0])(jax.random.PRNGKey(0))
+        key = jax.random.PRNGKey(1)
+        B, S = args.batch, args.prompt_len
+        cache_len = S + args.gen
+        batch = {}
+        if cfg.embed_input == "tokens":
+            batch["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab)
+        else:
+            batch["embeds"] = jax.random.normal(key, (B, S, cfg.d_model),
+                                                cfg.cdtype)
+        if cfg.encoder_len:
+            batch["encoder"] = jax.random.normal(
+                key, (B, cfg.encoder_len, cfg.d_model))
+
+        prefill = jax.jit(lambda p, b: model.prefill(p, b, cache_len))
+        decode = jax.jit(model.decode_step, donate_argnums=(1,))
+
+        t0 = time.perf_counter()
+        logits, cache = prefill(params, batch)
+        logits.block_until_ready()
+        t_prefill = time.perf_counter() - t0
+
+        toks = []
+        t0 = time.perf_counter()
+        for i in range(args.gen):
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            toks.append(np.asarray(nxt))
+            step_in = {"tokens": nxt[:, None]}
+            if cfg.embed_input != "tokens":
+                step_in = {"embeds": jax.random.normal(
+                    jax.random.fold_in(key, i), (B, 1, cfg.d_model),
+                    cfg.cdtype)}
+            if cfg.encoder_len:
+                step_in["encoder"] = batch["encoder"]
+            logits, cache = decode(params, cache, step_in)
+        jax.block_until_ready(logits)
+        t_decode = time.perf_counter() - t0
+
+    out = np.stack(toks, axis=1)
+    print(f"prefill {S} toks x {B} seqs: {t_prefill*1e3:.1f} ms; "
+          f"decode {args.gen} steps: {t_decode*1e3:.1f} ms "
+          f"({t_decode/args.gen*1e3:.1f} ms/tok)")
+    print("generated token ids (first seq):", out[0][:16])
+    return out
+
+
+if __name__ == "__main__":
+    main()

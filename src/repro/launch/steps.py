@@ -1,0 +1,272 @@
+"""Jitted step builders + ShapeDtypeStruct input specs for every
+(architecture x input shape) cell.
+
+Everything here works identically with real arrays (examples, smoke tests)
+and with ShapeDtypeStruct stand-ins (the 512-device dry-run lowers
+``train_step`` / ``serve_step`` without allocating anything).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..models.config import ModelConfig, ShapeConfig
+from ..models.transformer import Transformer
+from ..optim import AdamWConfig, adamw_init, adamw_update
+from ..sharding.rules import batch_axes, logical_to_spec, spec_tree
+
+
+# ---------------------------------------------------------------------------
+# shardings
+# ---------------------------------------------------------------------------
+
+def _named(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def param_shardings(model: Transformer, mesh, key=None):
+    """(param ShapeDtypeStructs with shardings, logical tree, spec tree)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    captured = {}
+
+    def only_params(k):
+        p, l = model.init(k)
+        captured["logical"] = l   # static python structure; side-channel out
+        return p
+
+    shapes = jax.eval_shape(only_params, key)
+    logical = captured["logical"]
+    specs = spec_tree(logical, shapes, mesh)
+    structs = jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=_named(mesh, sp)),
+        shapes, specs)
+    return structs, logical, specs
+
+
+def opt_shardings(param_structs, mesh, param_specs):
+    """AdamW state shards exactly like the params."""
+    shapes = jax.eval_shape(adamw_init, param_structs)
+    mu_spec = param_specs
+    count_spec = P()
+
+    def build(path_tree, spec):
+        return jax.tree.map(
+            lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                               sharding=_named(mesh, sp)),
+            path_tree, spec)
+
+    return {
+        "mu": build(shapes["mu"], mu_spec),
+        "nu": build(shapes["nu"], mu_spec),
+        "count": jax.ShapeDtypeStruct((), jnp.int32,
+                                      sharding=_named(mesh, count_spec)),
+    }
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> Dict[str, Any]:
+    """ShapeDtypeStructs for one input batch of the given shape."""
+    b = batch_axes(mesh)
+    B = shape.batch
+    S = 1 if shape.kind == "decode" else shape.seq
+    bspec = b if B % _axsize(mesh, b) == 0 else ()
+    specs = {}
+    if cfg.embed_input == "tokens":
+        specs["tokens"] = jax.ShapeDtypeStruct(
+            (B, S), jnp.int32, sharding=_named(mesh, P(bspec)))
+    else:
+        specs["embeds"] = jax.ShapeDtypeStruct(
+            (B, S, cfg.d_model), cfg.cdtype,
+            sharding=_named(mesh, P(bspec, None, None)))
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct(
+            (B, S), jnp.int32, sharding=_named(mesh, P(bspec)))
+    if cfg.encoder_len:
+        specs["encoder"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_len, cfg.d_model), cfg.cdtype,
+            sharding=_named(mesh, P(bspec, None, None)))
+    return specs
+
+
+def _axsize(mesh, axes):
+    s = 1
+    for a in axes:
+        s *= mesh.shape[a]
+    return s
+
+
+def _cache_logical(model: Transformer, mesh):
+    """Logical axes for decode-cache leaves.
+
+    KV caches shard their KV-head dim over "model" when it divides
+    (attention stays head-local); otherwise they shard the cache LENGTH
+    (sequence-parallel / flash-decoding style) -- sharding the head_dim
+    instead (the old fallback) made GSPMD insert involuntary full
+    rematerializations of the 32k cache per layer per token.
+    """
+    kv_div = ("model" in mesh.axis_names
+              and model.cfg.n_kv % mesh.shape["model"] == 0)
+    kv = ((None, "batch", None, "kv_heads", None) if kv_div
+          else (None, "batch", "kv_len", None, None))
+    return {
+        "k": kv,
+        "v": kv,
+        "k_scale": kv[:-1],
+        "v_scale": kv[:-1],
+        "state": (None, "batch", "heads", None, None),
+        "x_tm": (None, "batch", "model_dim"),
+        "x_cm": (None, "batch", "model_dim"),
+        "h": (None, "batch", "ff"),
+        "pos": (),
+    }
+
+
+def cache_specs(model: Transformer, shape: ShapeConfig, mesh):
+    """ShapeDtypeStructs (with shardings) for the decode cache."""
+    _CACHE_LOGICAL = _cache_logical(model, mesh)
+    shapes = jax.eval_shape(
+        partial(model.make_cache, shape.batch, shape.seq))
+
+    def leaf_spec(path, leaf):
+        name = None
+        for k in path:
+            key = str(getattr(k, "key", getattr(k, "idx", "")))
+            if key in _CACHE_LOGICAL:
+                name = key
+        logical = _CACHE_LOGICAL.get(name, ())
+        logical = logical[: len(leaf.shape)] if logical else (
+            (None,) * len(leaf.shape))
+        # pad logical to rank
+        logical = tuple(logical) + (None,) * (len(leaf.shape) - len(logical))
+        spec = logical_to_spec(leaf.shape, logical, mesh)
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=_named(mesh, spec))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    return jax.tree.unflatten(treedef,
+                              [leaf_spec(p, l) for p, l in flat])
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+def _largest_divisor_leq(n: int, k: int) -> int:
+    """Largest divisor of ``n`` that is <= ``k`` (>=1)."""
+    k = max(1, min(n, k))
+    while n % k:
+        k -= 1
+    return k
+
+
+def make_train_step(model: Transformer, opt_cfg: AdamWConfig,
+                    accum_steps: Optional[int] = None):
+    """Train step with gradient accumulation.
+
+    The global batch is split along its leading axis into ``accum_steps``
+    microbatches processed sequentially under a ``lax.scan``: the scan
+    body's temporaries (saved activations for one microbatch's backward)
+    are reused across iterations, so per-device live activations shrink by
+    the accumulation factor -- this is what makes the 4k x 256 train
+    shapes fit a 16 GB v5e chip.  (An unrolled loop with
+    ``lax.optimization_barrier`` does NOT work: the XLA CPU pipeline
+    elides the barriers and schedules all forwards first, keeping every
+    microbatch's saved activations live -- verified via buffer-assignment
+    dumps, see EXPERIMENTS.md §Perf.)
+
+    Note for cost accounting: ``cost_analysis`` counts a scan body once,
+    so this step's FLOPs/bytes reflect ONE microbatch; the dry-run
+    additionally lowers an ``accum_steps=1`` variant for roofline numbers.
+    """
+    def train_step(params, opt_state, batch):
+        B = jax.tree.leaves(batch)[0].shape[0]
+        req = model.cfg.train_accum if accum_steps is None else accum_steps
+        acc = _largest_divisor_leq(B, req)
+        mb = B // acc
+
+        def loss_grads(p, sub):
+            return jax.value_and_grad(model.train_loss)(p, sub)
+
+        if acc == 1:
+            loss, grads = loss_grads(params, batch)
+        else:
+            # Reshape (B, ...) -> (acc, mb, ...) STATICALLY and scan over
+            # xs.  Slicing the batch-sharded dim with a traced start index
+            # instead would make GSPMD all-gather the whole batch to every
+            # device (8.6 GB for the VLM encoder states) because it cannot
+            # prove a dynamic slice stays within one shard; the scan dim
+            # of the reshaped xs is unsharded, so per-iteration slicing is
+            # local.
+            xs = jax.tree.map(
+                lambda a: a.reshape((acc, mb) + a.shape[1:]), batch)
+
+            def body(carry, sub):
+                loss_acc, g_acc = carry
+                li, gi = loss_grads(params, sub)
+                return (loss_acc + li,
+                        jax.tree.map(jnp.add, g_acc, gi)), None
+
+            zeros = jax.tree.map(jnp.zeros_like, params)
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zeros), xs)
+            inv = 1.0 / acc
+            loss = loss * inv
+            grads = jax.tree.map(lambda g: g * inv, grads)
+
+        params, opt_state, gnorm = adamw_update(opt_cfg, grads, opt_state,
+                                                params)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_prefill_step(model: Transformer, cache_len: int):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, cache_len)
+
+    return prefill_step
+
+
+def make_decode_step(model: Transformer):
+    def serve_step(params, cache, batch):
+        return model.decode_step(params, cache, batch)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# full per-cell spec assembly (used by dryrun + benchmarks)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CellSpecs:
+    params: Any
+    opt: Optional[Any]
+    batch: Any
+    cache: Optional[Any]
+    fn: Any           # callable to jit+lower; args per `kind`
+    kind: str
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                opt_cfg: Optional[AdamWConfig] = None) -> CellSpecs:
+    model = Transformer(cfg, mesh=mesh)
+    pstructs, _, pspecs = param_shardings(model, mesh)
+    batch = batch_specs(cfg, shape, mesh)
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or AdamWConfig()
+        ostructs = opt_shardings(pstructs, mesh, pspecs)
+        return CellSpecs(pstructs, ostructs, batch, None,
+                         make_train_step(model, opt_cfg), "train")
+    if shape.kind == "prefill":
+        return CellSpecs(pstructs, None, batch, None,
+                         make_prefill_step(model, shape.seq), "prefill")
+    cache = cache_specs(model, shape, mesh)
+    return CellSpecs(pstructs, None, batch, cache,
+                     make_decode_step(model), "decode")

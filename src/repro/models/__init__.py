@@ -1,0 +1,3 @@
+from .config import (ATTN, LM_SHAPES, LOCAL, RGLRU, RWKV, XATTN,
+                     ModelConfig, MoEConfig, ShapeConfig, reduced)
+from .transformer import Transformer

@@ -1,0 +1,151 @@
+"""Attention: chunked (flash-style) causal/windowed softmax attention.
+
+The training/prefill path never materializes the (S x S) score matrix:
+an outer ``lax.scan`` walks query chunks while an inner scan walks KV
+chunks carrying the online-softmax state (m, l, acc).  KV chunks that are
+entirely masked out (future chunks under causality, chunks beyond the
+sliding window) are skipped at *runtime* with ``lax.cond`` -- on TPU this
+lowers to a conditional, so the causal upper triangle costs ~0 FLOPs at
+run time.  A Pallas TPU kernel with the same blocking lives in
+``repro.kernels.flash`` (the pure-JAX path here is its oracle and the
+dry-run/autodiff path).
+
+GQA layout: q (B, S, H, D), k/v (B, S, KV, D) with G = H // KV query heads
+per KV head, handled by reshaping q to (B, S, KV, G, D).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _chunk(x, c, axis=1):
+    s = x.shape[axis]
+    assert s % c == 0, (s, c)
+    new = x.shape[:axis] + (s // c, c) + x.shape[axis + 1:]
+    return x.reshape(new)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=None,
+                      chunk_q=512, chunk_k=512, scale=None):
+    """Flash-style attention. q: (B,S,H,D); k,v: (B,Skv,KV,D) -> (B,S,H,D)."""
+    B, S, H, D = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else D ** -0.5
+    chunk_q = min(chunk_q, S)
+    chunk_k = min(chunk_k, Skv)
+    nq, nk = S // chunk_q, Skv // chunk_k
+
+    qc = _chunk(q.reshape(B, S, KV, G, D), chunk_q)      # (B,nq,Cq,KV,G,D)
+    qc = jnp.moveaxis(qc, 1, 0)                          # (nq,B,Cq,KV,G,D)
+    kc = jnp.moveaxis(_chunk(k, chunk_k), 1, 0)          # (nk,B,Ck,KV,D)
+    vc = jnp.moveaxis(_chunk(v, chunk_k), 1, 0)
+
+    qpos = jnp.arange(chunk_q)
+    kpos = jnp.arange(chunk_k)
+
+    def q_step(_, qi_q):
+        qi, q_i = qi_q
+        q_i = q_i * scale
+
+        def kv_step(carry, kj_kv):
+            kj, k_j, v_j = kj_kv
+            m, l, acc = carry
+
+            def compute(_):
+                s = jnp.einsum("bckgd,bxkd->bckgx", q_i, k_j,
+                               preferred_element_type=jnp.float32)
+                qp = qi * chunk_q + qpos                  # (Cq,)
+                kp = kj * chunk_k + kpos                  # (Ck,)
+                mask = jnp.ones((chunk_q, chunk_k), bool)
+                if causal:
+                    mask &= qp[:, None] >= kp[None, :]
+                if window is not None:
+                    mask &= qp[:, None] - kp[None, :] < window
+                s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+                m_new = jnp.maximum(m, s.max(axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l_new = l * corr + p.sum(axis=-1)
+                acc_new = acc * corr[..., None] + jnp.einsum(
+                    "bckgx,bxkd->bckgd", p.astype(v_j.dtype), v_j,
+                    preferred_element_type=jnp.float32)
+                return m_new, l_new, acc_new
+
+            needed = jnp.array(True)
+            if causal:
+                needed &= kj * chunk_k <= qi * chunk_q + (chunk_q - 1)
+            if window is not None:
+                needed &= (kj + 1) * chunk_k - 1 > qi * chunk_q - window
+            m, l, acc = jax.lax.cond(needed, compute, lambda _: (m, l, acc),
+                                     None)
+            return (m, l, acc), None
+
+        m0 = jnp.full((B, chunk_q, KV, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, chunk_q, KV, G), jnp.float32)
+        a0 = jnp.zeros((B, chunk_q, KV, G, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kc, vc))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    # Flash-style backward: without this checkpoint, differentiating the
+    # scans saves every (q-chunk x kv-chunk) fp32 score/prob block -- the
+    # full S x S score matrix re-materialized per layer.  Rematerializing
+    # per q-chunk keeps only O(Cq x Ck) live during the backward.
+    q_step = jax.checkpoint(
+        q_step, policy=jax.checkpoint_policies.nothing_saveable)
+    _, out = jax.lax.scan(q_step, None, (jnp.arange(nq), qc))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, S, H, D)    # merge chunks
+    return out
+
+
+def full_attention(q, k, v, *, causal=True, window=None, scale=None):
+    """Reference O(S^2)-memory attention (oracle for tests)."""
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else D ** -0.5
+    qr = q.reshape(B, S, KV, G, D)
+    s = jnp.einsum("bskgd,bxkd->bskgx", qr * scale, k,
+                   preferred_element_type=jnp.float32)
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((S, k.shape[1]), bool)
+    if causal:
+        mask &= qp >= kp
+    if window is not None:
+        mask &= qp - kp < window
+    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bskgx,bxkd->bskgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=None, scale=None):
+    """Single-token attention against a (B, Smax, KV, D) cache.
+
+    ``pos``: current position (scalar int32) -- entries > pos are masked.
+    """
+    B, _, H, D = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else D ** -0.5
+    qr = q.reshape(B, KV, G, D)
+    s = jnp.einsum("bkgd,bxkd->bkgx", qr * scale, k_cache,
+                   preferred_element_type=jnp.float32)
+    kp = jnp.arange(k_cache.shape[1])
+    mask = kp <= pos
+    if window is not None:
+        mask &= kp > pos - window
+    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgx,bxkd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, D).astype(q.dtype)

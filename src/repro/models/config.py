@@ -1,0 +1,165 @@
+"""Model / shape configuration dataclasses.
+
+A ``ModelConfig`` describes one architecture from the assigned pool; the
+layer stack is expressed as a repeating ``pattern`` of mixer kinds so that
+homogeneous runs lower to a single ``lax.scan`` (compile-time friendly at
+512 devices) while hybrids (RG-LRU 1:2, VLM cross-attn every 5th) scan over
+whole periods.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+# mixer kinds
+ATTN = "attn"        # causal self attention (GQA + RoPE, optional qk-norm/SWA)
+XATTN = "xattn"      # cross attention to stub encoder states (VLM)
+RWKV = "rwkv"        # RWKV-6 data-dependent-decay linear attention
+RGLRU = "rglru"      # RG-LRU gated linear recurrence (recurrentgemma)
+LOCAL = "local"      # sliding-window self attention (recurrentgemma 1:2)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    # sequence-chunk size for the capacity-based dispatch (see models/moe.py)
+    chunk: int = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    pattern: Tuple[str, ...] = (ATTN,)
+    head_dim: Optional[int] = None  # default d_model // n_heads
+    moe: Optional[MoEConfig] = None
+    qk_norm: bool = False
+    swa_window: Optional[int] = None    # sliding window for ATTN mixers
+    local_window: int = 2048            # window for LOCAL mixers
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-6
+    embed_input: str = "tokens"         # "tokens" | "embeddings" (stub frontend)
+    encoder_len: int = 0                # VLM: number of stub image tokens
+    rwkv_head_dim: int = 64
+    rglru_c: float = 8.0                # RG-LRU decay sharpness constant
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    # calibration mode: lay every layer out unrolled (no scan) so that
+    # cost_analysis -- which counts a while-loop body ONCE -- measures true
+    # per-layer costs; used by the roofline per-period extrapolation
+    unroll: bool = False
+    # "chunked" (flash-style scan; production) or "full" (materialized
+    # scores; scan-free -- calibration only, so HLO cost analysis sees
+    # every attention FLOP)
+    attn_impl: str = "chunked"
+    # gradient-accumulation microbatches for train steps: the global batch
+    # is split into ``train_accum`` sequential microbatches under a
+    # lax.scan so per-device activations fit HBM; clamped to the largest
+    # divisor of the per-call batch in make_train_step
+    train_accum: int = 8
+    # chunked cross entropy: compute head matmul + log-softmax over
+    # sequence chunks of this many tokens under a rematerialized scan so
+    # the (B, S, vocab) fp32 logits (+ their gradient) are never fully
+    # materialized; None = single full-logits pass
+    loss_chunk: Optional[int] = 1024
+    # activation-checkpoint policy for the layer scan:
+    #   "nothing"         -- recompute everything; minimizes HBM traffic
+    #     and live memory, the dominant roofline term on every train cell
+    #     (measured: EXPERIMENTS.md §Perf)
+    #   "save_boundaries" -- save mixer/MLP projection outputs (the
+    #     post-all-reduce tensors): backward re-runs neither the forward
+    #     TP collectives nor the projections (-10% wire, +18% HBM bytes)
+    #   "save_dots"       -- save every matmul output (-3% FLOPs, -9%
+    #     wire, +57% HBM bytes)
+    remat_policy: str = "nothing"
+    # decode KV-cache storage dtype: "bfloat16" (exact) or "int8"
+    # (per-(token, kv-head) absmax scales stored alongside; halves the
+    # cache-read HBM traffic that dominates the decode memory term)
+    kv_cache_dtype: str = "bfloat16"
+    # ---- roofline bookkeeping ----
+    notes: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def rwkv_heads(self) -> int:
+        return self.d_model // self.rwkv_head_dim
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if a 500k-token decode is feasible (no full-attention mixer).
+
+        LOCAL/SWA windows, RWKV and RG-LRU are all O(window) or O(1) per
+        decoded token; XATTN attends to a short fixed encoder and is fine.
+        """
+        return not (ATTN in self.pattern and self.swa_window is None)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def n_periods(self):
+        if self.unroll:
+            return 0, self.n_layers
+        k = len(self.pattern)
+        return self.n_layers // k, self.n_layers % k
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq: int            # sequence length (train) or KV-cache length (decode)
+    batch: int          # global batch
+    kind: str           # "train" | "prefill" | "decode"
+
+
+LM_SHAPES = (
+    ShapeConfig("train_4k", 4096, 256, "train"),
+    ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32768, 128, "decode"),
+    ShapeConfig("long_500k", 524288, 1, "decode"),
+)
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """A tiny same-family config for CPU smoke tests."""
+    kw = dict(
+        n_layers=max(len(cfg.pattern), 2) if len(cfg.pattern) > 1 else 2,
+        d_model=64,
+        n_heads=4,
+        n_kv=max(1, min(cfg.n_kv, 2)),
+        d_ff=128,
+        vocab=256,
+        head_dim=16,
+        rwkv_head_dim=16,
+        encoder_len=8 if cfg.encoder_len else 0,
+        swa_window=16 if cfg.swa_window else None,
+        local_window=16,
+    )
+    if cfg.moe is not None:
+        # capacity_factor 4.0 => no capacity drops at smoke scale, so the
+        # decode path matches the chunked forward exactly
+        kw["moe"] = MoEConfig(n_experts=4, top_k=2, chunk=8,
+                              capacity_factor=4.0)
+    if cfg.pattern == (RGLRU, RGLRU, ATTN):
+        kw["n_layers"] = 5   # exercises the remainder (5 = 3 + 2) path
+    if XATTN in cfg.pattern:
+        kw["n_layers"] = len(cfg.pattern) * 2
+    kw.update(overrides)
+    return dataclasses.replace(cfg, name=cfg.name + "-smoke", **kw)

@@ -1,0 +1,57 @@
+"""Shared layer primitives: RMSNorm, RoPE, initializers.
+
+Parameters are plain dicts of jnp arrays.  Every ``init_*`` function
+returns ``(params, logical)`` where ``logical`` mirrors the params with a
+tuple of logical-axis names per dimension (consumed by
+``repro.sharding.spec_tree``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def trunc_normal(key, shape, scale, dtype):
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape)
+            ).astype(dtype)
+
+
+def init_linear(key, d_in, d_out, dtype, logical=("fsdp", "ff")):
+    w = trunc_normal(key, (d_in, d_out), d_in ** -0.5, dtype)
+    return w, tuple(logical)
+
+
+def rms_norm(x, gamma, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * gamma.astype(jnp.float32)).astype(dt)
+
+
+def head_rms_norm(x, gamma, eps):
+    """Per-head q/k norm (qwen3 style); x: (..., heads, head_dim)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * gamma.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(head_dim, theta):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta):
+    """x: (B, S, H, D); positions: (S,) or (B, S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    if positions.ndim == 1:
+        ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+        ang = ang[None, :, None, :]                    # (1, S, 1, D/2)
+    else:
+        ang = positions.astype(jnp.float32)[..., None] * freqs
+        ang = ang[:, :, None, :]                       # (B, S, 1, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,88 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+    r_t = sigmoid(W_r x_t)                       (recurrence gate)
+    i_t = sigmoid(W_i x_t)                       (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)       (per-channel decay, in (0,1))
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The recurrence is an elementwise linear scan -> we evaluate it with
+``jax.lax.associative_scan`` (log-depth, parallel across the sequence --
+the TPU-native adaptation of the paper's CUDA linear-scan kernel).
+Decode is the O(1) recurrence.  We implement the gated block of Griffin
+(input/output linear + the recurrence) without the temporal conv1d of the
+full release; recorded in DESIGN.md §assumptions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import trunc_normal
+
+
+def init_rglru(key, cfg: ModelConfig):
+    dm = cfg.d_model
+    ks = jax.random.split(key, 5)
+    dt = cfg.pdtype
+    s = dm ** -0.5
+    params = {
+        "w_x": trunc_normal(ks[0], (dm, dm), s, dt),      # input projection
+        "w_r": trunc_normal(ks[1], (dm, dm), s, dt),
+        "w_i": trunc_normal(ks[2], (dm, dm), s, dt),
+        "w_o": trunc_normal(ks[3], (dm, dm), s, dt),
+        # Lambda init so that a^c in [0.9, 0.999] at r=1 (paper's init)
+        "lam": jnp.asarray(
+            jnp.log(jnp.expm1(-jnp.log(
+                jnp.linspace(0.9, 0.999, dm)) / cfg.rglru_c)), dt),
+    }
+    logical = {"w_x": ("fsdp", "ff"), "w_r": ("fsdp", "ff"),
+               "w_i": ("fsdp", "ff"), "w_o": ("ff", "fsdp"),
+               "lam": ("ff",)}
+    return params, logical
+
+
+def _rglru_core(a, bx, h0):
+    """h_t = a_t h_{t-1} + bx_t via associative scan. a,bx: (B,S,C)."""
+    if h0 is not None:
+        bx = bx.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h
+
+
+def rglru_block(params, x, cfg: ModelConfig, *, state=None):
+    """x: (B,S,dm) -> (out, new_state (B,dm))."""
+    cdt = cfg.cdtype
+    xg = x @ params["w_x"].astype(cdt)
+    r = jax.nn.sigmoid((x @ params["w_r"].astype(cdt)).astype(jnp.float32))
+    i = jax.nn.sigmoid((x @ params["w_i"].astype(cdt)).astype(jnp.float32))
+    log_a = -cfg.rglru_c * jax.nn.softplus(
+        params["lam"].astype(jnp.float32)) * r              # (B,S,dm) fp32
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * xg.astype(jnp.float32))
+    h = _rglru_core(a, gated, state)
+    out = (h.astype(cdt)) @ params["w_o"].astype(cdt)
+    return out, h[:, -1, :]
+
+
+def rglru_decode(params, x, cfg: ModelConfig, *, state):
+    """One-token recurrence. x: (B,1,dm); state: (B,dm) fp32."""
+    cdt = cfg.cdtype
+    xg = x @ params["w_x"].astype(cdt)
+    r = jax.nn.sigmoid((x @ params["w_r"].astype(cdt)).astype(jnp.float32))
+    i = jax.nn.sigmoid((x @ params["w_i"].astype(cdt)).astype(jnp.float32))
+    log_a = -cfg.rglru_c * jax.nn.softplus(
+        params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)[:, 0, :]
+    gated = (jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+             * (i * xg.astype(jnp.float32)))[:, 0, :]
+    h = a * state + gated
+    out = (h[:, None, :].astype(cdt)) @ params["w_o"].astype(cdt)
+    return out, h

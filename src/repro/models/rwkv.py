@@ -1,0 +1,147 @@
+"""RWKV-6 ("Finch") time-mix layer: linear attention with data-dependent
+per-channel decay (arXiv:2404.05892), plus the squared-ReLU channel mix.
+
+State recurrence per head (D = head dim):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (S: D x D)
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with w_t = exp(-exp(wx_t)) data-dependent, u a learned "bonus" for the
+current token.  Token shift (mixing x_t with x_{t-1}) gates all five
+projections, following the reference implementation (we use the simple
+static mix; the low-rank dynamic mix of the full release is an
+optimization, not a structural change -- noted in DESIGN.md).
+
+Training path: ``lax.scan`` over time carrying (B, H, D, D) state --
+sequential but exact; the chunked Pallas kernel in ``repro.kernels.linattn``
+implements the GLA-style chunked parallel form for TPU throughput.
+Decode: O(1) per token via the same recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import rms_norm, trunc_normal
+
+
+def init_rwkv(key, cfg: ModelConfig):
+    dm = cfg.d_model
+    H, D = cfg.rwkv_heads, cfg.rwkv_head_dim
+    ks = jax.random.split(key, 8)
+    dt = cfg.pdtype
+    s = dm ** -0.5
+    params = {
+        "w_r": trunc_normal(ks[0], (dm, dm), s, dt),
+        "w_k": trunc_normal(ks[1], (dm, dm), s, dt),
+        "w_v": trunc_normal(ks[2], (dm, dm), s, dt),
+        "w_g": trunc_normal(ks[3], (dm, dm), s, dt),
+        "w_w": trunc_normal(ks[4], (dm, dm), 0.1 * s, dt),
+        "w_o": trunc_normal(ks[5], (dm, dm), s, dt),
+        "u": trunc_normal(ks[6], (H, D), 0.5, dt),
+        "mix": 0.5 * jnp.ones((5, dm), dt),     # token-shift mixes (r,k,v,g,w)
+        "ln_x": jnp.ones((dm,), dt),            # group-norm on the head output
+    }
+    logical = {
+        "w_r": ("fsdp", "heads"), "w_k": ("fsdp", "heads"),
+        "w_v": ("fsdp", "heads"), "w_g": ("fsdp", "heads"),
+        "w_w": ("fsdp", "heads"), "w_o": ("heads", "fsdp"),
+        "u": ("heads", None), "mix": (None, "fsdp"), "ln_x": ("fsdp",),
+    }
+    return params, logical
+
+
+def _projections(params, x, x_prev, cfg: ModelConfig):
+    """Token-shifted r,k,v,g and log-decay lw. x: (B,S,dm), x_prev shifted."""
+    cdt = cfg.cdtype
+    mix = params["mix"].astype(cdt)
+    B, S, dm = x.shape
+    H, D = cfg.rwkv_heads, cfg.rwkv_head_dim
+
+    def mixed(i):
+        return x * mix[i] + x_prev * (1.0 - mix[i])
+
+    r = (mixed(0) @ params["w_r"].astype(cdt)).reshape(B, S, H, D)
+    k = (mixed(1) @ params["w_k"].astype(cdt)).reshape(B, S, H, D)
+    v = (mixed(2) @ params["w_v"].astype(cdt)).reshape(B, S, H, D)
+    g = jax.nn.silu(mixed(3) @ params["w_g"].astype(cdt))
+    # data-dependent decay, in log space: log w = -exp(wx), clamped for
+    # numerical safety of the chunked kernel (matches its contract).
+    wx = (mixed(4) @ params["w_w"].astype(cdt)).reshape(B, S, H, D)
+    logw = -jnp.exp(jnp.clip(wx.astype(jnp.float32), -20.0, 4.0))
+    logw = jnp.maximum(logw, -8.0)
+    return r, k, v, g, logw
+
+
+def rwkv_scan(r, k, v, logw, u, state0=None):
+    """Exact recurrence. r,k,v,logw: (B,S,H,D); u: (H,D).
+
+    Returns (out (B,S,H,D) fp32, final state (B,H,D,D) fp32).
+    """
+    B, S, H, D = r.shape
+    rt = jnp.moveaxis(r, 1, 0).astype(jnp.float32)   # (S,B,H,D)
+    kt = jnp.moveaxis(k, 1, 0).astype(jnp.float32)
+    vt = jnp.moveaxis(v, 1, 0).astype(jnp.float32)
+    wt = jnp.exp(jnp.moveaxis(logw, 1, 0))           # per-channel decay
+    uf = u.astype(jnp.float32)
+
+    if state0 is None:
+        state0 = jnp.zeros((B, H, D, D), jnp.float32)
+
+    def step(S_, inp):
+        r_, k_, v_, w_ = inp
+        kv = k_[..., :, None] * v_[..., None, :]      # (B,H,D,D)
+        o = jnp.einsum("bhd,bhde->bhe", r_, S_ + uf[None, :, :, None] * kv)
+        S_ = w_[..., :, None] * S_ + kv
+        return S_, o
+
+    state, out = jax.lax.scan(step, state0, (rt, kt, vt, wt))
+    return jnp.moveaxis(out, 0, 1), state            # (B,S,H,E=D)
+
+
+def rwkv_time_mix(params, x, cfg: ModelConfig, *, x_last=None, state=None):
+    """Full time-mix block. x: (B,S,dm).
+
+    ``x_last``/``state``: decode-time carries ((B,dm) previous input and
+    (B,H,D,D) recurrence state).  Returns (out, (new_x_last, new_state)).
+    """
+    B, S, dm = x.shape
+    H, D = cfg.rwkv_heads, cfg.rwkv_head_dim
+    if x_last is None:
+        x_last = jnp.zeros((B, dm), x.dtype)
+    x_prev = jnp.concatenate([x_last[:, None, :], x[:, :-1, :]], axis=1)
+    r, k, v, g, logw = _projections(params, x, x_prev, cfg)
+    out, new_state = rwkv_scan(r, k, v, logw, params["u"], state)
+    # per-head group norm, then output gate + projection
+    out = out.reshape(B, S, H * D)
+    out = rms_norm(out.reshape(B, S, H, D),
+                   jnp.ones((D,), out.dtype), 1e-5).reshape(B, S, H * D)
+    out = out.astype(cfg.cdtype) * params["ln_x"].astype(cfg.cdtype)
+    out = (out * g) @ params["w_o"].astype(cfg.cdtype)
+    return out, (x[:, -1, :], new_state)
+
+
+def init_rwkv_channel_mix(key, cfg: ModelConfig):
+    dm, dff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = cfg.pdtype
+    params = {
+        "w_in": trunc_normal(ks[0], (dm, dff), dm ** -0.5, dt),
+        "w_out": trunc_normal(ks[1], (dff, dm), dff ** -0.5, dt),
+        "mix": 0.5 * jnp.ones((dm,), dt),
+    }
+    logical = {"w_in": ("fsdp", "ff"), "w_out": ("ff", "fsdp"),
+               "mix": ("fsdp",)}
+    return params, logical
+
+
+def rwkv_channel_mix(params, x, cfg: ModelConfig, *, x_last=None):
+    """Squared-ReLU channel mix with token shift. Returns (out, new_x_last)."""
+    B, S, dm = x.shape
+    cdt = cfg.cdtype
+    if x_last is None:
+        x_last = jnp.zeros((B, dm), x.dtype)
+    x_prev = jnp.concatenate([x_last[:, None, :], x[:, :-1, :]], axis=1)
+    mix = params["mix"].astype(cdt)
+    xm = x * mix + x_prev * (1.0 - mix)
+    h = jnp.square(jax.nn.relu(xm @ params["w_in"].astype(cdt)))
+    return h @ params["w_out"].astype(cdt), x[:, -1, :]

@@ -1,0 +1,613 @@
+"""Composable decoder stack covering all 10 assigned architectures.
+
+The layer stack is ``pattern`` (a tuple of mixer kinds) repeated; full
+periods run under one ``lax.scan`` with stacked parameters (small HLO,
+fast SPMD partitioning at 512 devices) and the remainder layers run
+unrolled.  Three entry points:
+
+  * ``train_loss``  -- full-sequence forward + mean token cross entropy
+  * ``prefill``     -- forward that also materializes the decode caches
+  * ``decode_step`` -- one token with cache, O(cache) per layer
+
+Parameters are nested dicts; a parallel "logical axes" tree drives the
+doubly distributed sharding rules (repro/sharding/rules.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from ..sharding.rules import constrain
+from .attention import (chunked_attention, decode_attention,
+                        full_attention)
+from .config import ATTN, LOCAL, RGLRU, RWKV, XATTN, ModelConfig
+from .layers import apply_rope, head_rms_norm, rms_norm, trunc_normal
+from .moe import init_moe, moe_ffn
+from .rglru import init_rglru, rglru_block, rglru_decode
+from .rwkv import (init_rwkv, init_rwkv_channel_mix, rwkv_channel_mix,
+                   rwkv_time_mix)
+
+
+def _kv_quant(x):
+    """Symmetric int8 quantization over the head dim.
+
+    Returns (int8 values, f32 absmax/127 scales without the head dim)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1) / 127.0
+    q = jnp.clip(jnp.round(xf / jnp.maximum(scale, 1e-8)[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _kv_dequant(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# per-layer init
+# ---------------------------------------------------------------------------
+
+def _init_attn(key, cfg: ModelConfig, cross: bool):
+    dm, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    ks = jax.random.split(key, 4)
+    dt = cfg.pdtype
+    s = dm ** -0.5
+    p = {
+        "wq": trunc_normal(ks[0], (dm, H * hd), s, dt),
+        "wk": trunc_normal(ks[1], (dm, KV * hd), s, dt),
+        "wv": trunc_normal(ks[2], (dm, KV * hd), s, dt),
+        "wo": trunc_normal(ks[3], (H * hd, dm), (H * hd) ** -0.5, dt),
+    }
+    l = {
+        "wq": ("fsdp", "heads"), "wk": ("fsdp", "kv_heads"),
+        "wv": ("fsdp", "kv_heads"), "wo": ("heads", "fsdp"),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+        l["q_norm"] = (None,)
+        l["k_norm"] = (None,)
+    return p, l
+
+
+def _init_mlp(key, cfg: ModelConfig):
+    dm, dff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = cfg.pdtype
+    p = {
+        "w_gate": trunc_normal(ks[0], (dm, dff), dm ** -0.5, dt),
+        "w_up": trunc_normal(ks[1], (dm, dff), dm ** -0.5, dt),
+        "w_down": trunc_normal(ks[2], (dff, dm), dff ** -0.5, dt),
+    }
+    l = {"w_gate": ("fsdp", "ff"), "w_up": ("fsdp", "ff"),
+         "w_down": ("ff", "fsdp")}
+    return p, l
+
+
+def _init_layer(key, cfg: ModelConfig, kind: str):
+    ks = jax.random.split(key, 3)
+    dt = cfg.pdtype
+    p: Dict[str, Any] = {"ln1": jnp.ones((cfg.d_model,), dt),
+                         "ln2": jnp.ones((cfg.d_model,), dt)}
+    l: Dict[str, Any] = {"ln1": ("fsdp",), "ln2": ("fsdp",)}
+    if kind in (ATTN, LOCAL, XATTN):
+        p["mixer"], l["mixer"] = _init_attn(ks[0], cfg, kind == XATTN)
+    elif kind == RWKV:
+        p["mixer"], l["mixer"] = init_rwkv(ks[0], cfg)
+    elif kind == RGLRU:
+        p["mixer"], l["mixer"] = init_rglru(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    if kind == RWKV:
+        p["mlp"], l["mlp"] = init_rwkv_channel_mix(ks[1], cfg)
+    elif cfg.moe is not None:
+        p["mlp"], l["mlp"] = init_moe(ks[1], cfg)
+    else:
+        p["mlp"], l["mlp"] = _init_mlp(ks[1], cfg)
+    return p, l
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Transformer:
+    cfg: ModelConfig
+    mesh: Optional[Any] = None
+
+    # ---- init ----
+    def init(self, key) -> Tuple[Dict, Dict]:
+        cfg = self.cfg
+        n_full, n_rem = cfg.n_periods()
+        kp = len(cfg.pattern)
+        keys = jax.random.split(key, 4)
+        params: Dict[str, Any] = {}
+        logical: Dict[str, Any] = {}
+
+        if cfg.embed_input == "tokens":
+            params["embed"] = trunc_normal(keys[0], (cfg.vocab, cfg.d_model),
+                                           1.0, cfg.pdtype)
+            logical["embed"] = ("vocab", "fsdp")
+        params["head"] = trunc_normal(keys[1], (cfg.d_model, cfg.vocab),
+                                      cfg.d_model ** -0.5, cfg.pdtype)
+        logical["head"] = ("fsdp", "vocab")
+        params["final_norm"] = jnp.ones((cfg.d_model,), cfg.pdtype)
+        logical["final_norm"] = ("fsdp",)
+
+        # stacked per pattern position: leading dim n_full
+        def stack_position(j):
+            kind = cfg.pattern[j]
+            ks = jax.random.split(jax.random.fold_in(keys[2], j), n_full)
+            ps, ls = zip(*[_init_layer(k, cfg, kind) for k in ks])
+            return jax.tree.map(lambda *xs: jnp.stack(xs), *ps), ls[0]
+
+        if n_full:
+            pos_trees = [stack_position(j) for j in range(kp)]
+            params["periods"] = [t[0] for t in pos_trees]
+            logical["periods"] = [
+                jax.tree.map(lambda ax: (None,) + ax, t[1],
+                             is_leaf=lambda x: isinstance(x, tuple) and all(
+                                 isinstance(e, (str, type(None))) for e in x))
+                for t in pos_trees]
+        else:
+            params["periods"] = []
+            logical["periods"] = []
+
+        rem = []
+        rem_l = []
+        for r in range(n_rem):
+            p, l = _init_layer(jax.random.fold_in(keys[3], r), cfg,
+                               cfg.pattern[r % len(cfg.pattern)])
+            rem.append(p)
+            rem_l.append(l)
+        params["remainder"] = rem
+        logical["remainder"] = rem_l
+        return params, logical
+
+    # ---- building blocks ----
+    def _constrain_act(self, x):
+        if self.mesh is not None:
+            return constrain(x, self.mesh, "batch", None, None)
+        return x
+
+    def _constrain_kv(self, arr):
+        """Pin a (B, L, KV[, hd]) KV-cache tensor (or its int8 scales,
+        rank 3) to its decode layout: KV-head-sharded when n_kv divides
+        the model axis, else sequence-parallel (length-sharded)."""
+        if self.mesh is None:
+            return arr
+        kv_div = ("model" in self.mesh.axis_names
+                  and self.cfg.n_kv % self.mesh.shape["model"] == 0)
+        logical = (("batch", None, "kv_heads", None) if kv_div
+                   else ("batch", "kv_len", None, None))
+        return constrain(arr, self.mesh, *logical[: arr.ndim])
+
+    def _attn_train(self, p, x, kind, positions, enc=None):
+        cfg = self.cfg
+        cdt = cfg.cdtype
+        B, S, dm = x.shape
+        H, KV, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+        q = (x @ p["wq"].astype(cdt)).reshape(B, S, H, hd)
+        src = enc if kind == XATTN else x
+        Skv = src.shape[1]
+        k = (src @ p["wk"].astype(cdt)).reshape(B, Skv, KV, hd)
+        v = (src @ p["wv"].astype(cdt)).reshape(B, Skv, KV, hd)
+        if cfg.qk_norm:
+            q = head_rms_norm(q, p["q_norm"], cfg.norm_eps)
+            k = head_rms_norm(k, p["k_norm"], cfg.norm_eps)
+        attn = (chunked_attention if cfg.attn_impl == "chunked"
+                else full_attention)
+        if kind != XATTN:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            window = (cfg.swa_window if kind == ATTN else cfg.local_window)
+            out = attn(q, k, v, causal=True, window=window)
+        else:
+            out = attn(q, k, v, causal=False, window=None)
+        return out.reshape(B, S, H * hd) @ p["wo"].astype(cdt)
+
+    def _mlp(self, p, x, kind):
+        cfg = self.cfg
+        cdt = cfg.cdtype
+        if kind == RWKV:
+            out, _ = rwkv_channel_mix(p, x, cfg)
+            return out
+        if cfg.moe is not None:
+            return moe_ffn(p, x, cfg)
+        h = jax.nn.silu(x @ p["w_gate"].astype(cdt)) * \
+            (x @ p["w_up"].astype(cdt))
+        return h @ p["w_down"].astype(cdt)
+
+    def _layer_train(self, p, x, kind, positions, enc=None):
+        cfg = self.cfg
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        if kind == RWKV:
+            mix, _ = rwkv_time_mix(p["mixer"], h, cfg)
+        elif kind == RGLRU:
+            mix, _ = rglru_block(p["mixer"], h, cfg)
+        else:
+            mix = self._attn_train(p["mixer"], h, kind, positions, enc)
+        # name the post-projection (= post-all-reduce under TP) tensors so
+        # the "save_boundaries" remat policy can keep them: the backward
+        # then re-runs neither the forward collectives nor the projections
+        mix = checkpoint_name(mix, "mixer_out")
+        x = x + mix
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        out = checkpoint_name(self._mlp(p["mlp"], h, kind), "mlp_out")
+        x = x + out
+        return self._constrain_act(x)
+
+    # ---- train ----
+    def _backbone_train(self, params, x, positions, enc=None):
+        cfg = self.cfg
+        kp = len(cfg.pattern)
+
+        if params["periods"]:
+            def period_body(xc, pslices):
+                for j, kind in enumerate(cfg.pattern):
+                    xc = self._layer_train(pslices[j], xc, kind, positions,
+                                           enc)
+                return xc, None
+
+            if cfg.remat_policy == "save_boundaries":
+                policy = jax.checkpoint_policies.save_only_these_names(
+                    "mixer_out", "mlp_out")
+            elif cfg.remat_policy == "save_dots":
+                # save every matmul output: backward recomputes only
+                # elementwise chains -- no matmul/collective re-execution
+                policy = jax.checkpoint_policies.dots_saveable
+            else:
+                policy = jax.checkpoint_policies.nothing_saveable
+            body = jax.checkpoint(period_body, policy=policy)
+            x, _ = jax.lax.scan(body, x, tuple(params["periods"]))
+
+        for r, p in enumerate(params["remainder"]):
+            x = self._layer_train(p, x, cfg.pattern[r % len(cfg.pattern)],
+                                  positions, enc)
+        return x
+
+    def _embed(self, params, batch):
+        cfg = self.cfg
+        if cfg.embed_input == "tokens":
+            x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        else:
+            x = batch["embeds"]
+        return self._constrain_act(x.astype(cfg.cdtype))
+
+    def logits_fn(self, params, batch):
+        cfg = self.cfg
+        x = self._hidden_fn(params, batch)
+        logits = (x @ params["head"].astype(cfg.cdtype)).astype(jnp.float32)
+        return logits
+
+    def _hidden_fn(self, params, batch):
+        """Backbone forward up to (and including) the final norm."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        B, S = x.shape[:2]
+        positions = jnp.arange(S)
+        enc = batch.get("encoder") if isinstance(batch, dict) else None
+        if enc is not None:
+            enc = enc.astype(cfg.cdtype)
+        x = self._backbone_train(params, x, positions, enc)
+        return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    def train_loss(self, params, batch):
+        cfg = self.cfg
+        x = self._hidden_fn(params, batch)
+        labels = batch["labels"]
+        head = params["head"]
+        B, S = labels.shape
+        C = cfg.loss_chunk
+
+        def chunk_nll(xc, lc):
+            logits = (xc @ head.astype(cfg.cdtype)).astype(jnp.float32)
+            logz = jax.scipy.special.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, lc[..., None],
+                                       axis=-1)[..., 0]
+            return jnp.sum(logz - gold)
+
+        if not C or S <= C or S % C:
+            return chunk_nll(x, labels) / (B * S)
+
+        # Chunked cross entropy: the (B, C, vocab) fp32 logits exist for
+        # one chunk at a time; nothing_saveable makes the backward
+        # recompute them per chunk instead of saving every chunk's logits
+        # (which would re-materialize the full logits tensor).
+        def body(acc, i):
+            xc = jax.lax.dynamic_slice_in_dim(x, i * C, C, axis=1)
+            lc = jax.lax.dynamic_slice_in_dim(labels, i * C, C, axis=1)
+            return acc + chunk_nll(xc, lc), None
+
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                                jnp.arange(S // C))
+        return total / (B * S)
+
+    # ---- caches ----
+    def _cache_len(self, kind, cache_len):
+        cfg = self.cfg
+        if kind == ATTN and cfg.swa_window is not None:
+            return min(cache_len, cfg.swa_window)
+        if kind == LOCAL:
+            return min(cache_len, cfg.local_window)
+        if kind == XATTN:
+            return max(cfg.encoder_len, 1)
+        return cache_len
+
+    def init_cache(self, batch_size, cache_len, *, n_layers, kind):
+        """Zero cache subtree for ``n_layers`` stacked layers of ``kind``."""
+        cfg = self.cfg
+        B, n = batch_size, n_layers
+        cdt = cfg.cdtype
+        if kind in (ATTN, LOCAL, XATTN):
+            L = self._cache_len(kind, cache_len)
+            kv = (n, B, L, cfg.n_kv, cfg.hd)
+            if cfg.kv_cache_dtype == "int8" and kind != XATTN:
+                return {"k": jnp.zeros(kv, jnp.int8),
+                        "v": jnp.zeros(kv, jnp.int8),
+                        "k_scale": jnp.zeros(kv[:-1], jnp.float32),
+                        "v_scale": jnp.zeros(kv[:-1], jnp.float32)}
+            return {"k": jnp.zeros(kv, cdt), "v": jnp.zeros(kv, cdt)}
+        if kind == RWKV:
+            H, D = cfg.rwkv_heads, cfg.rwkv_head_dim
+            return {"state": jnp.zeros((n, B, H, D, D), jnp.float32),
+                    "x_tm": jnp.zeros((n, B, cfg.d_model), cdt),
+                    "x_cm": jnp.zeros((n, B, cfg.d_model), cdt)}
+        if kind == RGLRU:
+            return {"h": jnp.zeros((n, B, cfg.d_model), jnp.float32)}
+        raise ValueError(kind)
+
+    def make_cache(self, batch_size, cache_len):
+        cfg = self.cfg
+        n_full, n_rem = cfg.n_periods()
+        cache = {"pos": jnp.zeros((), jnp.int32)}
+        cache["periods"] = [
+            self.init_cache(batch_size, cache_len, n_layers=n_full, kind=k)
+            for k in cfg.pattern] if n_full else []
+        cache["remainder"] = [
+            self.init_cache(batch_size, cache_len, n_layers=1,
+                            kind=cfg.pattern[r % len(cfg.pattern)])
+            for r in range(n_rem)]
+        return cache
+
+    # ---- prefill ----
+    def _layer_prefill(self, p, x, kind, positions, cache_len, enc=None):
+        """Like _layer_train but also returns this layer's cache entry."""
+        cfg = self.cfg
+        cdt = cfg.cdtype
+        B, S, dm = x.shape
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        if kind == RWKV:
+            mix, (x_tm, state) = rwkv_time_mix(p["mixer"], h, cfg)
+            x = x + mix
+            h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+            out, x_cm = rwkv_channel_mix(p["mlp"], h2, cfg)
+            x = self._constrain_act(x + out)
+            return x, {"state": state, "x_tm": x_tm.astype(cdt),
+                       "x_cm": x_cm.astype(cdt)}
+        if kind == RGLRU:
+            mix, hstate = rglru_block(p["mixer"], h, cfg)
+            cache = {"h": hstate}
+            x = x + mix
+        else:
+            H, KV, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+            src = enc if kind == XATTN else h
+            Skv = src.shape[1]
+            k = (src @ p["mixer"]["wk"].astype(cdt)).reshape(B, Skv, KV, hd)
+            v = (src @ p["mixer"]["wv"].astype(cdt)).reshape(B, Skv, KV, hd)
+            q = (h @ p["mixer"]["wq"].astype(cdt)).reshape(B, S, H, hd)
+            if cfg.qk_norm:
+                q = head_rms_norm(q, p["mixer"]["q_norm"], cfg.norm_eps)
+                k = head_rms_norm(k, p["mixer"]["k_norm"], cfg.norm_eps)
+            attn = (chunked_attention if cfg.attn_impl == "chunked"
+                    else full_attention)
+            if kind != XATTN:
+                q = apply_rope(q, positions, cfg.rope_theta)
+                k = apply_rope(k, positions, cfg.rope_theta)
+                window = (cfg.swa_window if kind == ATTN else cfg.local_window)
+                out = attn(q, k, v, causal=True, window=window)
+            else:
+                out = attn(q, k, v, causal=False)
+            L = self._cache_len(kind, cache_len)
+            if kind == XATTN:
+                ck, cv = k, v                       # static encoder cache
+            elif L >= Skv:
+                pad = [(0, 0), (0, L - Skv), (0, 0), (0, 0)]
+                ck, cv = jnp.pad(k, pad), jnp.pad(v, pad)
+            else:
+                # ring buffer: keep the last L, placed at slot pos % L
+                ck, cv = k[:, -L:], v[:, -L:]
+                shift = (S % L)
+                ck = jnp.roll(ck, shift, axis=1)
+                cv = jnp.roll(cv, shift, axis=1)
+            if kind != XATTN:
+                if cfg.kv_cache_dtype == "int8":
+                    ck, sk = _kv_quant(ck)
+                    cv, sv = _kv_quant(cv)
+                    cache = {"k": self._constrain_kv(ck),
+                             "v": self._constrain_kv(cv),
+                             "k_scale": self._constrain_kv(sk),
+                             "v_scale": self._constrain_kv(sv)}
+                else:
+                    cache = {"k": self._constrain_kv(ck),
+                             "v": self._constrain_kv(cv)}
+            else:
+                cache = {"k": ck, "v": cv}
+            x = x + out.reshape(B, S, H * hd) @ p["mixer"]["wo"].astype(cdt)
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = self._constrain_act(x + self._mlp(p["mlp"], h2, kind))
+        return x, cache
+
+    def prefill(self, params, batch, cache_len):
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        B, S = x.shape[:2]
+        positions = jnp.arange(S)
+        enc = batch.get("encoder") if isinstance(batch, dict) else None
+        if enc is not None:
+            enc = enc.astype(cfg.cdtype)
+
+        caches_p = []
+        if params["periods"]:
+            def body(xc, pslices):
+                ycaches = []
+                for j, kind in enumerate(cfg.pattern):
+                    xc, c = self._layer_prefill(pslices[j], xc, kind,
+                                                positions, cache_len, enc)
+                    ycaches.append(c)
+                return xc, tuple(ycaches)
+
+            x, ys = jax.lax.scan(body, x, tuple(params["periods"]))
+            # ys: tuple (per pattern pos) of stacked cache trees, but the
+            # per-layer dicts come back WITHOUT the leading layer axis in
+            # init_cache layout -- scan already stacked them (n_full, ...)
+            caches_p = list(ys)
+
+        caches_r = []
+        for r, p in enumerate(params["remainder"]):
+            x, c = self._layer_prefill(p, x, cfg.pattern[r % len(cfg.pattern)],
+                                       positions, cache_len, enc)
+            caches_r.append(jax.tree.map(lambda a: a[None], c))
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = (x[:, -1:] @ params["head"].astype(cfg.cdtype)
+                  ).astype(jnp.float32)
+        cache = {"pos": jnp.asarray(S, jnp.int32), "periods": list(caches_p),
+                 "remainder": caches_r}
+        return logits, cache
+
+    # ---- decode ----
+    def _layer_decode(self, p, x, cache, kind, pos):
+        """x: (B,1,dm); cache: this layer's subtree (no leading layer axis)."""
+        cfg = self.cfg
+        cdt = cfg.cdtype
+        B = x.shape[0]
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        if kind == RWKV:
+            mix, (x_tm, state) = rwkv_time_mix(
+                p["mixer"], h, cfg, x_last=cache["x_tm"],
+                state=cache["state"])
+            x = x + mix
+            h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+            out, x_cm = rwkv_channel_mix(p["mlp"], h2, cfg,
+                                         x_last=cache["x_cm"])
+            x = x + out
+            return x, {"state": state, "x_tm": x_tm.astype(cdt),
+                       "x_cm": x_cm.astype(cdt)}
+        if kind == RGLRU:
+            mix, hstate = rglru_decode(p["mixer"], h, cfg, state=cache["h"])
+            new_cache = {"h": hstate}
+            x = x + mix
+        else:
+            H, KV, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+            q = (h @ p["mixer"]["wq"].astype(cdt)).reshape(B, 1, H, hd)
+            if kind == XATTN:
+                if cfg.qk_norm:
+                    q = head_rms_norm(q, p["mixer"]["q_norm"], cfg.norm_eps)
+                out = decode_attention(q, cache["k"], cache["v"],
+                                       jnp.asarray(cfg.encoder_len - 1))
+                new_cache = cache
+            else:
+                k = (h @ p["mixer"]["wk"].astype(cdt)).reshape(B, 1, KV, hd)
+                v = (h @ p["mixer"]["wv"].astype(cdt)).reshape(B, 1, KV, hd)
+                if cfg.qk_norm:
+                    q = head_rms_norm(q, p["mixer"]["q_norm"], cfg.norm_eps)
+                    k = head_rms_norm(k, p["mixer"]["k_norm"], cfg.norm_eps)
+                q = apply_rope(q, pos[None], cfg.rope_theta)
+                k = apply_rope(k, pos[None], cfg.rope_theta)
+                L = cache["k"].shape[1]
+                slot = pos % L
+                # One-hot masked write instead of dynamic_update_slice:
+                # elementwise over the (possibly length-sharded) cache, so
+                # a sequence-parallel cache needs no cross-shard traffic
+                # for the write (a traced-index DUS on a sharded dim makes
+                # GSPMD rematerialize the whole cache).
+                hot = (jnp.arange(L) == slot)[None, :, None, None]
+                if cfg.kv_cache_dtype == "int8":
+                    qk, sk1 = _kv_quant(k)
+                    qv, sv1 = _kv_quant(v)
+                    ck = self._constrain_kv(jnp.where(hot, qk, cache["k"]))
+                    cv = self._constrain_kv(jnp.where(hot, qv, cache["v"]))
+                    sk = self._constrain_kv(
+                        jnp.where(hot[..., 0], sk1, cache["k_scale"]))
+                    sv = self._constrain_kv(
+                        jnp.where(hot[..., 0], sv1, cache["v_scale"]))
+                    new_cache = {"k": ck, "v": cv,
+                                 "k_scale": sk, "v_scale": sv}
+                    ak = _kv_dequant(ck, sk, cdt)
+                    av = _kv_dequant(cv, sv, cdt)
+                else:
+                    ck = self._constrain_kv(jnp.where(hot, k, cache["k"]))
+                    cv = self._constrain_kv(jnp.where(hot, v, cache["v"]))
+                    new_cache = {"k": ck, "v": cv}
+                    ak, av = ck, cv
+                # with a ring buffer every slot is valid once filled; the
+                # per-slot positional mask only matters while pos < L.
+                out = decode_attention(q, ak, av,
+                                       jnp.minimum(pos, L - 1),
+                                       window=None)
+            x = x + out.reshape(B, 1, H * hd) @ p["mixer"]["wo"].astype(cdt)
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + self._mlp(p["mlp"], h2, kind)
+        return x, new_cache
+
+    def decode_step(self, params, cache, batch):
+        """batch: {"tokens": (B,1)} (or {"embeds": (B,1,dm)}).
+
+        Returns (logits (B,1,V), new cache).
+        """
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        pos = cache["pos"]
+
+        new_periods = []
+        if params["periods"]:
+            # The cache rides in the scan CARRY and is updated with
+            # dynamic_update_index instead of being re-emitted through ys
+            # stacking: while-loop carries alias their input buffer, so
+            # the donated decode cache is updated in place rather than
+            # double-buffered (halves serve_step memory; EXPERIMENTS.md
+            # §Perf "decode cache aliasing").
+            n_full = jax.tree.leaves(params["periods"][0])[0].shape[0]
+
+            def body(carry, inp):
+                xc, caches = carry
+                i, pslices = inp
+                caches = list(caches)
+                for j, kind in enumerate(cfg.pattern):
+                    csub = jax.tree.map(
+                        lambda a: jax.lax.dynamic_index_in_dim(
+                            a, i, 0, keepdims=False), caches[j])
+                    xc, c = self._layer_decode(pslices[j], xc, csub,
+                                               kind, pos)
+                    caches[j] = jax.tree.map(
+                        lambda full, new:
+                        jax.lax.dynamic_update_index_in_dim(full, new, i, 0),
+                        caches[j], c)
+                return (xc, tuple(caches)), None
+
+            (x, new_caches), _ = jax.lax.scan(
+                body, (x, tuple(cache["periods"])),
+                (jnp.arange(n_full), tuple(params["periods"])))
+            new_periods = list(new_caches)
+
+        new_rem = []
+        for r, p in enumerate(params["remainder"]):
+            csub = jax.tree.map(lambda a: a[0], cache["remainder"][r])
+            x, c = self._layer_decode(p, x, csub,
+                                      cfg.pattern[r % len(cfg.pattern)], pos)
+            new_rem.append(jax.tree.map(lambda a: a[None], c))
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = (x @ params["head"].astype(cfg.cdtype)).astype(jnp.float32)
+        new_cache = {"pos": pos + 1, "periods": new_periods,
+                     "remainder": new_rem}
+        return logits, new_cache

@@ -1,0 +1,3 @@
+from . import compression, radisa_svrg
+from .adamw import AdamWConfig, global_norm, init as adamw_init, update as adamw_update
+from .schedules import constant, inverse_sqrt, warmup_cosine

@@ -1,0 +1,27 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak, warmup_steps, total_steps, floor=0.1):
+    def lr(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = peak * s / max(warmup_steps, 1)
+        frac = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(s < warmup_steps, warm, cos)
+    return lr
+
+
+def inverse_sqrt(gamma):
+    """The paper's RADiSA step size: eta_t = gamma / (1 + sqrt(t - 1))."""
+    def lr(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        return gamma / (1.0 + jnp.sqrt(jnp.maximum(s - 1.0, 0.0)))
+    return lr
+
+
+def constant(v):
+    return lambda step: v

@@ -1,0 +1,2 @@
+from .hlo import collective_bytes_from_hlo
+from .model import HW_V5E, roofline_terms, model_flops

@@ -1,0 +1,74 @@
+"""Parse collective traffic out of (post-optimization) HLO text.
+
+``cost_analysis()`` does not report collective bytes, so we scan the HLO
+for all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instructions and sum their operand/result sizes.
+
+Per-op "bytes on the wire per participating device" model (ring/bidir
+approximations, k -> inf):
+    all-reduce(N)          ~ 2 N          (reduce-scatter + all-gather)
+    all-gather(out N)      ~ N
+    reduce-scatter(in N)   ~ N
+    all-to-all(N)          ~ N
+    collective-permute(N)  ~ N
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", )
+
+_WIRE_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sums wire bytes per collective kind from HLO text (one device's
+    program under SPMD: shapes are per-shard)."""
+    per_kind_bytes = defaultdict(float)
+    per_kind_count = defaultdict(int)
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        if "-done(" in line:
+            continue   # async pair: count the -start only
+        b = _type_bytes(type_str)
+        per_kind_bytes[kind] += b * _WIRE_FACTOR[kind]
+        per_kind_count[kind] += 1
+    return {
+        "total_bytes": float(sum(per_kind_bytes.values())),
+        "by_kind_bytes": dict(per_kind_bytes),
+        "by_kind_count": dict(per_kind_count),
+    }

@@ -1,0 +1,100 @@
+"""Roofline model for TPU v5e-like hardware.
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = wire_bytes_per_device / (links * link_bw)
+
+All three in seconds for ONE step; the dominant term is the bottleneck
+and its value is the step-time lower bound.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float        # bf16 FLOP/s per chip
+    hbm_bw: float            # bytes/s per chip
+    ici_bw: float            # bytes/s per link
+    ici_links: int           # usable links per chip (2D torus: 4)
+
+
+HW_V5E = Hardware("tpu-v5e", peak_flops=197e12, hbm_bw=819e9,
+                  ici_bw=50e9, ici_links=4)
+
+
+def roofline_terms(flops, bytes_accessed, wire_bytes, hw: Hardware = HW_V5E):
+    t_c = flops / hw.peak_flops
+    t_m = bytes_accessed / hw.hbm_bw
+    t_x = wire_bytes / (hw.ici_bw * hw.ici_links)
+    dominant = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+                   key=lambda kv: kv[1])
+    return {
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "collective_s": t_x,
+        "dominant": dominant[0],
+        "bound_s": dominant[1],
+    }
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful model FLOPs for the whole step (6*N*D dense / 6*N_active*D).
+
+    N counts backbone + head parameters actually touched per token; for
+    decode steps D = batch (one token per sequence), forward only (2ND).
+    """
+    dm, L, V = cfg.d_model, cfg.n_layers, cfg.vocab
+    hd, H, KV = cfg.hd, cfg.n_heads, cfg.n_kv
+
+    per_layer = 0
+    from ..models.config import ATTN, LOCAL, RGLRU, RWKV, XATTN
+    n_full, n_rem = cfg.n_periods()
+    counts = {}
+    for j, k in enumerate(cfg.pattern):
+        counts[k] = counts.get(k, 0) + n_full + (1 if j < n_rem else 0)
+
+    attn_params = dm * hd * (H + 2 * KV) + H * hd * dm
+    rwkv_params = 6 * dm * dm
+    rglru_params = 4 * dm * dm
+    mixer_params = (counts.get(ATTN, 0) + counts.get(LOCAL, 0)
+                    + counts.get(XATTN, 0)) * attn_params \
+        + counts.get(RWKV, 0) * rwkv_params \
+        + counts.get(RGLRU, 0) * rglru_params
+
+    if cfg.moe is not None:
+        active = cfg.moe.top_k
+        mlp_params = L * (3 * dm * cfg.d_ff * active + dm * cfg.moe.n_experts)
+    elif RWKV in cfg.pattern:
+        mlp_params = L * 2 * dm * cfg.d_ff
+    else:
+        mlp_params = L * 3 * dm * cfg.d_ff
+
+    n_active = mixer_params + mlp_params + dm * V \
+        + (dm * V if cfg.embed_input == "tokens" else 0) * 0  # embed is gather
+
+    tokens = shape.batch * (1 if shape.kind == "decode" else shape.seq)
+    mult = 6 if shape.kind == "train" else 2
+    flops = mult * n_active * tokens
+
+    # attention score/value FLOPs (the quadratic term, not in 6ND)
+    if shape.kind != "decode":
+        S = shape.seq
+        for k, cnt in counts.items():
+            if k == ATTN:
+                win = cfg.swa_window or S
+                eff = min(win, S)
+                pairs = S * eff - (eff * (eff - 1)) // 2 if eff < S else \
+                    S * (S + 1) // 2
+            elif k == LOCAL:
+                eff = min(cfg.local_window, S)
+                pairs = S * eff - (eff * (eff - 1)) // 2 if eff < S else \
+                    S * (S + 1) // 2
+            elif k == XATTN:
+                pairs = S * cfg.encoder_len
+            else:
+                continue
+            flops += mult // 2 * 2 * 2 * pairs * H * hd * shape.batch
+    return float(flops)

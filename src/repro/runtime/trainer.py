@@ -1,0 +1,147 @@
+"""Fault-tolerant training loop.
+
+Production behaviors exercised here (and tested in tests/test_runtime.py):
+  * periodic async checkpointing (atomic, keep-N);
+  * NaN/Inf guard: a bad step triggers rollback to the last checkpoint and
+    skips ahead past the offending batch (deterministic pipeline => the
+    same data is never retried blindly);
+  * preemption: SIGTERM/SIGINT request a synchronous save at the next step
+    boundary before exiting (standard TPU-pod eviction contract);
+  * straggler surveillance: per-step wall times feed an EMA; steps slower
+    than ``straggler_factor`` x EMA are logged with their step index
+    (on a real pod this is where you fire the re-shard / hot-spare swap);
+  * elastic restart: ``Trainer.restore`` re-shards the checkpoint onto the
+    CURRENT mesh (chip count can change between runs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import signal
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import CheckpointManager
+
+log = logging.getLogger("repro.trainer")
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    ckpt_dir: str
+    ckpt_every: int = 100
+    keep_n: int = 3
+    async_ckpt: bool = True
+    straggler_factor: float = 2.0
+    max_rollbacks: int = 3
+    log_every: int = 10
+
+
+class Trainer:
+    def __init__(self, cfg: TrainerConfig, step_fn: Callable,
+                 make_batch: Callable[[int], Any],
+                 params, opt_state, start_step: int = 0):
+        self.cfg = cfg
+        self.step_fn = step_fn
+        self.make_batch = make_batch
+        self.params = params
+        self.opt_state = opt_state
+        self.step = start_step
+        self.ckpt = CheckpointManager(cfg.ckpt_dir, keep_n=cfg.keep_n)
+        self._preempted = False
+        self._rollbacks = 0
+        self._ema = None
+        self.stragglers: list[int] = []
+        self.history: list[Dict[str, float]] = []
+
+    # ---- fault tolerance ----
+    def _install_signals(self):
+        def handler(signum, frame):
+            log.warning("preemption signal %s: will checkpoint and stop",
+                        signum)
+            self._preempted = True
+        try:
+            signal.signal(signal.SIGTERM, handler)
+            signal.signal(signal.SIGINT, handler)
+        except ValueError:
+            pass   # not on the main thread (tests)
+
+    def _save(self, sync=False):
+        tree = {"params": self.params, "opt": self.opt_state,
+                "step": jnp.asarray(self.step, jnp.int32)}
+        if self.cfg.async_ckpt and not sync:
+            self.ckpt.save_async(self.step, tree)
+        else:
+            self.ckpt.save(self.step, tree)
+
+    def restore(self, shardings=None):
+        like = {"params": self.params, "opt": self.opt_state,
+                "step": jnp.asarray(self.step, jnp.int32)}
+        step, tree = self.ckpt.restore(like, shardings=shardings)
+        self.params, self.opt_state = tree["params"], tree["opt"]
+        self.step = int(tree["step"])
+        return step
+
+    def _rollback(self, bad_step: int):
+        self._rollbacks += 1
+        if self._rollbacks > self.cfg.max_rollbacks:
+            raise RuntimeError(
+                f"aborting: {self._rollbacks} rollbacks (NaN storm)")
+        self.ckpt.wait()
+        restored = self.restore()
+        # skip past the offending batch: replay from the checkpoint but
+        # never feed the bad step's batch again
+        log.warning("rolled back to step %d after NaN at step %d; "
+                    "bad batch will be skipped", restored, bad_step)
+        self.skip_steps = {bad_step}
+
+    # ---- main loop ----
+    def run(self, num_steps: int):
+        self._install_signals()
+        self.skip_steps: set[int] = set()
+        end = self.step + num_steps
+        while self.step < end and not self._preempted:
+            s = self.step
+            if s in self.skip_steps:
+                self.step += 1
+                continue
+            batch = self.make_batch(s)
+            t0 = time.perf_counter()
+            params, opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+
+            if not np.isfinite(loss):
+                log.error("non-finite loss %.3g at step %d", loss, s)
+                self._rollback(s)
+                continue
+
+            self.params, self.opt_state = params, opt_state
+            self.step += 1
+            self._track_time(s, dt)
+            self.history.append({"step": s, "loss": loss, "time_s": dt,
+                                 **{k: float(v) for k, v in metrics.items()
+                                    if k != "loss"}})
+            if self.step % self.cfg.log_every == 0:
+                log.info("step %d loss %.4f (%.0f ms)", self.step, loss,
+                         dt * 1e3)
+            if self.step % self.cfg.ckpt_every == 0:
+                self._save()
+
+        self.ckpt.wait()
+        self._save(sync=True)
+        return self.history
+
+    def _track_time(self, step: int, dt: float):
+        if self._ema is None:
+            self._ema = dt
+        if dt > self.cfg.straggler_factor * self._ema and step > 2:
+            self.stragglers.append(step)
+            log.warning("straggler step %d: %.0f ms (ema %.0f ms)",
+                        step, dt * 1e3, self._ema * 1e3)
+        self._ema = 0.9 * self._ema + 0.1 * dt

@@ -1,0 +1,2 @@
+from .rules import (Rules, batch_axes, fsdp_axes, logical_to_spec,
+                    spec_tree, constrain)

@@ -1,0 +1,104 @@
+"""Logical-axis -> PartitionSpec rules (doubly distributed sharding).
+
+The paper's P x Q scheme generalized: the *observation* dimensions (batch,
+dual variables) shard over ("pod", "data"); the *feature* dimensions
+(vocab, heads, ff, experts, model-parallel contractions) shard over
+"model"; remaining parameter dims are FSDP-sharded over ("pod", "data")
+for ZeRO-3 style memory scaling.  Divisibility-aware: a rule silently
+drops mesh axes that do not divide the dimension (e.g. mixtral's 8 experts
+on a 16-wide model axis fall back to replication and the per-expert ff dim
+carries the model sharding instead).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def batch_axes(mesh) -> Tuple[str, ...]:
+    """Mesh axes the batch/observation dimension shards over."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def fsdp_axes(mesh) -> Tuple[str, ...]:
+    return batch_axes(mesh)
+
+
+def default_rules(mesh) -> Dict[str, Tuple[str, ...]]:
+    b = batch_axes(mesh)
+    return {
+        "batch": b,
+        "fsdp": b,
+        "vocab": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "ff": ("model",),
+        "experts": ("model",),
+        "expert_ff": ("model",),   # used when `experts` falls back
+        "kv_len": ("model",),      # sequence-parallel KV cache (decode)
+        "model_dim": (),           # activations keep d_model unsharded
+        "seq": (),
+        None: (),
+    }
+
+
+Rules = Dict[str, Tuple[str, ...]]
+
+
+def _axes_fit(dim: int, axes: Sequence[str], mesh) -> Tuple[str, ...]:
+    """Largest prefix of ``axes`` whose total size divides ``dim``."""
+    out = []
+    prod = 1
+    for a in axes:
+        size = mesh.shape[a]
+        if dim % (prod * size) == 0:
+            out.append(a)
+            prod *= size
+        else:
+            break
+    return tuple(out)
+
+
+def logical_to_spec(shape: Sequence[int], logical: Sequence[Optional[str]],
+                    mesh, rules: Optional[Rules] = None) -> P:
+    """Map per-dimension logical names to a PartitionSpec.
+
+    Divisibility fallback per dim; also guarantees no mesh axis is used
+    twice in one spec (first dim wins).
+    """
+    rules = rules or default_rules(mesh)
+    used = set()
+    parts = []
+    for dim, name in zip(shape, logical):
+        axes = _axes_fit(dim, [a for a in rules.get(name, ()) if a not in used],
+                         mesh)
+        for a in axes:
+            used.add(a)
+        parts.append(axes if len(axes) > 1 else (axes[0] if axes else None))
+    return P(*parts)
+
+
+def _is_logical_leaf(x):
+    return isinstance(x, tuple) and (len(x) == 0 or all(
+        isinstance(e, (str, type(None))) for e in x))
+
+
+def spec_tree(logical_tree, param_tree, mesh, rules: Optional[Rules] = None):
+    """Build a PartitionSpec pytree parallel to ``param_tree``.
+
+    ``logical_tree`` mirrors the structure with tuples of logical axis names
+    (or None) per array dimension (a tuple-of-strings leaf).
+    """
+    return jax.tree.map(
+        lambda l, p: logical_to_spec(p.shape, l, mesh, rules),
+        logical_tree, param_tree, is_leaf=_is_logical_leaf)
+
+
+def constrain(x, mesh, *logical, rules: Optional[Rules] = None):
+    """with_sharding_constraint by logical axis names."""
+    spec = logical_to_spec(x.shape, logical, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests run on ONE device (the dry-run sets its own 512-device flag in a
+# subprocess); make sure src/ is importable without installation.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

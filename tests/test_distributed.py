@@ -1,0 +1,26 @@
+"""Distributed engines == simulated engines, and dry-run smoke, on 8
+forced host devices (subprocesses: the device count must be fixed before
+jax initializes)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+
+
+def _run(script, timeout=600):
+    return subprocess.run([sys.executable, script], env=ENV, timeout=timeout,
+                          capture_output=True, text=True, cwd=ROOT)
+
+
+def test_shard_map_engines_match_simulated():
+    r = _run(os.path.join(ROOT, "tests", "helpers", "dist_equiv.py"))
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_dryrun_small_mesh():
+    r = _run(os.path.join(ROOT, "tests", "helpers", "dryrun_small.py"))
+    assert r.returncode == 0, r.stdout + r.stderr

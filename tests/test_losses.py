@@ -1,0 +1,72 @@
+"""Property tests for the loss/conjugate machinery (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.losses import get_loss
+from repro.core.admm import prox_loss
+
+floats = st.floats(-5.0, 5.0, allow_nan=False)
+labels = st.sampled_from([-1.0, 1.0])
+
+
+@pytest.mark.parametrize("loss_name", ["hinge", "squared", "logistic"])
+@settings(max_examples=60, deadline=None)
+@given(z=floats, y=labels, a=st.floats(0.01, 0.99))
+def test_fenchel_young(loss_name, z, y, a):
+    """f(z) + f*(-alpha) >= -alpha * z on the dual-feasible box."""
+    loss = get_loss(loss_name)
+    alpha = a * y  # feasible for hinge/logistic; any value ok for squared
+    f = float(loss.value(jnp.float32(z), jnp.float32(y)))
+    fstar = float(loss.conj(jnp.float32(alpha), jnp.float32(y)))
+    assert f + fstar >= -alpha * z - 1e-4
+
+
+@pytest.mark.parametrize("loss_name", ["hinge", "squared", "logistic"])
+@settings(max_examples=40, deadline=None)
+@given(v=floats, y=labels, c=st.floats(0.01, 3.0))
+def test_prox_is_minimizer(loss_name, v, y, c):
+    """prox_{c f}(v) beats nearby points on c*f(z) + 0.5 (z-v)^2."""
+    loss = get_loss(loss_name)
+    z = float(prox_loss(loss_name, jnp.float32(v), jnp.float32(y),
+                        jnp.float32(c)))
+    obj = lambda t: c * float(loss.value(jnp.float32(t), jnp.float32(y))) \
+        + 0.5 * (t - v) ** 2
+    base = obj(z)
+    for dz in (-1e-2, 1e-2, -0.3, 0.3):
+        assert base <= obj(z + dz) + 1e-5
+
+
+@pytest.mark.parametrize("loss_name", ["hinge", "squared", "logistic"])
+@settings(max_examples=40, deadline=None)
+@given(y=labels, a=st.floats(0.05, 0.95),
+       zloc=st.floats(-2.0, 2.0),
+       xsq=st.floats(0.1, 10.0))
+def test_sdca_delta_improves_local_objective(loss_name, y, a, zloc, xsq):
+    """The closed-form/Newton delta does not decrease the local dual obj."""
+    loss = get_loss(loss_name)
+    lam, n, Q = 0.5, 50, 2
+    alpha = jnp.float32(a * y)
+    d = loss.sdca_delta(alpha, jnp.float32(xsq), jnp.float32(zloc),
+                        jnp.float32(y), lam, n, Q)
+
+    # evaluate the true local objective used in Algorithm 2 step 3
+    def obj(delta):
+        conj = loss.conj(alpha + delta, jnp.float32(y))
+        return float(-(1.0 / Q) * conj - zloc * delta
+                     - delta ** 2 * xsq / (2 * lam * n))
+
+    assert obj(float(d)) >= obj(0.0) - 1e-4
+
+
+def test_gradients_match_autodiff():
+    for name in ("squared", "logistic"):
+        loss = get_loss(name)
+        zs = jnp.linspace(-3, 3, 25)
+        for y in (-1.0, 1.0):
+            g = loss.grad(zs, y)
+            g_ad = jax.vmap(jax.grad(lambda z: loss.value(z, y)))(zs)
+            np.testing.assert_allclose(np.asarray(g), np.asarray(g_ad),
+                                       rtol=1e-5, atol=1e-6)

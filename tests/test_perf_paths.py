@@ -1,0 +1,114 @@
+"""Equivalence tests for the performance-motivated code paths:
+
+  * chunked cross entropy == full-logits cross entropy (value and grad)
+  * gradient accumulation (lax.scan microbatches) == single-batch step
+  * local_svrg row-then-column slicing (lo=) == pre-sliced sub-block
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.local import local_svrg
+from repro.core.losses import get_loss
+from repro.models import Transformer, reduced
+from repro.launch.steps import make_train_step
+from repro.optim import AdamWConfig
+
+
+def _model_and_batch(loss_chunk, seed=0, batch=8, seq=32):
+    cfg = reduced(get_config("qwen3_1_7b"), loss_chunk=loss_chunk)
+    model = Transformer(cfg)
+    params, _ = model.init(jax.random.PRNGKey(seed))
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed + 1))
+    tokens = jax.random.randint(k1, (batch, seq), 0, cfg.vocab)
+    labels = jax.random.randint(k2, (batch, seq), 0, cfg.vocab)
+    return model, params, {"tokens": tokens, "labels": labels}
+
+
+def test_chunked_loss_matches_full():
+    model_c, params, batch = _model_and_batch(loss_chunk=8)
+    model_f = Transformer(dataclasses.replace(model_c.cfg, loss_chunk=None))
+
+    lc, gc = jax.value_and_grad(model_c.train_loss)(params, batch)
+    lf, gf = jax.value_and_grad(model_f.train_loss)(params, batch)
+    np.testing.assert_allclose(lc, lf, rtol=1e-4)
+    flat_c, flat_f = jax.tree.leaves(gc), jax.tree.leaves(gf)
+    for a, b in zip(flat_c, flat_f):
+        # the chunked backward recomputes logits from bf16 activations
+        # instead of reusing saved fp32 ones -> small recompute noise
+        np.testing.assert_allclose(a, b, rtol=3e-2, atol=3e-4)
+
+
+@pytest.mark.parametrize("accum", [2, 4])
+def test_grad_accumulation_matches_single_batch(accum):
+    model, params, batch = _model_and_batch(loss_chunk=None)
+    opt_cfg = AdamWConfig(lr=1e-3)
+    from repro.optim import adamw_init
+
+    step1 = make_train_step(model, opt_cfg, accum_steps=1)
+    stepN = make_train_step(model, opt_cfg, accum_steps=accum)
+    o1 = adamw_init(params)
+    oN = adamw_init(params)
+    p1, o1, m1 = jax.jit(step1)(params, o1, batch)
+    pN, oN, mN = jax.jit(stepN)(params, oN, batch)
+    np.testing.assert_allclose(m1["loss"], mN["loss"], rtol=1e-4)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(pN)):
+        # accumulation changes the fp summation order of the grads; after
+        # AdamW's sqrt(nu) normalization, elements with ~zero gradient can
+        # flip the sign of their (lr-sized) step, so tolerate a few
+        # lr-scale outliers but require negligible mean drift
+        np.testing.assert_allclose(a, b, rtol=3e-3, atol=2.5e-3)
+        assert float(jnp.mean(jnp.abs(a - b))) < 5e-5
+
+
+def test_local_svrg_lo_matches_presliced():
+    loss = get_loss("hinge")
+    key = jax.random.PRNGKey(3)
+    n_p, m_q, m_sub, lo = 64, 24, 8, 16
+    kx, ky, kr = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (n_p, m_q))
+    y = jnp.sign(jax.random.normal(ky, (n_p,)))
+    mask = jnp.ones((n_p,))
+    w_tilde = jnp.zeros((m_q,))
+    z = x @ w_tilde
+    w_anchor = w_tilde[lo:lo + m_sub]
+    gz = loss.grad(z, y) * mask
+    mu = gz @ x / n_p + 1e-3 * w_tilde
+
+    kwargs = dict(lam=1e-3, L=32, eta=0.05, key=kr)
+    w_a = local_svrg(loss, x[:, lo:lo + m_sub], y, mask, z, w_anchor,
+                     mu[lo:lo + m_sub], **kwargs)
+    w_b = local_svrg(loss, x, y, mask, z, w_anchor, mu[lo:lo + m_sub],
+                     lo=lo, **kwargs)
+    np.testing.assert_allclose(w_a, w_b, rtol=1e-6, atol=1e-7)
+
+
+def test_int8_kv_cache_close_to_bf16():
+    cfg = reduced(get_config("mistral_nemo_12b"))
+    model_b = Transformer(cfg)
+    model_q = Transformer(dataclasses.replace(cfg, kv_cache_dtype="int8"))
+    params, _ = model_b.init(jax.random.PRNGKey(0))
+    B, S, gen = 2, 16, 8
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+
+    outs = {}
+    for name, model in (("bf16", model_b), ("int8", model_q)):
+        logits, cache = jax.jit(
+            lambda p, b: model.prefill(p, b, S + gen))(
+                params, {"tokens": tokens})
+        seq = [logits]
+        step = jax.jit(model.decode_step)
+        for _ in range(gen):
+            nxt = jnp.argmax(seq[-1][:, -1:], axis=-1).astype(jnp.int32)
+            logits, cache = step(params, cache, {"tokens": nxt})
+            seq.append(logits)
+        outs[name] = jnp.concatenate(seq, axis=1)
+
+    # int8 cache adds quantization noise; logits must stay close and the
+    # greedy decode path identical for this toy problem
+    np.testing.assert_allclose(outs["int8"], outs["bf16"],
+                               rtol=0.1, atol=0.15)

@@ -1,0 +1,58 @@
+"""Sharding rules: divisibility fallbacks, axis reuse, spec trees."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.rules import logical_to_spec, spec_tree
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+    @property
+    def axis_names(self):
+        return tuple(self.shape)
+
+
+MESH = FakeMesh({"pod": 2, "data": 16, "model": 16})
+MESH1 = FakeMesh({"data": 16, "model": 16})
+
+
+def test_basic_rules():
+    assert logical_to_spec((4096, 24576), ("fsdp", "ff"), MESH1) == \
+        P("data", "model")
+    assert logical_to_spec((49152, 6144), ("vocab", "fsdp"), MESH1) == \
+        P("model", "data")
+
+
+def test_divisibility_fallback():
+    # 8 experts on a 16-way model axis -> replicate experts
+    spec = logical_to_spec((8, 4096, 14336), ("experts", "fsdp", "ff"), MESH1)
+    assert spec == P(None, "data", "model")
+    # 64 experts divide -> expert parallelism; ff falls back (axis used)
+    spec = logical_to_spec((64, 2048, 1408), ("experts", "fsdp", "ff"), MESH1)
+    assert spec == P("model", "data", None)
+
+
+def test_multi_axis_fsdp_prefix():
+    # pod*data = 32 divides 2048 -> both axes used
+    assert logical_to_spec((2048,), ("fsdp",), MESH) == P(("pod", "data"))
+    # 48 % 2 == 0 but 48 % 32 != 0 -> only the pod prefix
+    assert logical_to_spec((48,), ("fsdp",), MESH) == P("pod")
+    # odd dim -> no axis
+    assert logical_to_spec((47,), ("fsdp",), MESH) == P(None)
+
+
+def test_axis_never_reused():
+    spec = logical_to_spec((16, 16), ("heads", "kv_heads"), MESH1)
+    assert spec == P("model", None)
+
+
+def test_spec_tree_parallel_structure():
+    params = {"a": jnp.zeros((32, 64)), "b": [jnp.zeros((16,))]}
+    logical = {"a": ("fsdp", "ff"), "b": [("heads",)]}
+    tree = spec_tree(logical, params, MESH1)
+    assert tree["a"] == P("data", "model")
+    assert tree["b"][0] == P("model")
