@@ -1,0 +1,132 @@
+"""Serving benchmark: continuous batching vs the seed static-batch loop.
+
+Drives a mixed-length request trace (8-128 token prompts, varied
+generation lengths) through ``repro.serve.InferenceEngine`` and through
+the seed-era static loop (``repro.launch.serve.static_batch_generate``),
+and reports aggregate tokens/s plus p50/p99 request latency for each.
+Both paths get one untimed warmup pass over the same trace so the
+numbers compare steady-state throughput, not XLA compile time.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--requests 16] \
+        [--slots 4] [--out BENCH_serve.json]
+
+Emits ``BENCH_serve.json`` (repo root by default) with both summaries
+and the speedup ratio.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.launch.serve import build_trace, static_batch_generate
+from repro.models import Transformer, reduced
+from repro.serve import (EngineConfig, InferenceEngine, SamplingParams,
+                         ServeMetrics, percentiles)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def bench_trace(cfg, n_requests, seed=0, rid_base=0):
+    """Mixed-length trace (the CLI's builder): prompts 8-128 tokens,
+    8-128 generated, greedy."""
+    return build_trace(cfg, n_requests, 8, 128, 8, 128, SamplingParams(),
+                       seed=seed, rid_base=rid_base)
+
+
+def run_static(model, params, reqs, batch_size):
+    """The seed loop, chunk by chunk, recording per-request latency
+    (every request arrives at t0; its latency is its batch's finish)."""
+    lat = []
+    n_tokens = 0
+    t0 = time.perf_counter()
+    for lo in range(0, len(reqs), batch_size):
+        chunk = reqs[lo: lo + batch_size]
+        out = static_batch_generate(model, params, chunk, batch_size)
+        t = time.perf_counter() - t0
+        lat.extend([t] * len(chunk))
+        n_tokens += sum(len(v) for v in out.values())
+    elapsed = time.perf_counter() - t0
+    return {"requests": len(reqs), "generated_tokens": n_tokens,
+            "elapsed_s": elapsed, "tokens_per_sec": n_tokens / elapsed,
+            "latency_s": percentiles(lat)}
+
+
+def run_engine(engine, reqs):
+    engine.metrics = ServeMetrics()      # count only this pass
+    out = engine.run(reqs)
+    s = engine.metrics.summary()
+    missing = [r.rid for r in reqs if r.rid not in out]
+    assert not missing, f"requests rejected or unfinished: {missing}"
+    return {"requests": s["requests_finished"],
+            "generated_tokens": s["generated_tokens"],
+            "elapsed_s": s["elapsed_s"],
+            "tokens_per_sec": s["tokens_per_sec"],
+            "ttft_s": s["ttft_s"], "latency_s": s["latency_s"],
+            "decode_steps": s["decode_steps"],
+            "preemptions": s["preemptions"]}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=os.path.join(ROOT, "BENCH_serve.json"))
+    args = ap.parse_args(argv)
+
+    cfg = reduced(get_config(args.arch))
+    model = Transformer(cfg)
+    params = jax.jit(lambda k: model.init(k)[0])(jax.random.PRNGKey(0))
+
+    max_seq = 128 + 128
+    ecfg = EngineConfig(
+        max_slots=args.slots, page_size=args.page_size,
+        num_pages=max(64, args.slots * ((max_seq // args.page_size) + 1)),
+        max_seq_len=max_seq)
+    engine = InferenceEngine(model, params, ecfg)
+
+    if args.requests > ecfg.max_queue:
+        ap.error(f"--requests > engine max_queue ({ecfg.max_queue})")
+    trace = bench_trace(cfg, args.requests, seed=args.seed)
+    warmup = bench_trace(cfg, args.requests, seed=args.seed,
+                         rid_base=10_000)   # same shapes, fresh rids
+
+    # warmup: compile every prefill bucket + the decode step on each path
+    static_batch_generate(model, params, warmup, args.slots)
+    engine.run(warmup)
+
+    static = run_static(model, params, trace, args.slots)
+    served = run_engine(engine, trace)
+
+    result = {
+        "arch": args.arch, "requests": args.requests, "slots": args.slots,
+        "trace": {"prompt_len": [len(r.prompt) for r in trace],
+                  "max_new_tokens": [r.max_new_tokens for r in trace]},
+        "static": static, "engine": served,
+        "speedup_tokens_per_sec":
+            served["tokens_per_sec"] / static["tokens_per_sec"],
+    }
+    with open(args.out, "w") as fh:
+        json.dump(result, fh, indent=1)
+
+    print(f"static  : {static['tokens_per_sec']:8.1f} tok/s  "
+          f"p50 {static['latency_s']['p50']:.3f}s "
+          f"p99 {static['latency_s']['p99']:.3f}s")
+    print(f"engine  : {served['tokens_per_sec']:8.1f} tok/s  "
+          f"p50 {served['latency_s']['p50']:.3f}s "
+          f"p99 {served['latency_s']['p99']:.3f}s "
+          f"(ttft p50 {served['ttft_s']['p50']:.3f}s)")
+    print(f"speedup : {result['speedup_tokens_per_sec']:.2f}x  "
+          f"-> {args.out}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,6 @@
-"""Batched serving example: prefill a batch of prompts, decode with a KV
-cache (ring buffer for SWA archs), report per-token latency.
+"""Serving example: a mixed-length request trace through the
+continuous-batching engine (paged KV cache, per-request sampling seeds),
+reporting tokens/s, TTFT and latency percentiles.
 
     PYTHONPATH=src python examples/serve_lm.py [--arch mixtral-8x7b]
 """
@@ -19,8 +20,10 @@ def main():
     ap.add_argument("--arch", default="mixtral-8x7b")
     ap.add_argument("--gen", type=int, default=12)
     args = ap.parse_args()
-    serve_mod.main(["--arch", args.arch, "--reduced", "--batch", "4",
-                    "--prompt-len", "24", "--gen", str(args.gen)])
+    serve_mod.main(["--arch", args.arch, "--reduced", "--requests", "6",
+                    "--slots", "3", "--prompt-len", "8",
+                    "--prompt-len-max", "24", "--gen", str(args.gen),
+                    "--page-size", "8", "--max-seq-len", "64"])
 
 
 if __name__ == "__main__":

@@ -34,7 +34,7 @@ from jax.sharding import PartitionSpec as P
 
 from .losses import Loss, get_loss
 from .partition import DoublyPartitioned
-from .util import pvary
+from .util import pvary, shard_map
 
 
 @dataclasses.dataclass(frozen=True)
@@ -147,8 +147,8 @@ def make_admm_step(loss_name: str, mesh, cfg: ADMMConfig, *, n: int,
             u_new = u_b + s_new - x_b @ w_new
             return s_new[:, None], u_new[:, None], w_new
 
-        return jax.shard_map(
-            cell, mesh=mesh, check_vma=False,
+        return shard_map(
+            cell, mesh,
             in_specs=(P(data_axis, model_axis), P(data_axis), P(data_axis),
                       P(data_axis, model_axis), P(data_axis, model_axis),
                       P(model_axis), P(model_axis)),
@@ -169,8 +169,8 @@ def admm_setup_distributed(mesh, x, cfg: ADMMConfig, *,
         M = gram + (cfg.lam / cfg.rho) * jnp.eye(m_q, dtype=x_b.dtype)
         return cho_factor(M)[0][None]
 
-    return jax.jit(jax.shard_map(
-        cell, mesh=mesh, check_vma=False,
+    return jax.jit(shard_map(
+        cell, mesh,
         in_specs=P(data_axis, model_axis),
         out_specs=P(model_axis),
     ))(x)

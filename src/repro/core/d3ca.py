@@ -26,7 +26,7 @@ from jax.sharding import PartitionSpec as P
 from .local import local_sdca
 from .losses import Loss, get_loss
 from .partition import DoublyPartitioned
-from .util import pvary
+from .util import pvary, shard_map
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,8 +127,8 @@ def make_d3ca_step(loss: Loss, mesh, cfg: D3CAConfig, *, n: int, n_p: int,
             w_new = jax.lax.psum((a_new * mask_b) @ x_b, data_axis) / (lam * n)
             return a_new, w_new
 
-        return jax.shard_map(
-            cell, mesh=mesh, check_vma=False,
+        return shard_map(
+            cell, mesh,
             in_specs=(P(data_axis, model_axis), P(data_axis), P(data_axis),
                       P(data_axis), P(model_axis)),
             out_specs=(P(data_axis), P(model_axis)),

@@ -30,7 +30,7 @@ from jax.sharding import PartitionSpec as P
 from .local import local_svrg
 from .losses import Loss, get_loss
 from .partition import DoublyPartitioned, subblock_slices
-from .util import pvary
+from .util import pvary, shard_map
 
 
 @dataclasses.dataclass(frozen=True)
@@ -195,8 +195,8 @@ def make_radisa_step(loss: Loss, mesh, cfg: RADiSAConfig, *, n: int, n_p: int,
             delta = jax.lax.dynamic_update_slice(delta, w_new - w_anchor, (lo,))
             return w_b + jax.lax.psum(delta, data_axis)
 
-        return jax.shard_map(
-            cell, mesh=mesh, check_vma=False,
+        return shard_map(
+            cell, mesh,
             in_specs=(P(data_axis, model_axis), P(data_axis), P(data_axis),
                       P(model_axis)),
             out_specs=P(model_axis),

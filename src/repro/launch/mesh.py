@@ -22,3 +22,12 @@ def make_mesh(shape, axes):
 def make_grid_mesh(P: int, Q: int):
     """The paper's P x Q doubly distributed grid."""
     return jax.make_mesh((P, Q), ("data", "model"))
+
+
+def mesh_context(mesh):
+    """``jax.set_mesh(mesh)`` where available (jax >= 0.6), else the
+    legacy ``with mesh:`` context manager (Mesh.__enter__)."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh

@@ -24,7 +24,7 @@ from ..models import Transformer, reduced
 from ..optim import AdamWConfig, adamw_init, warmup_cosine
 from ..runtime import Trainer, TrainerConfig
 from ..sharding.rules import batch_axes
-from .mesh import make_mesh
+from .mesh import make_mesh, mesh_context
 from .steps import make_train_step, param_shardings
 
 
@@ -60,7 +60,7 @@ def main(argv=None):
     model = Transformer(cfg, mesh=mesh)
     opt_cfg = AdamWConfig(lr=warmup_cosine(args.lr, 20, args.steps))
 
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         pstructs, _, pspecs = param_shardings(model, mesh)
         params = jax.jit(
             lambda k: model.init(k)[0],

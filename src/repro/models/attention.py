@@ -131,7 +131,9 @@ def full_attention(q, k, v, *, causal=True, window=None, scale=None):
 def decode_attention(q, k_cache, v_cache, pos, *, window=None, scale=None):
     """Single-token attention against a (B, Smax, KV, D) cache.
 
-    ``pos``: current position (scalar int32) -- entries > pos are masked.
+    ``pos``: current position -- scalar int32, or a (B,) vector of
+    per-sequence positions (paged / continuous-batching decode, where
+    every batch slot sits at its own depth).  Entries > pos are masked.
     """
     B, _, H, D = q.shape
     KV = k_cache.shape[2]
@@ -141,10 +143,11 @@ def decode_attention(q, k_cache, v_cache, pos, *, window=None, scale=None):
     s = jnp.einsum("bkgd,bxkd->bkgx", qr * scale, k_cache,
                    preferred_element_type=jnp.float32)
     kp = jnp.arange(k_cache.shape[1])
-    mask = kp <= pos
+    posv = jnp.broadcast_to(jnp.asarray(pos), (B,))
+    mask = kp[None, :] <= posv[:, None]
     if window is not None:
-        mask &= kp > pos - window
-    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+        mask &= kp[None, :] > posv[:, None] - window
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgx,bxkd->bkgd", p.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)

@@ -379,8 +379,15 @@ class Transformer:
         return cache
 
     # ---- prefill ----
-    def _layer_prefill(self, p, x, kind, positions, cache_len, enc=None):
-        """Like _layer_train but also returns this layer's cache entry."""
+    def _layer_prefill(self, p, x, kind, positions, cache_len, enc=None,
+                       linear_cache=False):
+        """Like _layer_train but also returns this layer's cache entry.
+
+        ``linear_cache=True`` (paged serving): attention layers return the
+        prompt's raw full-length k/v (no ring buffer, no padding to
+        ``cache_len``, no int8 quant) so the caller can scatter them into
+        a paged arena by linear token position (repro/serve/cache.py).
+        """
         cfg = self.cfg
         cdt = cfg.cdtype
         B, S, dm = x.shape
@@ -419,6 +426,8 @@ class Transformer:
             L = self._cache_len(kind, cache_len)
             if kind == XATTN:
                 ck, cv = k, v                       # static encoder cache
+            elif linear_cache:
+                ck, cv = k, v                       # full-length, unrolled
             elif L >= Skv:
                 pad = [(0, 0), (0, L - Skv), (0, 0), (0, 0)]
                 ck, cv = jnp.pad(k, pad), jnp.pad(v, pad)
@@ -429,7 +438,9 @@ class Transformer:
                 ck = jnp.roll(ck, shift, axis=1)
                 cv = jnp.roll(cv, shift, axis=1)
             if kind != XATTN:
-                if cfg.kv_cache_dtype == "int8":
+                if linear_cache:
+                    cache = {"k": ck, "v": cv}
+                elif cfg.kv_cache_dtype == "int8":
                     ck, sk = _kv_quant(ck)
                     cv, sv = _kv_quant(cv)
                     cache = {"k": self._constrain_kv(ck),
@@ -446,7 +457,17 @@ class Transformer:
         x = self._constrain_act(x + self._mlp(p["mlp"], h2, kind))
         return x, cache
 
-    def prefill(self, params, batch, cache_len):
+    def prefill(self, params, batch, cache_len, *, last_pos=None,
+                linear_cache=False):
+        """Forward pass that also materializes the decode caches.
+
+        ``last_pos``: position whose next-token logits to return (may be
+        traced); default is the final position.  Serving prefills pad
+        prompts to a bucket length, so the real last token sits mid-way.
+        ``linear_cache``: return raw full-length k/v per attention layer
+        (the paged-serving block-table view) instead of the ring-buffer
+        cache; see ``_layer_prefill``.
+        """
         cfg = self.cfg
         x = self._embed(params, batch)
         B, S = x.shape[:2]
@@ -461,7 +482,8 @@ class Transformer:
                 ycaches = []
                 for j, kind in enumerate(cfg.pattern):
                     xc, c = self._layer_prefill(pslices[j], xc, kind,
-                                                positions, cache_len, enc)
+                                                positions, cache_len, enc,
+                                                linear_cache=linear_cache)
                     ycaches.append(c)
                 return xc, tuple(ycaches)
 
@@ -474,11 +496,16 @@ class Transformer:
         caches_r = []
         for r, p in enumerate(params["remainder"]):
             x, c = self._layer_prefill(p, x, cfg.pattern[r % len(cfg.pattern)],
-                                       positions, cache_len, enc)
+                                       positions, cache_len, enc,
+                                       linear_cache=linear_cache)
             caches_r.append(jax.tree.map(lambda a: a[None], c))
 
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-        logits = (x[:, -1:] @ params["head"].astype(cfg.cdtype)
+        if last_pos is None:
+            x_last = x[:, -1:]
+        else:
+            x_last = jax.lax.dynamic_slice_in_dim(x, last_pos, 1, axis=1)
+        logits = (x_last @ params["head"].astype(cfg.cdtype)
                   ).astype(jnp.float32)
         cache = {"pos": jnp.asarray(S, jnp.int32), "periods": list(caches_p),
                  "remainder": caches_r}
@@ -611,3 +638,101 @@ class Transformer:
         new_cache = {"pos": pos + 1, "periods": new_periods,
                      "remainder": new_rem}
         return logits, new_cache
+
+    # ---- paged decode (continuous-batching serving) ----
+    def _layer_decode_paged(self, p, x, arena, kind, bt, pos, active):
+        """One-token decode against a paged KV arena.
+
+        ``arena``: this layer's ``{"k", "v"}`` pages, each
+        ``(num_pages + 1, page_size, KV, hd)`` -- the last page is the
+        trash page for masked writes.  ``bt``: (B, max_pages) block
+        tables mapping ``token t -> bt[b, t // page_size]``; unallocated
+        entries point at the trash page.  ``pos``: (B,) per-sequence
+        write positions; ``active``: (B,) bool slot-occupancy mask.
+        """
+        cfg = self.cfg
+        cdt = cfg.cdtype
+        B = x.shape[0]
+        H, KV, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        q = (h @ p["mixer"]["wq"].astype(cdt)).reshape(B, 1, H, hd)
+        k = (h @ p["mixer"]["wk"].astype(cdt)).reshape(B, 1, KV, hd)
+        v = (h @ p["mixer"]["wv"].astype(cdt)).reshape(B, 1, KV, hd)
+        if cfg.qk_norm:
+            q = head_rms_norm(q, p["mixer"]["q_norm"], cfg.norm_eps)
+            k = head_rms_norm(k, p["mixer"]["k_norm"], cfg.norm_eps)
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos[:, None], cfg.rope_theta)
+
+        n_pages1, page_size = arena["k"].shape[:2]
+        trash = n_pages1 - 1
+        max_pages = bt.shape[1]
+        slot = jnp.clip(pos // page_size, 0, max_pages - 1)
+        pidx = jnp.where(active, bt[jnp.arange(B), slot], trash)
+        off = pos % page_size
+        ck = arena["k"].at[pidx, off].set(k[:, 0])
+        cv = arena["v"].at[pidx, off].set(v[:, 0])
+
+        # gather this batch's pages into a (B, max_pages * page_size, ...)
+        # linear view; positions beyond ``pos`` (and trash-backed entries)
+        # are masked inside decode_attention
+        kseq = ck[bt].reshape(B, max_pages * page_size, KV, hd)
+        vseq = cv[bt].reshape(B, max_pages * page_size, KV, hd)
+        window = cfg.swa_window if kind == ATTN else cfg.local_window
+        out = decode_attention(q, kseq, vseq, pos, window=window)
+        x = x + out.reshape(B, 1, H * hd) @ p["mixer"]["wo"].astype(cdt)
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + self._mlp(p["mlp"], h2, kind)
+        return x, {"k": ck, "v": cv}
+
+    def decode_step_paged(self, params, arenas, batch, block_tables,
+                          lengths, active):
+        """One continuous-batching decode step over the paged arenas.
+
+        ``batch``: {"tokens": (B, 1)} last sampled token per slot;
+        ``block_tables``: (B, max_pages) int32; ``lengths``: (B,) int32
+        number of cached tokens per slot (= the write position of this
+        step's token); ``active``: (B,) bool.  Returns
+        (logits (B, 1, V), new arenas).  Only attention-like mixers are
+        supported (see serve.cache.paged_kinds).
+        """
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        pos = lengths
+
+        new_periods = []
+        if params["periods"]:
+            n_full = jax.tree.leaves(params["periods"][0])[0].shape[0]
+
+            def body(carry, inp):
+                xc, ars = carry
+                i, pslices = inp
+                ars = list(ars)
+                for j, kind in enumerate(cfg.pattern):
+                    sub = jax.tree.map(
+                        lambda a: jax.lax.dynamic_index_in_dim(
+                            a, i, 0, keepdims=False), ars[j])
+                    xc, sub = self._layer_decode_paged(
+                        pslices[j], xc, sub, kind, block_tables, pos, active)
+                    ars[j] = jax.tree.map(
+                        lambda full, new:
+                        jax.lax.dynamic_update_index_in_dim(full, new, i, 0),
+                        ars[j], sub)
+                return (xc, tuple(ars)), None
+
+            (x, new_ars), _ = jax.lax.scan(
+                body, (x, tuple(arenas["periods"])),
+                (jnp.arange(n_full), tuple(params["periods"])))
+            new_periods = list(new_ars)
+
+        new_rem = []
+        for r, p in enumerate(params["remainder"]):
+            sub = jax.tree.map(lambda a: a[0], arenas["remainder"][r])
+            x, sub = self._layer_decode_paged(
+                p, x, sub, cfg.pattern[r % len(cfg.pattern)], block_tables,
+                pos, active)
+            new_rem.append(jax.tree.map(lambda a: a[None], sub))
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = (x @ params["head"].astype(cfg.cdtype)).astype(jnp.float32)
+        return logits, {"periods": new_periods, "remainder": new_rem}

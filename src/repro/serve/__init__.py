@@ -1,0 +1,32 @@
+"""repro.serve -- continuous-batching inference engine.
+
+The serving analogue of the paper's P x Q doubly distributed layout:
+batched requests shard over the "data" axis, model state over the
+"model" axis.  Continuous batching keeps devices busy between requests
+(the CoCoA design rule -- maximize local work per communication round --
+applied to inference).
+
+Modules:
+  * ``cache``    -- paged KV-cache pool: fixed-size blocks, per-sequence
+                    block tables, alloc/free/eviction over one arena
+  * ``engine``   -- continuous-batching scheduler (queue, admission
+                    control, prefill/decode interleave, backfill)
+  * ``sampling`` -- greedy / temperature / top-k / top-p with
+                    per-request seeds
+  * ``scoring``  -- doubly-distributed batched x.w scoring for the
+                    paper's trained linear models
+  * ``metrics``  -- tokens/s, TTFT and latency percentile counters
+"""
+from .cache import PagePool, PagedCacheConfig, make_paged_arenas
+from .engine import EngineConfig, InferenceEngine, Request
+from .metrics import ServeMetrics, percentiles
+from .sampling import SamplingParams, sample_tokens
+from .scoring import LinearScorer, make_score_fn
+
+__all__ = [
+    "PagePool", "PagedCacheConfig", "make_paged_arenas",
+    "EngineConfig", "InferenceEngine", "Request",
+    "ServeMetrics", "percentiles",
+    "SamplingParams", "sample_tokens",
+    "LinearScorer", "make_score_fn",
+]

@@ -1,0 +1,171 @@
+"""Paged KV cache: one preallocated arena shared by all in-flight sequences.
+
+The arena is split into fixed-size pages of ``page_size`` token slots.  A
+host-side :class:`PagePool` hands pages to sequences (all-or-nothing
+allocation, explicit free, owner-level eviction for preemption) and a
+per-sequence *block table* maps linear token positions to pages:
+token ``t`` of a sequence lives at ``(block_table[t // page_size],
+t % page_size)``.
+
+Device layout mirrors the model's contiguous cache tree
+(``Transformer.make_cache``): one ``{"k", "v"}`` arena of shape
+``(n_layers_in_group, num_pages + 1, page_size, n_kv, head_dim)`` per
+pattern position / remainder layer.  Row ``num_pages`` is a *trash page*:
+masked writes (padding tokens, inactive slots) are routed there instead
+of being predicated out, so every scatter is a plain advanced-index
+``.at[].set`` -- no one-hot tricks needed off the sharded training path.
+
+Only attention-like mixers (ATTN / LOCAL) are pageable; recurrent mixers
+(RWKV / RG-LRU) carry O(1) state and need no paging, and XATTN caches a
+static encoder.  ``paged_kinds`` validates a config up front.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+
+from ..models.config import ATTN, LOCAL, ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedCacheConfig:
+    page_size: int = 16
+    num_pages: int = 256
+
+    @property
+    def trash_page(self) -> int:
+        return self.num_pages
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` token slots."""
+        return max(1, -(-n_tokens // self.page_size))
+
+
+class PagePool:
+    """Host-side free-list allocator over ``num_pages`` pages.
+
+    Pages are owned by string/int request ids.  ``alloc`` is atomic
+    (all-or-nothing), ``free`` releases every page of an owner (the
+    eviction primitive used for preemption), and ``check`` asserts the
+    no-double-free / no-orphan invariants.
+    """
+
+    def __init__(self, cfg: PagedCacheConfig):
+        self.cfg = cfg
+        self._free: List[int] = list(range(cfg.num_pages - 1, -1, -1))
+        self._owned: Dict[object, List[int]] = {}
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def pages(self, owner) -> List[int]:
+        return list(self._owned.get(owner, ()))
+
+    def owners(self):
+        return list(self._owned)
+
+    def alloc(self, owner, n: int = 1) -> Optional[List[int]]:
+        """Give ``owner`` ``n`` more pages, or None (and no change) if the
+        pool cannot satisfy the request."""
+        if n < 0:
+            raise ValueError(f"alloc n={n}")
+        if n > len(self._free):
+            return None
+        got = [self._free.pop() for _ in range(n)]
+        self._owned.setdefault(owner, []).extend(got)
+        return got
+
+    def free(self, owner) -> int:
+        """Release every page of ``owner``; returns the count.
+
+        Raises KeyError if ``owner`` holds nothing (double free)."""
+        if owner not in self._owned:
+            raise KeyError(f"free of unknown owner {owner!r} (double free?)")
+        pages = self._owned.pop(owner)
+        self._free.extend(pages)
+        return len(pages)
+
+    def check(self):
+        """Invariants: free + owned partition [0, num_pages); no dups."""
+        owned = [p for ps in self._owned.values() for p in ps]
+        seen = self._free + owned
+        assert len(seen) == len(set(seen)), "duplicate page id"
+        assert set(seen) == set(range(self.cfg.num_pages)), \
+            "orphaned or out-of-range page"
+
+
+# ---------------------------------------------------------------------------
+# device arenas
+# ---------------------------------------------------------------------------
+
+def paged_kinds(cfg: ModelConfig) -> List[str]:
+    """The model's mixer kinds, validated as pageable."""
+    bad = sorted(set(k for k in cfg.pattern if k not in (ATTN, LOCAL)))
+    if bad:
+        raise NotImplementedError(
+            f"paged serving supports attention mixers only; {cfg.name} "
+            f"has {bad}")
+    if cfg.kv_cache_dtype == "int8":
+        raise NotImplementedError(
+            "paged serving stores the compute dtype; int8 paged pages are "
+            "a future optimization")
+    if cfg.embed_input != "tokens":
+        raise NotImplementedError("paged serving needs a token frontend")
+    return list(cfg.pattern)
+
+
+def _arena(cfg: ModelConfig, n_layers: int, pc: PagedCacheConfig):
+    shape = (n_layers, pc.num_pages + 1, pc.page_size, cfg.n_kv, cfg.hd)
+    return {"k": jnp.zeros(shape, cfg.cdtype),
+            "v": jnp.zeros(shape, cfg.cdtype)}
+
+
+def make_paged_arenas(cfg: ModelConfig, pc: PagedCacheConfig):
+    """Arena tree mirroring ``Transformer.make_cache`` structure."""
+    paged_kinds(cfg)
+    n_full, n_rem = cfg.n_periods()
+    return {
+        "periods": [_arena(cfg, n_full, pc) for _ in cfg.pattern]
+        if n_full else [],
+        "remainder": [_arena(cfg, 1, pc) for _ in range(n_rem)],
+    }
+
+
+def write_prompt_pages(arenas, prefill_cache, bt_row, true_len,
+                       pc: PagedCacheConfig):
+    """Scatter a linear prefill cache into the paged arenas.
+
+    ``prefill_cache`` is the tree returned by ``Transformer.prefill(...,
+    linear_cache=True)`` for a batch of ONE sequence: per layer group,
+    k/v of shape ``(n_layers, 1, S, n_kv, hd)`` holding the prompt's
+    full-length keys/values.  Tokens ``t < true_len`` go to
+    ``(bt_row[t // page_size], t % page_size)``; padding tokens go to the
+    trash page.  jit-friendly (``true_len`` may be traced).
+    """
+    S = None
+    for group in prefill_cache["periods"] + prefill_cache["remainder"]:
+        S = group["k"].shape[2]
+        break
+    if S is None:
+        return arenas
+    t = jnp.arange(S)
+    pidx = jnp.where(t < true_len, bt_row[t // pc.page_size], pc.trash_page)
+    off = t % pc.page_size
+
+    def scat(arena, kv):
+        # arena: (n, NP+1, ps, KV, hd); kv[:, 0]: (n, S, KV, hd)
+        return arena.at[:, pidx, off].set(kv[:, 0].astype(arena.dtype))
+
+    def group_scat(arena_g, cache_g):
+        return {"k": scat(arena_g["k"], cache_g["k"]),
+                "v": scat(arena_g["v"], cache_g["v"])}
+
+    return {
+        "periods": [group_scat(a, c) for a, c in
+                    zip(arenas["periods"], prefill_cache["periods"])],
+        "remainder": [group_scat(a, c) for a, c in
+                      zip(arenas["remainder"], prefill_cache["remainder"])],
+    }

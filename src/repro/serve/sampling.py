@@ -1,0 +1,75 @@
+"""Token sampling: greedy / temperature / top-k / top-p, per-request seeds.
+
+All parameters are *data*, not static arguments, so one jitted
+``sample_tokens`` serves every slot of a continuous batch regardless of
+each request's settings: temperature 0 selects the greedy branch
+per-row, ``top_k <= 0`` disables top-k, ``top_p >= 1`` disables top-p.
+
+Reproducibility: each request carries its own integer ``seed``; token
+``i`` of that request is drawn with ``fold_in(fold_in(base, seed), i)``,
+so a request's stream is independent of which slot it runs in, what else
+shares the batch, and whether it was preempted and replayed.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0    # 0 -> greedy argmax
+    top_k: int = 0              # <= 0 -> no top-k filtering
+    top_p: float = 1.0          # >= 1 -> no nucleus filtering
+    seed: int = 0
+
+
+def _filter_logits(logits, top_k, top_p):
+    """Apply top-k / top-p masks to a (V,) logit row (all args traced)."""
+    V = logits.shape[-1]
+    order = jnp.argsort(-logits)                    # descending
+    srt = logits[order]
+    ranks = jnp.zeros((V,), jnp.int32).at[order].set(jnp.arange(V))
+    keep = (ranks < top_k) | (top_k <= 0)
+    probs = jax.nn.softmax(srt)
+    # nucleus: keep tokens whose *preceding* cumulative mass is < top_p
+    # (the argmax token always survives: its preceding mass is 0)
+    cum_before = jnp.cumsum(probs) - probs
+    keep &= jnp.zeros((V,), bool).at[order].set(cum_before < top_p)
+    return jnp.where(keep, logits, NEG_INF)
+
+
+def _sample_one(logits, temperature, top_k, top_p, seed, step):
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    key = jax.random.fold_in(jax.random.fold_in(jax.random.PRNGKey(0), seed),
+                             step)
+    scaled = logits / jnp.maximum(temperature, 1e-6)
+    drawn = jax.random.categorical(
+        key, _filter_logits(scaled, top_k, top_p)).astype(jnp.int32)
+    return jnp.where(temperature <= 0.0, greedy, drawn)
+
+
+def sample_tokens(logits, temperatures, top_ks, top_ps, seeds, steps):
+    """Sample one token per row.
+
+    logits: (B, V) float32; temperatures/top_ps: (B,) float32;
+    top_ks/seeds/steps: (B,) int32.  ``steps`` is the per-request count
+    of tokens already drawn (the fold_in counter).  Returns (B,) int32.
+    """
+    return jax.vmap(_sample_one)(logits, temperatures, top_ks, top_ps,
+                                 seeds, steps)
+
+
+def params_arrays(params_list, steps):
+    """Stack per-slot SamplingParams (+ step counters) into device arrays."""
+    import numpy as np
+    temps = np.asarray([p.temperature for p in params_list], np.float32)
+    tks = np.asarray([p.top_k for p in params_list], np.int32)
+    tps = np.asarray([p.top_p for p in params_list], np.float32)
+    seeds = np.asarray([p.seed for p in params_list], np.int32)
+    return (jnp.asarray(temps), jnp.asarray(tks), jnp.asarray(tps),
+            jnp.asarray(seeds), jnp.asarray(np.asarray(steps, np.int32)))

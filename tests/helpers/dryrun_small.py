@@ -5,6 +5,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax
 
 from repro.configs import ARCHS, get_config
+from repro.launch.mesh import mesh_context
 from repro.launch.steps import input_specs
 from repro.models import Transformer, reduced
 from repro.models.config import ShapeConfig
@@ -21,7 +22,7 @@ def main():
         cfg = reduced(get_config(arch))
         for shape in SHAPES:
             try:
-                with jax.set_mesh(mesh):
+                with mesh_context(mesh):
                     cell = input_specs(cfg, shape, mesh)
                     if cell.kind == "train":
                         args = (cell.params, cell.opt, cell.batch)

@@ -1,6 +1,9 @@
 """Hypothesis property tests for the P x Q partitioner."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.partition import partition

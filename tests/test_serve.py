@@ -1,0 +1,299 @@
+"""repro.serve: paged-cache invariants, sampling, scheduler equivalence.
+
+The headline test: continuous batching under greedy decoding is
+token-for-token identical to the seed-era static-batch loop
+(``repro.launch.serve.static_batch_generate``), including when the pool
+is small enough to force preemption and replay.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.serve import static_batch_generate
+from repro.models import Transformer, reduced
+from repro.serve import (EngineConfig, InferenceEngine, LinearScorer,
+                         PagePool, PagedCacheConfig, Request, SamplingParams,
+                         ServeMetrics)
+from repro.serve.sampling import params_arrays, sample_tokens
+
+
+# ---------------------------------------------------------------------------
+# PagePool / block-table invariants
+# ---------------------------------------------------------------------------
+
+def test_pages_for():
+    pc = PagedCacheConfig(page_size=16, num_pages=8)
+    assert pc.pages_for(1) == 1
+    assert pc.pages_for(16) == 1
+    assert pc.pages_for(17) == 2
+    assert pc.pages_for(0) == 1          # every sequence holds >= 1 page
+    assert pc.trash_page == 8
+
+
+def test_pool_alloc_free_roundtrip():
+    pool = PagePool(PagedCacheConfig(page_size=4, num_pages=6))
+    a = pool.alloc("a", 2)
+    b = pool.alloc("b", 3)
+    assert len(a) == 2 and len(b) == 3 and pool.n_free == 1
+    assert not set(a) & set(b)
+    pool.check()
+    assert pool.free("a") == 2
+    assert pool.n_free == 3
+    pool.check()
+    assert pool.free("b") == 3
+    assert pool.n_free == 6
+    pool.check()
+
+
+def test_pool_double_free_raises():
+    pool = PagePool(PagedCacheConfig(page_size=4, num_pages=4))
+    pool.alloc("a", 1)
+    pool.free("a")
+    with pytest.raises(KeyError):
+        pool.free("a")
+    with pytest.raises(KeyError):
+        pool.free("never-allocated")
+
+
+def test_pool_alloc_is_atomic():
+    pool = PagePool(PagedCacheConfig(page_size=4, num_pages=4))
+    assert pool.alloc("a", 3) is not None
+    # all-or-nothing: a 2-page ask against 1 free page changes NOTHING
+    assert pool.alloc("b", 2) is None
+    assert pool.n_free == 1
+    assert pool.pages("b") == []
+    pool.check()
+    assert pool.alloc("b", 1) is not None
+    assert pool.n_free == 0
+    pool.check()
+
+
+def test_pool_eviction_releases_every_page():
+    pool = PagePool(PagedCacheConfig(page_size=4, num_pages=8))
+    for owner, n in [("a", 3), ("b", 2), ("c", 3)]:
+        pool.alloc(owner, n)
+    assert pool.n_free == 0
+    assert pool.free("b") == 2           # evict b: its pages come back whole
+    assert pool.n_free == 2
+    assert sorted(pool.owners()) == ["a", "c"]
+    pool.check()
+
+
+def test_pool_check_catches_corruption():
+    pool = PagePool(PagedCacheConfig(page_size=4, num_pages=4))
+    pool.alloc("a", 2)
+    pool._free.append(pool.pages("a")[0])    # simulate a double-book
+    with pytest.raises(AssertionError):
+        pool.check()
+
+
+# ---------------------------------------------------------------------------
+# sampling
+# ---------------------------------------------------------------------------
+
+def _rows(n, v, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, v)).astype(np.float32)
+
+
+def test_sampling_greedy_is_argmax():
+    logits = _rows(5, 32)
+    sp = params_arrays([SamplingParams()] * 5, [0] * 5)
+    out = np.asarray(sample_tokens(logits, *sp))
+    np.testing.assert_array_equal(out, logits.argmax(-1))
+
+
+def test_sampling_top_k1_is_argmax():
+    logits = _rows(4, 32, seed=1)
+    sp = params_arrays(
+        [SamplingParams(temperature=1.0, top_k=1, seed=i) for i in range(4)],
+        [3] * 4)
+    out = np.asarray(sample_tokens(logits, *sp))
+    np.testing.assert_array_equal(out, logits.argmax(-1))
+
+
+def test_sampling_stream_is_slot_independent():
+    """A request's draw depends on (seed, step), not its batch position."""
+    logits = _rows(1, 64, seed=2)
+    p = SamplingParams(temperature=0.9, top_k=8, top_p=0.95, seed=123)
+    alone = np.asarray(sample_tokens(
+        logits, *params_arrays([p], [7])))[0]
+    batched = np.asarray(sample_tokens(
+        np.repeat(logits, 3, axis=0),
+        *params_arrays([SamplingParams(temperature=1.3, seed=5), p,
+                        SamplingParams(seed=9)], [0, 7, 2])))[1]
+    assert alone == batched
+
+
+def test_sampling_top_p_keeps_argmax():
+    logits = _rows(6, 32, seed=3)
+    sp = params_arrays(
+        [SamplingParams(temperature=1.0, top_p=1e-6, seed=i)
+         for i in range(6)], [0] * 6)
+    out = np.asarray(sample_tokens(logits, *sp))
+    np.testing.assert_array_equal(out, logits.argmax(-1))
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_metrics_with_fake_clock():
+    t = [0.0]
+    m = ServeMetrics(clock=lambda: t[0])
+    m.start_request("a", 8)
+    t[0] = 0.5
+    m.first_token("a")
+    t[0] = 2.0
+    m.finish("a", 10)
+    s = m.summary()
+    assert s["requests_finished"] == 1
+    assert s["generated_tokens"] == 10
+    assert s["tokens_per_sec"] == pytest.approx(10 / 2.0)
+    assert s["ttft_s"]["p50"] == pytest.approx(0.5)
+    assert s["latency_s"]["p99"] == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------------------------
+# doubly-distributed scoring
+# ---------------------------------------------------------------------------
+
+def test_linear_scorer_matches_dense():
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=37).astype(np.float32)
+    X = rng.normal(size=(23, 37)).astype(np.float32)
+    sc = LinearScorer(w, loss="hinge", bucket=8)
+    np.testing.assert_allclose(sc.score(X), X @ w, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(sc.predict(X),
+                                  np.where(X @ w >= 0, 1.0, -1.0))
+    assert sc.rows_scored == 2 * 23
+
+
+def test_linear_scorer_on_grid_mesh():
+    from repro.launch.mesh import make_grid_mesh
+    rng = np.random.default_rng(1)
+    w = rng.normal(size=10).astype(np.float32)
+    X = rng.normal(size=(5, 10)).astype(np.float32)
+    sc = LinearScorer(w, mesh=make_grid_mesh(1, 1), loss="logistic")
+    np.testing.assert_allclose(sc.score(X), X @ w, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(sc.predict(X), 1 / (1 + np.exp(-(X @ w))),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# continuous batching == static batching (greedy)
+# ---------------------------------------------------------------------------
+
+_MODEL_CACHE = {}
+
+
+def _tiny_model():
+    if "m" not in _MODEL_CACHE:
+        import jax
+        cfg = reduced(get_config("qwen3-1.7b"))
+        model = Transformer(cfg)
+        params = jax.jit(lambda k: model.init(k)[0])(jax.random.PRNGKey(0))
+        _MODEL_CACHE["m"] = (cfg, model, params)
+    return _MODEL_CACHE["m"]
+
+
+def _trace(cfg, plens, gens):
+    rng = np.random.default_rng(7)
+    return [Request(rid=i, prompt=rng.integers(0, cfg.vocab, size=p),
+                    max_new_tokens=g)
+            for i, (p, g) in enumerate(zip(plens, gens))]
+
+
+def test_continuous_equals_static_greedy():
+    cfg, model, params = _tiny_model()
+    # uniform prompt length per static chunk of 2 (the static loop's
+    # right-padding is only exact for equal-length prompts); the engine
+    # sees the requests as one mixed stream across 2 slots
+    plens = [6, 6, 11, 11, 3, 3]
+    gens = [5, 8, 4, 7, 6, 3]
+    reqs = _trace(cfg, plens, gens)
+    ref = static_batch_generate(model, params, reqs, batch_size=2)
+
+    engine = InferenceEngine(model, params, EngineConfig(
+        max_slots=2, page_size=8, num_pages=32, max_seq_len=32))
+    out = engine.run(reqs)
+
+    assert sorted(out) == sorted(ref)
+    for rid in ref:
+        np.testing.assert_array_equal(out[rid], ref[rid],
+                                      err_msg=f"request {rid}")
+    s = engine.metrics.summary()
+    assert s["requests_finished"] == len(reqs)
+    assert s["generated_tokens"] == sum(gens)
+    engine.pool.check()
+    assert engine.pool.n_free == engine.pc.num_pages   # all pages returned
+
+
+def test_engine_preemption_is_transparent():
+    """A pool too small for all slots forces eviction + replay; greedy
+    outputs still match the static reference token-for-token."""
+    cfg, model, params = _tiny_model()
+    plens = [9, 9, 9, 9]
+    gens = [10, 10, 10, 10]
+    reqs = _trace(cfg, plens, gens)
+    ref = static_batch_generate(model, params, reqs, batch_size=4)
+
+    engine = InferenceEngine(model, params, EngineConfig(
+        max_slots=4, page_size=4, num_pages=13, max_seq_len=20,
+        reserve_pages=False))
+    out = engine.run(reqs)
+    assert engine.metrics.preemptions > 0
+    for rid in ref:
+        np.testing.assert_array_equal(out[rid], ref[rid],
+                                      err_msg=f"request {rid}")
+    engine.pool.check()
+
+
+def test_engine_admission_control():
+    cfg, model, params = _tiny_model()
+    engine = InferenceEngine(model, params, EngineConfig(
+        max_slots=2, page_size=8, num_pages=16, max_seq_len=24,
+        max_queue=2))
+    too_long = Request(rid="x", prompt=np.zeros(20, np.int32),
+                      max_new_tokens=8)
+    assert not engine.submit(too_long)
+    assert engine.submit(Request(rid=0, prompt=np.zeros(4, np.int32),
+                                 max_new_tokens=2))
+    assert engine.submit(Request(rid=1, prompt=np.zeros(4, np.int32),
+                                 max_new_tokens=2))
+    assert not engine.submit(Request(rid=2, prompt=np.zeros(4, np.int32),
+                                     max_new_tokens=2))   # queue full
+    assert engine.metrics.rejections == 2
+    out = engine.run([])
+    assert sorted(out) == [0, 1]
+
+
+def test_engine_rejects_duplicate_rid():
+    """A rid keys the page pool and the output dict: duplicates would
+    merge two requests' pages under one owner."""
+    cfg, model, params = _tiny_model()
+    engine = InferenceEngine(model, params, EngineConfig(
+        max_slots=2, page_size=8, num_pages=16, max_seq_len=32))
+    r = _trace(cfg, [4, 4], [3, 3])
+    dup = Request(rid=r[0].rid, prompt=r[1].prompt, max_new_tokens=3)
+    assert engine.submit(r[0])
+    assert not engine.submit(dup)           # duplicate of a queued rid
+    out = engine.run([])
+    assert sorted(out) == [0]
+    assert not engine.submit(dup)           # duplicate of a finished rid
+    assert engine.metrics.rejections == 2
+    engine.pool.check()
+
+
+def test_engine_stop_token():
+    cfg, model, params = _tiny_model()
+    reqs = _trace(cfg, [5], [12])
+    ref = InferenceEngine(model, params, EngineConfig(
+        max_slots=1, page_size=8, num_pages=16, max_seq_len=32)).run(reqs)
+    # stop at the first token value that hasn't occurred before it
+    k = next(i for i in range(1, len(ref[0]))
+             if ref[0][i] not in ref[0][:i])
+    req = Request(rid=0, prompt=reqs[0].prompt, max_new_tokens=12,
+                  stop_token=int(ref[0][k]))
+    out = InferenceEngine(model, params, EngineConfig(
+        max_slots=1, page_size=8, num_pages=16, max_seq_len=32)).run([req])
+    np.testing.assert_array_equal(out[0], ref[0][: k + 1])

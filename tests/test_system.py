@@ -31,10 +31,13 @@ def test_train_driver_resume(tmp_path):
 
 def test_serve_driver_end_to_end():
     out = serve_mod.main([
-        "--arch", "qwen3-1.7b", "--reduced", "--batch", "2",
-        "--prompt-len", "16", "--gen", "6"])
-    assert out.shape == (2, 6)
-    assert (out >= 0).all()
+        "--arch", "qwen3-1.7b", "--reduced", "--requests", "2",
+        "--slots", "2", "--prompt-len", "16", "--gen", "6",
+        "--page-size", "8", "--max-seq-len", "64"])
+    assert sorted(out) == [0, 1]
+    for toks in out.values():
+        assert toks.shape == (6,)
+        assert (toks >= 0).all()
 
 
 def test_core_example_paper_pipeline():
