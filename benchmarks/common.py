@@ -1,17 +1,48 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities.
+
+This module imports jax lazily: the fig benchmarks call
+``ensure_host_devices`` BEFORE the first jax import so that the
+shard_map engine can fake a P x Q device grid on CPU.
+"""
 from __future__ import annotations
 
 import json
 import os
+import sys
 import time
-
-import jax
-import numpy as np
 
 OUT_DIR = os.environ.get(
     "REPRO_BENCH_DIR",
     os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                  "experiments", "bench"))
+
+
+def ensure_host_devices(argv, count: int = 32):
+    """Force ``count`` host devices when the argv selects the shard_map
+    engine.  Must run before anything imports jax (the device count is
+    locked at first init) -- call it between the stdlib imports and the
+    ``repro.*`` imports of a benchmark script."""
+    if not any("shard_map" in a for a in argv):
+        return      # also matches the --engine=shard_map form
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" in flags:
+        return      # already forced (possibly by an earlier fig module)
+    if "jax" in sys.modules:
+        print("warning: jax already initialized; --engine shard_map needs "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=N set "
+              "before the first jax import", file=sys.stderr)
+        return
+    os.environ["XLA_FLAGS"] = (
+        flags + f" --xla_force_host_platform_device_count={count}").strip()
+
+
+def add_engine_args(ap):
+    """--engine / --backend knobs shared by the fig benchmarks."""
+    ap.add_argument("--engine", default="simulated",
+                    choices=["simulated", "shard_map"])
+    ap.add_argument("--backend", default="ref", choices=["ref", "pallas"],
+                    help="cell-local solver backend")
+    return ap
 
 
 def save_result(name: str, payload: dict):
@@ -21,6 +52,8 @@ def save_result(name: str, payload: dict):
 
 
 def timed(fn, *args, reps=1, warmup=1):
+    import jax
+    import numpy as np
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []

@@ -1,0 +1,117 @@
+"""Core solver benchmark: outer-step throughput of the unified solver API
+under every (engine, local_backend) pair.
+
+Forces a fake 8-device host platform (before jax init) so the shard_map
+engine runs its real collectives on CPU.  On CPU the pallas backend runs
+in interpret mode -- those numbers validate plumbing and track the perf
+trajectory, not TPU throughput (the dry-run/roofline path is the TPU
+performance story).
+
+    PYTHONPATH=src python -m benchmarks.core_bench [--quick]
+
+Emits ``BENCH_core.json`` (repo root by default): seconds per outer
+iteration per (solver, engine, backend) cell plus the two headline
+ratios -- ref vs pallas per engine, and simulated vs shard_map per
+backend.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if ROOT not in sys.path:
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+
+if "jax" not in sys.modules:
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=8").strip()
+
+from repro.core import (D3CAConfig, RADiSAConfig, ADMMConfig,  # noqa: E402
+                        get_solver, objective, serial_sdca)
+from repro.data import make_svm_data                        # noqa: E402
+
+try:
+    from .common import emit_csv_row, timed
+except ImportError:                       # `python benchmarks/core_bench.py`
+    from common import emit_csv_row, timed
+
+
+def bench_combo(name, cfg, X, y, P, Q, engine, backend, f_star, reps):
+    solver = get_solver(name)(engine=engine, local_backend=backend)
+    prog = solver.program("hinge", X, y, P=P, Q=Q, cfg=cfg)
+    state = prog.step(1, prog.state)          # compile + warm
+    t = timed(lambda: prog.step(2, state), reps=reps, warmup=0)
+    # a short solve for a correctness anchor on the same combo
+    res = solver.solve("hinge", X, y, P=P, Q=Q, cfg=cfg, f_star=f_star,
+                       record_history=True)
+    return {"s_per_iter": t, "rel_opt": res.history[-1]["rel_opt"],
+            "iters": res.iters}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized instances")
+    ap.add_argument("--out", default=os.path.join(ROOT, "BENCH_core.json"))
+    ap.add_argument("--reps", type=int, default=3)
+    args = ap.parse_args(argv)
+
+    P, Q = 4, 2
+    n, m = (256, 96) if args.quick else (768, 256)
+    inner = 32 if args.quick else 96
+    iters = 3 if args.quick else 5
+    X, y = make_svm_data(n, m, seed=0)
+    lam = 1e-1
+    w_ref, _ = serial_sdca("hinge", X, y, lam=lam, epochs=100)
+    f_star = float(objective("hinge", X, y, w_ref, lam))
+
+    configs = {
+        "d3ca": D3CAConfig(lam=lam, outer_iters=iters, local_steps=inner),
+        "radisa": RADiSAConfig(lam=lam, gamma=0.05, outer_iters=iters,
+                               L=inner),
+        "admm": ADMMConfig(lam=lam, rho=lam, outer_iters=iters),
+    }
+    out = {"n": n, "m": m, "P": P, "Q": Q, "lam": lam, "inner": inner,
+           "note": "pallas numbers are interpret-mode on CPU unless run "
+                   "on a TPU host",
+           "cells": {}, "ratios": {}}
+
+    for name, cfg in configs.items():
+        backends = ("ref",) if name == "admm" else ("ref", "pallas")
+        for engine in ("simulated", "shard_map"):
+            for backend in backends:
+                key = f"{name}/{engine}/{backend}"
+                cell = bench_combo(name, cfg, X, y, P, Q, engine, backend,
+                                   f_star, args.reps)
+                out["cells"][key] = cell
+                emit_csv_row(f"core/{key}", cell["s_per_iter"] * 1e6,
+                             f"rel_opt={cell['rel_opt']:.4f}")
+
+    cells = out["cells"]
+    for name in configs:
+        for engine in ("simulated", "shard_map"):
+            r = cells.get(f"{name}/{engine}/ref")
+            p = cells.get(f"{name}/{engine}/pallas")
+            if r and p:
+                out["ratios"][f"{name}/{engine}/pallas_over_ref"] = (
+                    p["s_per_iter"] / r["s_per_iter"])
+        for backend in ("ref", "pallas"):
+            s = cells.get(f"{name}/simulated/{backend}")
+            d = cells.get(f"{name}/shard_map/{backend}")
+            if s and d:
+                out["ratios"][f"{name}/{backend}/shard_map_over_simulated"] \
+                    = (d["s_per_iter"] / s["s_per_iter"])
+
+    with open(args.out, "w") as fh:
+        json.dump(out, fh, indent=1)
+    print(f"[core_bench] wrote {args.out}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -2,70 +2,62 @@
 three synthetic instances (P,Q) in {(4,2), (5,3), (7,4)} x two lambdas,
 comparing RADiSA / RADiSA-avg / D3CA / block-splitting ADMM.
 
+All methods run through the unified solver API, so the figure can be
+produced under any (engine, local_backend) pair:
+
+    python -m benchmarks.fig3_time --engine shard_map --backend pallas
+
 CPU-scaled instances by default (--scale 0.1 of the paper's 2000x3000
-blocks); pass --full for paper-sized blocks.  ADMM's Cholesky setup is
-excluded from timing, as in the paper.
+blocks); pass --full for paper-sized blocks.  ADMM's Cholesky setup runs
+at program-build time and is excluded from iteration timings, as in the
+paper.
 """
 from __future__ import annotations
 
 import argparse
-import time
+import sys
 
-import numpy as np
+from .common import add_engine_args, emit_csv_row, ensure_host_devices, \
+    save_result
 
-from repro.configs.svm_paper import PART1
-from repro.core import (ADMMConfig, D3CAConfig, RADiSAConfig,
-                        admm_setup_simulated, admm_simulated, d3ca_simulated,
-                        objective, partition, radisa_simulated, rel_opt,
-                        serial_sdca)
-from repro.data import make_svm_data
+ensure_host_devices(sys.argv)
 
-from .common import emit_csv_row, save_result
+from repro.configs.svm_paper import PART1                   # noqa: E402
+from repro.core import (ADMMConfig, D3CAConfig, RADiSAConfig,  # noqa: E402
+                        get_solver, objective, serial_sdca)
+from repro.data import make_svm_data                        # noqa: E402
 
 
-def run_instance(exp, lam, scale, iters, seed=0):
+def run_instance(exp, lam, scale, iters, engine, backend, seed=0):
     bn, bm = int(exp.block_n * scale), int(exp.block_m * scale)
     n, m = exp.P * bn, exp.Q * bm
     X, y = make_svm_data(n, m, seed=seed)
     w_ref, _ = serial_sdca("hinge", X, y, lam=lam,
                            epochs=max(200, 3 * iters))
     f_star = float(objective("hinge", X, y, w_ref, lam))
-    data = partition(X, y, exp.P, exp.Q)
     out = {"n": n, "m": m, "P": exp.P, "Q": exp.Q, "lam": lam,
-           "f_star": f_star, "methods": {}}
+           "f_star": f_star, "engine": engine, "backend": backend,
+           "methods": {}}
 
-    def trace(runner, label):
-        hist = []
-        t0 = time.perf_counter()
-
-        def cb(t, w, *rest):
-            hist.append({
-                "iter": t, "time_s": time.perf_counter() - t0,
-                "rel_opt": float(rel_opt(
-                    objective("hinge", X, y, w, lam), f_star))})
-        runner(cb)
+    def trace(name, cfg, label):
+        solver = get_solver(name)(engine=engine, local_backend=backend)
+        res = solver.solve("hinge", X, y, P=exp.P, Q=exp.Q, cfg=cfg,
+                           f_star=f_star)
+        hist = [{"iter": h["iter"], "time_s": h["time_s"],
+                 "rel_opt": h["rel_opt"]} for h in res.history]
         out["methods"][label] = hist
         emit_csv_row(f"fig3/{exp.name}/lam{lam}/{label}",
                      hist[-1]["time_s"] * 1e6 / len(hist),
                      f"rel_opt={hist[-1]['rel_opt']:.4f}")
 
-    trace(lambda cb: d3ca_simulated(
-        "hinge", data, D3CAConfig(lam=lam, outer_iters=iters), callback=cb),
-        "d3ca")
+    trace("d3ca", D3CAConfig(lam=lam, outer_iters=iters), "d3ca")
     gamma = 0.02 if lam <= 1e-2 else 0.05
-    trace(lambda cb: radisa_simulated(
-        "hinge", data, RADiSAConfig(lam=lam, gamma=gamma,
-                                    outer_iters=iters), callback=cb),
-        "radisa")
-    trace(lambda cb: radisa_simulated(
-        "hinge", data, RADiSAConfig(lam=lam, gamma=gamma, outer_iters=iters,
-                                    variant="avg"), callback=cb),
-        "radisa_avg")
-    chol = admm_setup_simulated(data, ADMMConfig(lam=lam, rho=lam))
-    trace(lambda cb: admm_simulated(
-        "hinge", data, ADMMConfig(lam=lam, rho=lam,
-                                  outer_iters=3 * iters),
-        callback=cb, chol=chol), "admm")
+    trace("radisa", RADiSAConfig(lam=lam, gamma=gamma, outer_iters=iters),
+          "radisa")
+    trace("radisa", RADiSAConfig(lam=lam, gamma=gamma, outer_iters=iters,
+                                 variant="avg"), "radisa_avg")
+    trace("admm", ADMMConfig(lam=lam, rho=lam, outer_iters=3 * iters),
+          "admm")
     return out
 
 
@@ -74,14 +66,17 @@ def main(argv=None):
     ap.add_argument("--scale", type=float, default=0.08)
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--iters", type=int, default=15)
+    add_engine_args(ap)
     args = ap.parse_args(argv)
     scale = 1.0 if args.full else args.scale
 
     results = []
     for exp in PART1:
         for lam in (1e-1, 1e-2):
-            results.append(run_instance(exp, lam, scale, args.iters))
-    save_result("fig3_time", {"scale": scale, "results": results})
+            results.append(run_instance(exp, lam, scale, args.iters,
+                                        args.engine, args.backend))
+    save_result("fig3_time", {"scale": scale, "engine": args.engine,
+                              "backend": args.backend, "results": results})
 
 
 if __name__ == "__main__":

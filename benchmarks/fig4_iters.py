@@ -1,22 +1,27 @@
 """Paper Figure 4: relative optimality difference vs ITERATION count
-(50 iterations), separating algorithmic progress from wall time."""
+(50 iterations), separating algorithmic progress from wall time.  Runs
+through the unified solver API (any engine x backend)."""
 from __future__ import annotations
 
 import argparse
+import sys
 
-from repro.configs.svm_paper import PART1
-from repro.core import (ADMMConfig, D3CAConfig, RADiSAConfig, admm_simulated,
-                        d3ca_simulated, objective, partition,
-                        radisa_simulated, rel_opt, serial_sdca)
-from repro.data import make_svm_data
+from .common import add_engine_args, emit_csv_row, ensure_host_devices, \
+    save_result
 
-from .common import emit_csv_row, save_result
+ensure_host_devices(sys.argv)
+
+from repro.configs.svm_paper import PART1                   # noqa: E402
+from repro.core import (ADMMConfig, D3CAConfig, RADiSAConfig,  # noqa: E402
+                        get_solver, objective, serial_sdca)
+from repro.data import make_svm_data                        # noqa: E402
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=0.08)
     ap.add_argument("--iters", type=int, default=50)
+    add_engine_args(ap)
     args = ap.parse_args(argv)
 
     exp = PART1[0]            # the 4x2 instance, as in the paper's Fig. 4
@@ -25,37 +30,28 @@ def main(argv=None):
     X, y = make_svm_data(exp.P * bn, exp.Q * bm, seed=0)
     w_ref, _ = serial_sdca("hinge", X, y, lam=lam, epochs=300)
     f_star = float(objective("hinge", X, y, w_ref, lam))
-    data = partition(X, y, exp.P, exp.Q)
 
     curves = {}
 
-    def cb_for(label):
-        curves[label] = []
+    def run(name, cfg, label):
+        solver = get_solver(name)(engine=args.engine,
+                                  local_backend=args.backend)
+        res = solver.solve("hinge", X, y, P=exp.P, Q=exp.Q, cfg=cfg,
+                           f_star=f_star)
+        curves[label] = [h["rel_opt"] for h in res.history]
 
-        def cb(t, w, *rest):
-            curves[label].append(float(rel_opt(
-                objective("hinge", X, y, w, lam), f_star)))
-        return cb
-
-    d3ca_simulated("hinge", data,
-                   D3CAConfig(lam=lam, outer_iters=args.iters),
-                   callback=cb_for("d3ca"))
-    radisa_simulated("hinge", data,
-                     RADiSAConfig(lam=lam, gamma=0.02,
-                                  outer_iters=args.iters),
-                     callback=cb_for("radisa"))
-    radisa_simulated("hinge", data,
-                     RADiSAConfig(lam=lam, gamma=0.02, outer_iters=args.iters,
-                                  variant="avg"),
-                     callback=cb_for("radisa_avg"))
-    admm_simulated("hinge", data,
-                   ADMMConfig(lam=lam, rho=lam, outer_iters=args.iters),
-                   callback=cb_for("admm"))
+    run("d3ca", D3CAConfig(lam=lam, outer_iters=args.iters), "d3ca")
+    run("radisa", RADiSAConfig(lam=lam, gamma=0.02, outer_iters=args.iters),
+        "radisa")
+    run("radisa", RADiSAConfig(lam=lam, gamma=0.02, outer_iters=args.iters,
+                               variant="avg"), "radisa_avg")
+    run("admm", ADMMConfig(lam=lam, rho=lam, outer_iters=args.iters), "admm")
 
     for label, c in curves.items():
         emit_csv_row(f"fig4/{label}", 0.0,
                      f"final_rel_opt={c[-1]:.4f};iters={len(c)}")
-    save_result("fig4_iters", {"lam": lam, "curves": curves})
+    save_result("fig4_iters", {"lam": lam, "engine": args.engine,
+                               "backend": args.backend, "curves": curves})
 
 
 if __name__ == "__main__":

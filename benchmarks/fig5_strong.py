@@ -4,20 +4,28 @@ optimality.  Data sets shaped like realsim / news20 (synthetic sparse
 stand-ins: the LIBSVM originals are not redistributable offline; identical
 dimensions & sparsity).
 
+Runs through the unified solver API (any engine x backend); the driver's
+early stopping (tol + f_star) provides the time-to-tolerance measurement.
+The unified API pads features to a multiple of P*Q, so every rung of the
+ladder runs for RADiSA too (the old harness skipped P∤m_q rungs).
+
 Reproduces the paper's qualitative findings: RADiSA prefers P > Q, D3CA
 prefers Q > P; more partitions help the larger data set.
 """
 from __future__ import annotations
 
 import argparse
-import time
+import sys
 
-from repro.configs.svm_paper import STRONG_CONFIGS
-from repro.core import (D3CAConfig, RADiSAConfig, d3ca_simulated, objective,
-                        partition, radisa_simulated, rel_opt, serial_sdca)
-from repro.data import make_sparse_svm_data
+from .common import add_engine_args, emit_csv_row, ensure_host_devices, \
+    save_result
 
-from .common import emit_csv_row, save_result
+ensure_host_devices(sys.argv)
+
+from repro.configs.svm_paper import STRONG_CONFIGS          # noqa: E402
+from repro.core import (D3CAConfig, RADiSAConfig, get_solver,  # noqa: E402
+                        objective, serial_sdca)
+from repro.data import make_sparse_svm_data                 # noqa: E402
 
 DATASETS = {
     # name: (n, m, density)  -- paper Table II, scaled for CPU by --scale
@@ -26,22 +34,15 @@ DATASETS = {
 }
 
 
-def time_to_tol(runner, f, f_star, tol):
-    hist = []
-    t0 = time.perf_counter()
-    done = {}
-
-    def cb(t, w, *rest):
-        ro = float(rel_opt(f(w), f_star))
-        hist.append(ro)
-        if ro < tol and "t" not in done:
-            done["t"] = time.perf_counter() - t0
-            done["iters"] = t
-    runner(cb)
-    done.setdefault("t", time.perf_counter() - t0)
-    done.setdefault("iters", len(hist))
-    done["final"] = hist[-1] if hist else float("inf")
-    return done
+def run_to_tol(solver, X, y, P, Q, cfg, f_star, tol):
+    """Solve with early stopping; report time/iters to tolerance."""
+    res = solver.solve("hinge", X, y, P=P, Q=Q, cfg=cfg, f_star=f_star,
+                       tol=tol)
+    hit = next((h for h in res.history if h["rel_opt"] < tol), None)
+    last = res.history[-1]
+    return {"t": (hit or last)["time_s"],
+            "iters": (hit or last)["iter"],
+            "final": last["rel_opt"]}
 
 
 def main(argv=None):
@@ -49,9 +50,10 @@ def main(argv=None):
     ap.add_argument("--scale", type=float, default=0.05)
     ap.add_argument("--tol", type=float, default=0.01)
     ap.add_argument("--iters", type=int, default=25)
+    add_engine_args(ap)
     args = ap.parse_args(argv)
 
-    out = {}
+    out = {"engine": args.engine, "backend": args.backend}
     for ds, (n, m, dens) in DATASETS.items():
         n, m = int(n * args.scale), int(m * args.scale)
         X, y = make_sparse_svm_data(n, m, density=max(dens, 0.01), seed=0)
@@ -60,23 +62,18 @@ def main(argv=None):
         for method, lam in (("radisa", 1e-3), ("d3ca", 1e-2)):
             w_ref, _ = serial_sdca("hinge", X, y, lam=lam, epochs=200)
             f_star = float(objective("hinge", X, y, w_ref, lam))
-            f = lambda w: float(objective("hinge", X, y, w, lam))
+            solver = get_solver(method)(engine=args.engine,
+                                        local_backend=args.backend)
             for (P, Q) in STRONG_CONFIGS:
-                data = partition(X, y, P, Q)
+                n_p = -(-n // P)
                 if method == "radisa":
-                    if data.m_q % P:
-                        continue
                     # keep total processed points constant as K grows
-                    L = max(1, data.n_p // 2)
-                    runner = lambda cb: radisa_simulated(
-                        "hinge", data, RADiSAConfig(
-                            lam=lam, gamma=0.05 / P, L=L,
-                            outer_iters=args.iters), callback=cb)
+                    cfg = RADiSAConfig(lam=lam, gamma=0.05 / P,
+                                       L=max(1, n_p // 2),
+                                       outer_iters=args.iters)
                 else:
-                    runner = lambda cb: d3ca_simulated(
-                        "hinge", data, D3CAConfig(
-                            lam=lam, outer_iters=args.iters), callback=cb)
-                r = time_to_tol(runner, f, f_star, args.tol)
+                    cfg = D3CAConfig(lam=lam, outer_iters=args.iters)
+                r = run_to_tol(solver, X, y, P, Q, cfg, f_star, args.tol)
                 res[f"{method}_{P}x{Q}"] = r
                 emit_csv_row(f"fig5/{ds}/{method}/{P}x{Q}",
                              r["t"] * 1e6,

@@ -1,28 +1,28 @@
 """Paper Figure 6: weak scaling.  Per-processor workload constant
 (block 40,000 x 5,000 scaled by --scale); P grows 1..7 for Q in {2,3,4}
-and two sparsity levels; efficiency = t(P=1) / t(P)."""
+and two sparsity levels; efficiency = t(P=1) / t(P).  Runs through the
+unified solver API (any engine x backend)."""
 from __future__ import annotations
 
 import argparse
-import time
+import sys
 
-from repro.configs.svm_paper import WEAK_P, WEAK_Q, WEAK_SPARSITY
-from repro.core import (D3CAConfig, RADiSAConfig, d3ca_simulated, objective,
-                        partition, radisa_simulated, rel_opt, serial_sdca)
-from repro.data import make_sparse_svm_data
+from .common import add_engine_args, emit_csv_row, ensure_host_devices, \
+    save_result
 
-from .common import emit_csv_row, save_result
+ensure_host_devices(sys.argv)
+
+from repro.configs.svm_paper import WEAK_P, WEAK_Q, WEAK_SPARSITY  # noqa: E402
+from repro.core import (D3CAConfig, RADiSAConfig, get_solver,  # noqa: E402
+                        objective, serial_sdca)
+from repro.data import make_sparse_svm_data                 # noqa: E402
 
 
-def time_to_tol(runner, f, f_star, tol=0.05):
-    t0 = time.perf_counter()
-    done = {}
-
-    def cb(t, w, *rest):
-        if "t" not in done and float(rel_opt(f(w), f_star)) < tol:
-            done["t"] = time.perf_counter() - t0
-    runner(cb)
-    return done.get("t", time.perf_counter() - t0)
+def time_to_tol(solver, X, y, P, Q, cfg, f_star, tol=0.05):
+    res = solver.solve("hinge", X, y, P=P, Q=Q, cfg=cfg, f_star=f_star,
+                       tol=tol)
+    hit = next((h for h in res.history if h["rel_opt"] < tol), None)
+    return (hit or res.history[-1])["time_s"]
 
 
 def main(argv=None):
@@ -30,10 +30,11 @@ def main(argv=None):
     ap.add_argument("--scale", type=float, default=0.01)
     ap.add_argument("--iters", type=int, default=12)
     ap.add_argument("--max-p", type=int, default=4)
+    add_engine_args(ap)
     args = ap.parse_args(argv)
 
     bn, bm = int(40000 * args.scale), int(5000 * args.scale)
-    out = {}
+    out = {"engine": args.engine, "backend": args.backend}
     for r in WEAK_SPARSITY:
         for Q in WEAK_Q[:2] if args.max_p < 7 else WEAK_Q:
             base = {}
@@ -44,20 +45,14 @@ def main(argv=None):
                 for method, lam in (("radisa", 0.1), ("d3ca", 1.0)):
                     w_ref, _ = serial_sdca("hinge", X, y, lam=lam, epochs=60)
                     f_star = float(objective("hinge", X, y, w_ref, lam))
-                    f = lambda w: float(objective("hinge", X, y, w, lam))
-                    data = partition(X, y, P, Q)
+                    solver = get_solver(method)(engine=args.engine,
+                                                local_backend=args.backend)
                     if method == "radisa":
-                        if data.m_q % P:
-                            continue
-                        runner = lambda cb: radisa_simulated(
-                            "hinge", data, RADiSAConfig(
-                                lam=lam, gamma=0.05 / P,
-                                outer_iters=args.iters), callback=cb)
+                        cfg = RADiSAConfig(lam=lam, gamma=0.05 / P,
+                                           outer_iters=args.iters)
                     else:
-                        runner = lambda cb: d3ca_simulated(
-                            "hinge", data, D3CAConfig(
-                                lam=lam, outer_iters=args.iters), callback=cb)
-                    t = time_to_tol(runner, f, f_star)
+                        cfg = D3CAConfig(lam=lam, outer_iters=args.iters)
+                    t = time_to_tol(solver, X, y, P, Q, cfg, f_star)
                     kk = f"{method}_r{r}_Q{Q}"
                     base.setdefault(kk, {})
                     base[kk][P] = t

@@ -1,17 +1,29 @@
 """Benchmark harness entry point: one benchmark per paper table/figure,
-plus kernel micro-benchmarks and (if dry-run artifacts exist) the roofline
-table.  Prints ``name,us_per_call,derived`` CSV rows.
+plus the core solver benchmark, kernel micro-benchmarks and (if dry-run
+artifacts exist) the roofline table.  Prints ``name,us_per_call,derived``
+CSV rows.
 
     PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run --engine shard_map --backend pallas
+
+The --engine / --backend pair is threaded through every fig benchmark via
+the unified solver API.  ``core`` (the engine x backend throughput grid)
+always runs in a subprocess: it forces a fake 8-device host platform,
+which must happen before jax initializes.
 """
 from __future__ import annotations
 
 import argparse
 import os
+import subprocess
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(
     os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from .common import ensure_host_devices  # noqa: E402
+
+ensure_host_devices(sys.argv)
 
 
 def main(argv=None) -> None:
@@ -19,7 +31,11 @@ def main(argv=None) -> None:
     ap.add_argument("--quick", action="store_true",
                     help="smaller instances (CI-sized)")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig3,fig4,fig5,fig6,kernels,roofline")
+                    help="comma list: fig3,fig4,fig5,fig6,core,kernels,"
+                         "roofline")
+    ap.add_argument("--engine", default="simulated",
+                    choices=["simulated", "shard_map"])
+    ap.add_argument("--backend", default="ref", choices=["ref", "pallas"])
     args = ap.parse_args(argv)
 
     only = set(args.only.split(",")) if args.only else None
@@ -27,25 +43,41 @@ def main(argv=None) -> None:
     def want(name):
         return only is None or name in only
 
+    eb = ["--engine", args.engine, "--backend", args.backend]
     print("name,us_per_call,derived")
 
     if want("fig3"):
         from . import fig3_time
         fig3_time.main(["--scale", "0.05" if args.quick else "0.08",
-                        "--iters", "8" if args.quick else "15"])
+                        "--iters", "8" if args.quick else "15"] + eb)
     if want("fig4"):
         from . import fig4_iters
         fig4_iters.main(["--scale", "0.05" if args.quick else "0.08",
-                         "--iters", "20" if args.quick else "50"])
+                         "--iters", "20" if args.quick else "50"] + eb)
     if want("fig5"):
         from . import fig5_strong
         fig5_strong.main(["--scale", "0.02" if args.quick else "0.05",
-                          "--iters", "10" if args.quick else "25"])
+                          "--iters", "10" if args.quick else "25"] + eb)
     if want("fig6"):
         from . import fig6_weak
         fig6_weak.main(["--scale", "0.005" if args.quick else "0.01",
                         "--iters", "6" if args.quick else "12",
-                        "--max-p", "3" if args.quick else "4"])
+                        "--max-p", "3" if args.quick else "4"] + eb)
+    if want("core"):
+        # subprocess: core_bench forces its own host device count, which
+        # only takes effect before jax initializes
+        cmd = [sys.executable, "-m", "benchmarks.core_bench"]
+        if args.quick:
+            cmd.append("--quick")
+        env = dict(os.environ,
+                   PYTHONPATH=os.path.join(os.path.dirname(os.path.dirname(
+                       os.path.abspath(__file__))), "src"))
+        r = subprocess.run(cmd, env=env, cwd=os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__))))
+        if r.returncode:
+            # fail the harness like every other benchmark would
+            print(f"core,0.0,failed(rc={r.returncode})")
+            raise SystemExit(r.returncode)
     if want("kernels"):
         from . import kernels_bench
         kernels_bench.main([])

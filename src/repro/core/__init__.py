@@ -2,19 +2,25 @@
 from .admm import (ADMMConfig, admm_distributed,
                    admm_setup_simulated, admm_simulated)
 from .d3ca import D3CAConfig, d3ca_distributed, d3ca_simulated, make_d3ca_step
+from .engines import EngineProgram, drive, prepare_shard_map
 from .losses import LOSSES, get_loss
 from .partition import DoublyPartitioned, partition
 from .radisa import (RADiSAConfig, make_radisa_step, radisa_distributed,
                      radisa_simulated)
 from .reference import duality_gap, objective, rel_opt, serial_sdca
+from .solver import (ENGINES, LOCAL_BACKENDS, SolveResult, Solver,
+                     available_solvers, get_solver, register_solver)
 
 __all__ = [
     "ADMMConfig", "admm_distributed", "admm_setup_simulated",
     "admm_simulated",
     "D3CAConfig", "d3ca_distributed", "d3ca_simulated", "make_d3ca_step",
+    "EngineProgram", "drive", "prepare_shard_map",
     "LOSSES", "get_loss",
     "DoublyPartitioned", "partition",
     "RADiSAConfig", "make_radisa_step", "radisa_distributed",
     "radisa_simulated",
     "duality_gap", "objective", "rel_opt", "serial_sdca",
+    "ENGINES", "LOCAL_BACKENDS", "SolveResult", "Solver",
+    "available_solvers", "get_solver", "register_solver",
 ]

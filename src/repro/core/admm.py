@@ -22,6 +22,11 @@ predictions s_pq = A_pq w_q, the augmented Lagrangian alternates:
   3. dual ascent: u_pq += s_pq - A_pq w_q.
 
 All three loss proxes are provided (hinge / squared / logistic-Newton).
+
+ADMM has no stochastic local solver, so the ``local_backend`` knob of the
+unified framework is accepted and ignored (its inner solve is the cached
+Cholesky back-substitution -- see the support matrix in the README).
+Both engines are exposed as ``EngineProgram`` builders like d3ca/radisa.
 """
 from __future__ import annotations
 
@@ -32,6 +37,7 @@ import jax.numpy as jnp
 from jax.scipy.linalg import cho_factor, cho_solve
 from jax.sharding import PartitionSpec as P
 
+from .engines import EngineProgram, ShardMapData, drive_with_callback
 from .losses import Loss, get_loss
 from .partition import DoublyPartitioned
 from .util import pvary, shard_map
@@ -80,20 +86,21 @@ def admm_setup_simulated(data: DoublyPartitioned, cfg: ADMMConfig):
     return jax.vmap(lambda Mq: cho_factor(Mq)[0])(M)     # (Q, m_q, m_q)
 
 
-def admm_simulated(loss_name: str, data: DoublyPartitioned, cfg: ADMMConfig,
-                   callback=None, chol=None):
+def admm_simulated_program(loss: Loss, data: DoublyPartitioned,
+                           cfg: ADMMConfig, *, chol=None,
+                           w0=None) -> EngineProgram:
+    """vmap-over-cells engine.  State: (s (P,Q,n_p), u (P,Q,n_p),
+    w_blocks (Q, m_q)).  The Cholesky setup runs at build time."""
+    loss_name = loss.name
     Pn, Qn = data.P, data.Q
     n = data.n
     if chol is None:
         chol = admm_setup_simulated(data, cfg)
     c_prox = Qn / (cfg.rho * n)   # f_p carries the global 1/n factor
 
-    s = jnp.zeros((Pn, Qn, data.n_p))
-    u = jnp.zeros((Pn, Qn, data.n_p))
-    w = jnp.zeros((Qn, data.m_q))
-
     @jax.jit
-    def step(s, u, w):
+    def step(t, state):
+        s, u, w = state
         Aw = jnp.einsum("pqnm,qm->pqn", data.x_blocks, w)
         cmat = Aw - u                                    # c_pq
         v = cmat.sum(axis=1)                             # (P, n_p)
@@ -106,11 +113,20 @@ def admm_simulated(loss_name: str, data: DoublyPartitioned, cfg: ADMMConfig,
         u = u + s - jnp.einsum("pqnm,qm->pqn", data.x_blocks, w)
         return s, u, w
 
-    for t in range(1, cfg.outer_iters + 1):
-        s, u, w = step(s, u, w)
-        if callback is not None:
-            callback(t, data.w_from_blocks(w))
-    return data.w_from_blocks(w)
+    w_init = (jnp.zeros((Qn, data.m_q)) if w0 is None
+              else data.w_to_blocks(jnp.asarray(w0)))
+    return EngineProgram(
+        state=(jnp.zeros((Pn, Qn, data.n_p)), jnp.zeros((Pn, Qn, data.n_p)),
+               w_init),
+        step=step,
+        w_of=lambda st: data.w_from_blocks(st[2]))
+
+
+def admm_simulated(loss_name: str, data: DoublyPartitioned, cfg: ADMMConfig,
+                   callback=None, chol=None):
+    prog = admm_simulated_program(get_loss(loss_name), data, cfg, chol=chol)
+    state = drive_with_callback(prog, cfg.outer_iters, callback)
+    return prog.w_of(state)
 
 
 # ---------------------------------------------------------------------------
@@ -176,17 +192,38 @@ def admm_setup_distributed(mesh, x, cfg: ADMMConfig, *,
     ))(x)
 
 
+def admm_shard_map_program(loss: Loss, sdata: ShardMapData, cfg: ADMMConfig,
+                           *, w0=None) -> EngineProgram:
+    """shard_map engine.  State: (s (n_pad, Q), u (n_pad, Q), w (m_pad,)).
+
+    The cached Cholesky setup runs at build time (excluded from step
+    timings, as in the paper)."""
+    mesh = sdata.mesh
+    chol = admm_setup_distributed(mesh, sdata.x, cfg,
+                                  data_axis=sdata.data_axis,
+                                  model_axis=sdata.model_axis)
+    step = make_admm_step(loss.name, mesh, cfg, n=sdata.n,
+                          data_axis=sdata.data_axis,
+                          model_axis=sdata.model_axis)
+    from jax.sharding import NamedSharding
+    su_sharding = NamedSharding(mesh, P(sdata.data_axis, sdata.model_axis))
+    zeros_su = jax.device_put(jnp.zeros((sdata.n_pad, sdata.Q)), su_sharding)
+    w_init = sdata.zeros_model() if w0 is None else sdata.pad_w(w0)
+    return EngineProgram(
+        state=(zeros_su, zeros_su, w_init),
+        step=lambda t, st: step(sdata.x, sdata.y, sdata.mask, *st, chol),
+        w_of=lambda st: st[2][: sdata.m])
+
+
 def admm_distributed(loss_name: str, mesh, x, y, mask, cfg: ADMMConfig,
                      callback=None):
     n, m = x.shape
     Qn = mesh.shape["model"]
     chol = admm_setup_distributed(mesh, x, cfg)
     step = make_admm_step(loss_name, mesh, cfg, n=n)
-    s = jnp.zeros((n, Qn))
-    u = jnp.zeros((n, Qn))
-    w = jnp.zeros((m,))
-    for t in range(1, cfg.outer_iters + 1):
-        s, u, w = step(x, y, mask, s, u, w, chol)
-        if callback is not None:
-            callback(t, w)
-    return w
+    prog = EngineProgram(
+        state=(jnp.zeros((n, Qn)), jnp.zeros((n, Qn)), jnp.zeros((m,))),
+        step=lambda t, st: step(x, y, mask, *st, chol),
+        w_of=lambda st: st[2])
+    state = drive_with_callback(prog, cfg.outer_iters, callback)
+    return state[2]

@@ -1,17 +1,22 @@
 """D3CA -- Doubly Distributed Dual Coordinate Ascent (Algorithm 1).
 
-Two execution engines share the cell-local solver ``local.local_sdca``:
+The cell-local solver is ``local.local_sdca`` (pure jnp or the Pallas
+SDCA kernel, selected by ``local_backend``).  The two engines are exposed
+as :class:`~repro.core.engines.EngineProgram` builders consumed by the
+unified solver framework (``repro.core.solver``):
 
-  * ``d3ca_simulated``   -- the P x Q grid is materialized as leading array
-    axes and cells run under ``vmap``; used on one device for correctness
-    tests, small problems, and the paper-figure benchmarks.
-  * ``make_d3ca_step``   -- a ``shard_map`` step over a (data=P, model=Q)
-    mesh: each device owns one (n_p, m_q) block; the dual average of step 6
-    is a ``pmean`` over the "model" axis and the primal-dual map of step 9
-    is a ``psum`` over the "data" axis.  This is the production path and is
-    what the multi-pod dry-run lowers.
+  * ``d3ca_simulated_program``  -- the P x Q grid as leading array axes,
+    cells under ``vmap``; one device.
+  * ``d3ca_shard_map_program``  -- a ``shard_map`` step over a
+    (data=P, model=Q) mesh: each device owns one (n_p, m_q) block; the
+    dual average of step 6 is a ``pmean`` over the "model" axis and the
+    primal-dual map of step 9 is a ``psum`` over the "data" axis.  This
+    is the production path and what the multi-pod dry-run lowers.
 
-The two are tested to agree to float tolerance (tests/test_distributed.py).
+``d3ca_simulated`` / ``d3ca_distributed`` are thin compatibility wrappers
+over the programs; the outer loop lives once in ``engines.drive`` /
+``solver.Solver.solve``.  The engines are tested to agree to float
+tolerance (tests/test_distributed.py, tests/test_solver.py).
 """
 from __future__ import annotations
 
@@ -23,6 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from .engines import EngineProgram, ShardMapData, drive_with_callback
 from .local import local_sdca
 from .losses import Loss, get_loss
 from .partition import DoublyPartitioned
@@ -42,22 +48,21 @@ class D3CAConfig:
 # simulated grid engine
 # ----------------------------------------------------------------------------
 
-def d3ca_simulated(loss_name: str, data: DoublyPartitioned, cfg: D3CAConfig,
-                   callback=None):
-    """Run D3CA on the block grid with vmap-over-cells. Returns (w, alpha)."""
-    loss = get_loss(loss_name)
+def d3ca_simulated_program(loss: Loss, data: DoublyPartitioned,
+                           cfg: D3CAConfig, *, local_backend: str = "ref",
+                           w0=None, alpha0=None) -> EngineProgram:
+    """vmap-over-cells engine.  State: (alpha (P, n_p), w_blocks (Q, m_q))."""
     Pn, Qn = data.P, data.Q
     n, lam = data.n, cfg.lam
     steps = cfg.local_steps or data.n_p
     key0 = jax.random.PRNGKey(cfg.seed)
 
-    alpha = jnp.zeros((Pn, data.n_p))            # alpha_[p, .]
-    w_blocks = jnp.zeros((Qn, data.m_q))         # w_[., q]
-
-    local = partial(local_sdca, loss, lam=lam, n=n, Q=Qn, steps=steps)
+    local = partial(local_sdca, loss, lam=lam, n=n, Q=Qn, steps=steps,
+                    backend=local_backend)
 
     @jax.jit
-    def outer(t, alpha, w_blocks):
+    def outer(t, state):
+        alpha, w_blocks = state
         beta = lam / t
         key_t = jax.random.fold_in(key0, t)
 
@@ -77,12 +82,25 @@ def d3ca_simulated(loss_name: str, data: DoublyPartitioned, cfg: D3CAConfig,
                               data.x_blocks) / (lam * n)
         return alpha, w_blocks
 
-    for t in range(1, cfg.outer_iters + 1):
-        alpha, w_blocks = outer(t, alpha, w_blocks)
-        if callback is not None:
-            callback(t, data.w_from_blocks(w_blocks),
-                     data.alpha_from_blocks(alpha * data.mask))
-    return data.w_from_blocks(w_blocks), data.alpha_from_blocks(alpha * data.mask)
+    alpha_init = (jnp.zeros((Pn, data.n_p)) if alpha0 is None
+                  else data.alpha_to_blocks(jnp.asarray(alpha0)))
+    w_init = (jnp.zeros((Qn, data.m_q)) if w0 is None
+              else data.w_to_blocks(jnp.asarray(w0)))
+    return EngineProgram(
+        state=(alpha_init, w_init),
+        step=outer,
+        w_of=lambda s: data.w_from_blocks(s[1]),
+        alpha_of=lambda s: data.alpha_from_blocks(s[0] * data.mask))
+
+
+def d3ca_simulated(loss_name: str, data: DoublyPartitioned, cfg: D3CAConfig,
+                   callback=None, local_backend: str = "ref"):
+    """Run D3CA on the block grid with vmap-over-cells. Returns (w, alpha)."""
+    prog = d3ca_simulated_program(get_loss(loss_name), data, cfg,
+                                  local_backend=local_backend)
+    state = drive_with_callback(prog, cfg.outer_iters, callback,
+                                pass_alpha=True)
+    return prog.w_of(state), prog.alpha_of(state)
 
 
 # ----------------------------------------------------------------------------
@@ -90,7 +108,8 @@ def d3ca_simulated(loss_name: str, data: DoublyPartitioned, cfg: D3CAConfig,
 # ----------------------------------------------------------------------------
 
 def make_d3ca_step(loss: Loss, mesh, cfg: D3CAConfig, *, n: int, n_p: int,
-                   data_axis: str = "data", model_axis: str = "model"):
+                   data_axis: str = "data", model_axis: str = "model",
+                   local_backend: str = "ref"):
     """Build the jitted distributed D3CA outer step.
 
     Array layouts (global shapes; sharding in parens):
@@ -120,7 +139,8 @@ def make_d3ca_step(loss: Loss, mesh, cfg: D3CAConfig, *, n: int, n_p: int,
             key_p = jax.random.fold_in(key_t, p)
             dalpha = local_sdca(loss, x_b, y_b, mask_b, a_b, w_b,
                                 lam=lam, n=n, Q=Qn, steps=steps, key=key_p,
-                                step_mode=cfg.step_mode, beta=beta)
+                                step_mode=cfg.step_mode, beta=beta,
+                                backend=local_backend)
             # step 6: average the dual deltas of the Q feature blocks
             a_new = a_b + jax.lax.pmean(dalpha, model_axis) / Pn
             # step 9: primal-dual map, reduced over observation partitions
@@ -137,19 +157,42 @@ def make_d3ca_step(loss: Loss, mesh, cfg: D3CAConfig, *, n: int, n_p: int,
     return jax.jit(step, static_argnums=())
 
 
+def d3ca_shard_map_program(loss: Loss, sdata: ShardMapData, cfg: D3CAConfig,
+                           *, local_backend: str = "ref",
+                           w0=None, alpha0=None) -> EngineProgram:
+    """shard_map engine.  State: (alpha (n_pad,), w (m_pad,)) sharded."""
+    step = make_d3ca_step(loss, sdata.mesh, cfg, n=sdata.n, n_p=sdata.n_p,
+                          data_axis=sdata.data_axis,
+                          model_axis=sdata.model_axis,
+                          local_backend=local_backend)
+    key0 = jax.random.PRNGKey(cfg.seed)
+    alpha_init = (sdata.zeros_data() if alpha0 is None
+                  else sdata.pad_alpha(alpha0))
+    w_init = sdata.zeros_model() if w0 is None else sdata.pad_w(w0)
+    return EngineProgram(
+        state=(alpha_init, w_init),
+        step=lambda t, s: step(t, key0, sdata.x, sdata.y, sdata.mask, *s),
+        w_of=lambda s: s[1][: sdata.m],
+        alpha_of=lambda s: s[0][: sdata.n])
+
+
 def d3ca_distributed(loss_name: str, mesh, x, y, mask, cfg: D3CAConfig,
-                     callback=None):
-    """Convenience driver for the shard_map engine (single-controller)."""
+                     callback=None, local_backend: str = "ref"):
+    """Convenience driver for the shard_map engine (single-controller).
+
+    ``x``/``y``/``mask`` must already be padded so the mesh divides both
+    axes (the unified ``Solver`` API does this automatically)."""
     loss = get_loss(loss_name)
     n, m = x.shape
     Pn = mesh.shape["data"]
-    n_p = n // Pn
-    step = make_d3ca_step(loss, mesh, cfg, n=n, n_p=n_p)
+    step = make_d3ca_step(loss, mesh, cfg, n=n, n_p=n // Pn,
+                          local_backend=local_backend)
     key0 = jax.random.PRNGKey(cfg.seed)
-    alpha = jnp.zeros((n,))
-    w = jnp.zeros((m,))
-    for t in range(1, cfg.outer_iters + 1):
-        alpha, w = step(t, key0, x, y, mask, alpha, w)
-        if callback is not None:
-            callback(t, w, alpha)
-    return w, alpha
+    prog = EngineProgram(
+        state=(jnp.zeros((n,)), jnp.zeros((m,))),
+        step=lambda t, s: step(t, key0, x, y, mask, *s),
+        w_of=lambda s: s[1],
+        alpha_of=lambda s: s[0])
+    state = drive_with_callback(prog, cfg.outer_iters, callback,
+                                pass_alpha=True)
+    return state[1], state[0]

@@ -1,0 +1,162 @@
+"""Engine adapters for the unified solver framework (``repro.core.solver``).
+
+An *engine* is how the P x Q block grid of the paper is executed:
+
+  * ``"simulated"``  -- the grid is materialized as leading array axes of a
+    :class:`~repro.core.partition.DoublyPartitioned` and cells run under
+    ``vmap`` on one device (correctness tests, paper-figure benchmarks);
+  * ``"shard_map"``  -- a (data=P, model=Q) device mesh where each device
+    owns one (n_p, m_q) block in HBM and the paper's reductions are mesh
+    collectives (the production path).
+
+Each algorithm contributes one :class:`EngineProgram` per engine -- the
+initial state, a jitted outer step, and extractors for the global primal
+(and dual) iterates.  Everything else (the outer loop, history, early
+stopping, warm starts) lives once in the shared driver.
+
+Both engines pad the feature dimension to a multiple of P*Q (columns of
+zeros are inert under every update rule), so a cell sees bit-identical
+blocks regardless of engine and the two executions agree to float
+tolerance.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from .partition import _ceil_to
+from .util import as_axes, axes_size
+
+
+@dataclasses.dataclass
+class EngineProgram:
+    """One algorithm bound to one engine: state + step + extractors."""
+
+    state: Any                                    # initial state pytree
+    step: Callable[[int, Any], Any]               # (t, state) -> state
+    w_of: Callable[[Any], jnp.ndarray]            # state -> global w (m,)
+    alpha_of: Optional[Callable[[Any], jnp.ndarray]] = None  # -> alpha (n,)
+
+
+def drive(prog: EngineProgram, outer_iters: int, observe=None):
+    """Run the outer loop.  ``observe(t, state) -> bool`` is called after
+    every step; returning True stops early.  Returns
+    (final state, iterations run, stopped_early)."""
+    state = prog.state
+    done = 0
+    for t in range(1, outer_iters + 1):
+        state = prog.step(t, state)
+        done = t
+        if observe is not None and observe(t, state):
+            return state, done, True
+    return state, done, False
+
+
+def drive_with_callback(prog: EngineProgram, outer_iters: int, callback=None,
+                        pass_alpha: bool = False):
+    """Driver for the legacy ``*_simulated`` / ``*_distributed`` wrappers:
+    relay each iterate to ``callback(t, w[, alpha])``, ignoring its return
+    value (legacy callbacks never early-stop).  Returns the final state."""
+    observe = None
+    if callback is not None:
+        def observe(t, state):
+            if pass_alpha:
+                callback(t, prog.w_of(state), prog.alpha_of(state))
+            else:
+                callback(t, prog.w_of(state))
+            return False
+    state, _, _ = drive(prog, outer_iters, observe)
+    return state
+
+
+# ---------------------------------------------------------------------------
+# shard_map data preparation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardMapData:
+    """Padded global arrays placed on a (data=P, model=Q) mesh."""
+
+    mesh: Any
+    x: jnp.ndarray          # (n_pad, m_pad)  sharded (data, model)
+    y: jnp.ndarray          # (n_pad,)        sharded (data,)
+    mask: jnp.ndarray       # (n_pad,)        sharded (data,)
+    n: int                  # true observation count
+    m: int                  # true feature count
+    P: int
+    Q: int
+    data_axis: Any = "data"
+    model_axis: str = "model"
+
+    @property
+    def n_pad(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def m_pad(self) -> int:
+        return self.x.shape[1]
+
+    @property
+    def n_p(self) -> int:
+        return self.x.shape[0] // self.P
+
+    @property
+    def m_q(self) -> int:
+        return self.x.shape[1] // self.Q
+
+    def put(self, arr, spec):
+        """device_put onto this mesh with the given PartitionSpec."""
+        return jax.device_put(arr, NamedSharding(self.mesh, spec))
+
+    def zeros_data(self):
+        return self.put(jnp.zeros((self.n_pad,)), P(self.data_axis))
+
+    def zeros_model(self):
+        return self.put(jnp.zeros((self.m_pad,)), P(self.model_axis))
+
+    def pad_w(self, w):
+        wp = np.zeros((self.m_pad,), np.float32)
+        wp[: self.m] = np.asarray(w, np.float32)
+        return self.put(jnp.asarray(wp), P(self.model_axis))
+
+    def pad_alpha(self, alpha):
+        ap = np.zeros((self.n_pad,), np.float32)
+        ap[: self.n] = np.asarray(alpha, np.float32)
+        return self.put(jnp.asarray(ap), P(self.data_axis))
+
+
+def prepare_shard_map(mesh, X, y, *, data_axis="data", model_axis="model",
+                      m_multiple: int | None = None) -> ShardMapData:
+    """Pad (X, y) so the mesh divides both axes and place the shards.
+
+    The padding rule is identical to ``partition(..., m_multiple=P*Q)``,
+    so a shard_map cell sees the same (n_p, m_q) block as the simulated
+    grid's cell (p, q)."""
+    Pn = axes_size(mesh, data_axis)
+    Qn = axes_size(mesh, model_axis)
+    if m_multiple is not None and m_multiple % Qn:
+        raise ValueError(f"m_multiple={m_multiple} not a multiple of Q={Qn}")
+    n, m = X.shape
+    n_pad = _ceil_to(n, Pn)
+    m_pad = _ceil_to(m, m_multiple or Qn)
+    Xp = np.zeros((n_pad, m_pad), np.float32)
+    Xp[:n, :m] = np.asarray(X, np.float32)
+    yp = np.zeros((n_pad,), np.float32)
+    yp[:n] = np.asarray(y, np.float32)
+    maskp = np.zeros((n_pad,), np.float32)
+    maskp[:n] = 1.0
+    daxes = as_axes(data_axis)
+    put = lambda a, spec: jax.device_put(a, NamedSharding(mesh, spec))
+    return ShardMapData(
+        mesh=mesh,
+        x=put(jnp.asarray(Xp), P(daxes, model_axis)),
+        y=put(jnp.asarray(yp), P(daxes)),
+        mask=put(jnp.asarray(maskp), P(daxes)),
+        n=n, m=m, P=Pn, Q=Qn,
+        data_axis=data_axis, model_axis=model_axis)

@@ -4,18 +4,40 @@ Each function sees exactly the data one worker of the P x Q grid owns:
 ``x`` of shape (n_p, m_q), labels/mask (n_p,), and the relevant slices of
 the primal/dual vectors.  They are pure and jit/vmap/shard_map friendly.
 
-These are the pure-jnp *reference* implementations; drop-in Pallas TPU
-kernels for the two hot loops live in ``repro.kernels.sdca`` and
-``repro.kernels.svrg`` (selected via ``backend="pallas"``).
+Both take a ``backend`` knob ("ref" | "pallas"):
+
+  * ``backend="ref"`` runs the pure-jnp lax.scan implementation below;
+  * ``backend="pallas"`` dispatches to the Pallas TPU kernels in
+    ``repro.kernels.sdca`` / ``repro.kernels.svrg`` (interpret mode on
+    CPU, real kernels on TPU).  The coordinate order is drawn from the
+    same PRNG key either way, so the two backends agree to float
+    tolerance.  The kernels support hinge and squared losses; logistic
+    raises (use backend="ref").
+
+The knob is threaded end-to-end from the solver API
+(``repro.core.solver``) through both engines, so the kernels run inside
+the vmap grid and inside each shard_map cell alike.
 """
 from __future__ import annotations
-
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from .losses import Loss
+
+PALLAS_LOSSES = ("hinge", "squared")
+
+
+def _check_pallas_loss(loss: Loss):
+    if loss.name not in PALLAS_LOSSES:
+        raise NotImplementedError(
+            f"local_backend='pallas' supports losses {PALLAS_LOSSES}, not "
+            f"{loss.name!r}; use local_backend='ref' for {loss.name}")
+
+
+def _interpret() -> bool:
+    from repro.kernels import default_interpret
+    return default_interpret()
 
 
 # ----------------------------------------------------------------------------
@@ -24,7 +46,8 @@ from .losses import Loss
 # ----------------------------------------------------------------------------
 
 def local_sdca(loss: Loss, x, y, mask, alpha0, w0, *, lam, n, Q,
-               steps, key, step_mode: str = "exact", beta=None):
+               steps, key, step_mode: str = "exact", beta=None,
+               backend: str = "ref"):
     """Run ``steps`` SDCA coordinate updates on the local block.
 
     Args:
@@ -40,14 +63,26 @@ def local_sdca(loss: Loss, x, y, mask, alpha0, w0, *, lam, n, Q,
         paper's per-partition sampling).
       step_mode: "exact" uses ||x_i||^2; "beta" uses the paper's step-size
         parameter ``beta`` (they use beta = lam / t).
+      backend: "ref" (pure jnp) | "pallas" (TPU kernel; interpret on CPU).
 
     Returns:
       delta_alpha: (n_p,) accumulated dual change of this cell.
     """
     n_p = x.shape[0]
     idx = jax.random.randint(key, (steps,), 0, n_p)
-    x_sq = jnp.sum(x * x, axis=1)  # (n_p,)
     use_beta = step_mode == "beta"
+
+    if backend == "pallas":
+        _check_pallas_loss(loss)
+        from repro.kernels.sdca import sdca_epoch_pallas
+        dalpha, _ = sdca_epoch_pallas(
+            x, y, mask, alpha0, w0, idx, lam=lam, n=n, Q=Q, loss=loss.name,
+            beta=(beta if use_beta else None), interpret=_interpret())
+        return dalpha
+    if backend != "ref":
+        raise ValueError(f"unknown local backend {backend!r}")
+
+    x_sq = jnp.sum(x * x, axis=1)  # (n_p,)
 
     def body(carry, i):
         w, dalpha = carry
@@ -72,7 +107,7 @@ def local_sdca(loss: Loss, x, y, mask, alpha0, w0, *, lam, n, Q,
 # ----------------------------------------------------------------------------
 
 def local_svrg(loss: Loss, x_sub, y, mask, z_anchor, w_anchor_sub, mu_sub,
-               *, lam, L, eta, key, lo=None):
+               *, lam, L, eta, key, lo=None, backend: str = "ref"):
     """L SVRG steps on one feature sub-block.
 
     The stochastic partial gradient uses the anchor inner products
@@ -93,6 +128,7 @@ def local_svrg(loss: Loss, x_sub, y, mask, z_anchor, w_anchor_sub, mu_sub,
       mu_sub: (m_sub,) coordinates of the full anchor gradient of F
         (includes the 2*lam*w_tilde term).
       eta: learning rate eta_t.
+      backend: "ref" (pure jnp) | "pallas" (TPU kernel; interpret on CPU).
 
     Returns:
       w_sub: (m_sub,) updated sub-block.
@@ -100,6 +136,24 @@ def local_svrg(loss: Loss, x_sub, y, mask, z_anchor, w_anchor_sub, mu_sub,
     n_p = x_sub.shape[0]
     m_sub = w_anchor_sub.shape[0]
     idx = jax.random.randint(key, (L,), 0, n_p)
+
+    if backend == "pallas":
+        _check_pallas_loss(loss)
+        from repro.kernels.svrg import svrg_inner_pallas
+        if lo is None:
+            x_k = x_sub
+        else:
+            # The kernel gathers one (1, m_sub) row per step straight out
+            # of this slice via scalar-prefetched DMA, so the fused
+            # column-slice pathology of the jnp path does not apply: the
+            # slice is materialized once per outer iteration, not once
+            # per inner step.
+            x_k = jax.lax.dynamic_slice(x_sub, (0, lo), (n_p, m_sub))
+        return svrg_inner_pallas(x_k, y, mask, z_anchor, w_anchor_sub,
+                                 mu_sub, idx, lam=lam, eta=eta,
+                                 loss=loss.name, interpret=_interpret())
+    if backend != "ref":
+        raise ValueError(f"unknown local backend {backend!r}")
 
     def body(w, j):
         if lo is None:

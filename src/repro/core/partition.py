@@ -73,12 +73,21 @@ class DoublyPartitioned:
         return Xp[: self.n, : self.m], self.y_blocks.reshape(-1)[: self.n]
 
 
-def partition(X, y, P: int, Q: int) -> DoublyPartitioned:
-    """Split (X, y) into the P x Q doubly distributed block grid."""
+def partition(X, y, P: int, Q: int, *,
+              m_multiple: int | None = None) -> DoublyPartitioned:
+    """Split (X, y) into the P x Q doubly distributed block grid.
+
+    ``m_multiple`` pads the feature dimension to a multiple of that value
+    instead of just Q.  The solver framework passes P*Q so that RADiSA's
+    P sub-blocks divide every feature block and both engines see
+    bit-identical blocks.
+    """
     X = jnp.asarray(X)
     y = jnp.asarray(y)
+    if m_multiple is not None and m_multiple % Q:
+        raise ValueError(f"m_multiple={m_multiple} not a multiple of Q={Q}")
     n, m = X.shape
-    n_pad, m_pad = _ceil_to(n, P), _ceil_to(m, Q)
+    n_pad, m_pad = _ceil_to(n, P), _ceil_to(m, m_multiple or Q)
     n_p, m_q = n_pad // P, m_pad // Q
 
     Xp = jnp.zeros((n_pad, m_pad), X.dtype).at[:n, :m].set(X)

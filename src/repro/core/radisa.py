@@ -1,10 +1,10 @@
 """RADiSA -- RAndom Distributed Stochastic Algorithm (Algorithm 3).
 
 Primal SGD x CD hybrid with SVRG variance reduction in the doubly
-distributed setting.  Engines mirror ``d3ca.py``:
-
-  * ``radisa_simulated``  -- vmap-over-cells on one device.
-  * ``make_radisa_step``  -- shard_map over a (data=P, model=Q) mesh.
+distributed setting.  The cell-local inner loop is ``local.local_svrg``
+(pure jnp or the Pallas SVRG kernel, selected by ``local_backend``); the
+engines mirror ``d3ca.py`` and are exposed as ``EngineProgram`` builders
+for the unified solver framework.
 
 Communication pattern (per outer iteration):
   1. anchor pass: z = X w_tilde        -> psum over "model" (row inner
@@ -16,17 +16,24 @@ Communication pattern (per outer iteration):
 
 ``variant="avg"`` implements RADiSA-avg: sub-blocks fully overlap (every
 cell updates the whole local feature block) and solutions are averaged.
+
+RADiSA pre-splits each feature block into P sub-blocks, so P must divide
+m_q.  The simulated engine repartitions with inert zero-column padding
+when it does not; ``make_radisa_step`` fails loudly instead (the data is
+already laid out across devices -- see the ValueError below).  The
+unified ``Solver`` API pads the feature dimension to a multiple of P*Q
+up front for BOTH engines, so the constraint never binds there.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from .engines import EngineProgram, ShardMapData, drive_with_callback
 from .local import local_svrg
 from .losses import Loss, get_loss
 from .partition import DoublyPartitioned, subblock_slices
@@ -60,36 +67,20 @@ def _anchor_quantities(loss: Loss, data: DoublyPartitioned, w_blocks, lam):
 # simulated grid engine
 # ----------------------------------------------------------------------------
 
-def radisa_simulated(loss_name: str, data: DoublyPartitioned,
-                     cfg: RADiSAConfig, callback=None):
-    loss = get_loss(loss_name)
+def radisa_simulated_program(loss: Loss, data: DoublyPartitioned,
+                             cfg: RADiSAConfig, *,
+                             local_backend: str = "ref",
+                             w0=None) -> EngineProgram:
+    """vmap-over-cells engine.  State: w_blocks (Q, m_q).
+
+    Requires P | m_q (pre-pad with ``partition(..., m_multiple=P*Q)``)."""
     Pn, Qn = data.P, data.Q
-    if data.m_q % Pn:
-        # RADiSA pre-splits each feature block into P sub-blocks; repartition
-        # with extra (inert, all-zero) column padding so that P | m_q.
-        from .partition import partition as _partition
-        X, y = data.dense()
-        import jax.numpy as _jnp
-        m_pad = ((data.m + Pn * Qn - 1) // (Pn * Qn)) * (Pn * Qn)
-        Xp = _jnp.zeros((data.n, m_pad), X.dtype).at[:, : data.m].set(X)
-        padded = _partition(Xp, y, Pn, Qn)
-        true_m = data.m
-
-        def unpad_cb(t, w):
-            if callback is not None:
-                callback(t, w[:true_m])
-
-        w = radisa_simulated(loss_name, padded, cfg,
-                             callback=unpad_cb if callback else None)
-        return w[:true_m]
     lam = cfg.lam
     L = cfg.L or data.n_p
     m_sub = subblock_slices(data.m_q, Pn)
     key0 = jax.random.PRNGKey(cfg.seed)
 
-    w_blocks = jnp.zeros((Qn, data.m_q))
-
-    @partial(jax.jit, static_argnums=())
+    @jax.jit
     def outer(t, w_blocks):
         eta = cfg.eta(t)
         key_t = jax.random.fold_in(key0, t)
@@ -109,7 +100,8 @@ def radisa_simulated(loss_name: str, data: DoublyPartitioned,
                 lo_arg, w_anchor, mu_sub = None, w_blocks[q], mu[q]
             w_new = local_svrg(loss, data.x_blocks[p, q], data.y_blocks[p],
                                data.mask[p], z[p], w_anchor, mu_sub,
-                               lam=lam, L=L, eta=eta, key=key_pq, lo=lo_arg)
+                               lam=lam, L=L, eta=eta, key=key_pq, lo=lo_arg,
+                               backend=local_backend)
             return w_new
 
         w_cells = jax.vmap(lambda p: jax.vmap(lambda q: cell(p, q))(
@@ -129,11 +121,40 @@ def radisa_simulated(loss_name: str, data: DoublyPartitioned,
             return blk
         return jax.vmap(place)(jnp.arange(Qn))
 
-    for t in range(1, cfg.outer_iters + 1):
-        w_blocks = outer(t, w_blocks)
-        if callback is not None:
-            callback(t, data.w_from_blocks(w_blocks))
-    return data.w_from_blocks(w_blocks)
+    w_init = (jnp.zeros((Qn, data.m_q)) if w0 is None
+              else data.w_to_blocks(jnp.asarray(w0)))
+    return EngineProgram(
+        state=w_init,
+        step=outer,
+        w_of=data.w_from_blocks)
+
+
+def radisa_simulated(loss_name: str, data: DoublyPartitioned,
+                     cfg: RADiSAConfig, callback=None,
+                     local_backend: str = "ref"):
+    loss = get_loss(loss_name)
+    Pn, Qn = data.P, data.Q
+    if data.m_q % Pn:
+        # RADiSA pre-splits each feature block into P sub-blocks; repartition
+        # with extra (inert, all-zero) column padding so that P | m_q.
+        from .partition import partition as _partition
+        X, y = data.dense()
+        padded = _partition(X, y, Pn, Qn, m_multiple=Pn * Qn)
+        true_m = data.m
+
+        def unpad_cb(t, w):
+            if callback is not None:
+                callback(t, w[:true_m])
+
+        w = radisa_simulated(loss_name, padded, cfg,
+                             callback=unpad_cb if callback else None,
+                             local_backend=local_backend)
+        return w[:true_m]
+
+    prog = radisa_simulated_program(loss, data, cfg,
+                                    local_backend=local_backend)
+    state = drive_with_callback(prog, cfg.outer_iters, callback)
+    return prog.w_of(state)
 
 
 # ----------------------------------------------------------------------------
@@ -142,7 +163,8 @@ def radisa_simulated(loss_name: str, data: DoublyPartitioned,
 
 def make_radisa_step(loss: Loss, mesh, cfg: RADiSAConfig, *, n: int, n_p: int,
                      m_q: int, data_axis: str = "data",
-                     model_axis: str = "model"):
+                     model_axis: str = "model",
+                     local_backend: str = "ref"):
     """Distributed RADiSA outer step.
 
     Layouts: x (n, m) sharded (data, model); y/mask (n,) (data,);
@@ -153,8 +175,16 @@ def make_radisa_step(loss: Loss, mesh, cfg: RADiSAConfig, *, n: int, n_p: int,
     daxes = as_axes(data_axis)
     Pn, Qn = axes_size(mesh, data_axis), axes_size(mesh, model_axis)
     L = cfg.L or n_p
-    m_sub = m_q // Pn
     avg = cfg.variant == "avg"
+    if not avg and m_q % Pn:
+        raise ValueError(
+            f"RADiSA pre-splits each feature block into P={Pn} sub-blocks, "
+            f"but P does not divide m_q={m_q}; truncating would silently "
+            f"drop the trailing {m_q % Pn} feature columns of every block. "
+            "Pad the feature dimension to a multiple of P*Q first (the "
+            "unified Solver API and radisa_simulated do this), or use "
+            "variant='avg'.")
+    m_sub = m_q // Pn
 
     def step(t, key0, x, y, mask, w):
         eta = cfg.eta(t)
@@ -187,7 +217,8 @@ def make_radisa_step(loss: Loss, mesh, cfg: RADiSAConfig, *, n: int, n_p: int,
                 w_anchor = jax.lax.dynamic_slice(w_b, (lo,), (m_sub,))
                 mu_sub = jax.lax.dynamic_slice(mu, (lo,), (m_sub,))
             w_new = local_svrg(loss, x_b, y_b, mask_b, z, w_anchor, mu_sub,
-                               lam=lam, L=L, eta=eta, key=key_pq, lo=lo_arg)
+                               lam=lam, L=L, eta=eta, key=key_pq, lo=lo_arg,
+                               backend=local_backend)
             # (4) recombine
             if avg:
                 return jax.lax.pmean(w_new, data_axis)
@@ -205,16 +236,33 @@ def make_radisa_step(loss: Loss, mesh, cfg: RADiSAConfig, *, n: int, n_p: int,
     return jax.jit(step)
 
 
+def radisa_shard_map_program(loss: Loss, sdata: ShardMapData,
+                             cfg: RADiSAConfig, *,
+                             local_backend: str = "ref",
+                             w0=None) -> EngineProgram:
+    """shard_map engine.  State: w (m_pad,) sharded over the model axis."""
+    step = make_radisa_step(loss, sdata.mesh, cfg, n=sdata.n, n_p=sdata.n_p,
+                            m_q=sdata.m_q, data_axis=sdata.data_axis,
+                            model_axis=sdata.model_axis,
+                            local_backend=local_backend)
+    key0 = jax.random.PRNGKey(cfg.seed)
+    w_init = sdata.zeros_model() if w0 is None else sdata.pad_w(w0)
+    return EngineProgram(
+        state=w_init,
+        step=lambda t, w: step(t, key0, sdata.x, sdata.y, sdata.mask, w),
+        w_of=lambda w: w[: sdata.m])
+
+
 def radisa_distributed(loss_name: str, mesh, x, y, mask, cfg: RADiSAConfig,
-                       callback=None):
+                       callback=None, local_backend: str = "ref"):
     loss = get_loss(loss_name)
     n, m = x.shape
     Pn, Qn = mesh.shape["data"], mesh.shape["model"]
-    step = make_radisa_step(loss, mesh, cfg, n=n, n_p=n // Pn, m_q=m // Qn)
+    step = make_radisa_step(loss, mesh, cfg, n=n, n_p=n // Pn, m_q=m // Qn,
+                            local_backend=local_backend)
     key0 = jax.random.PRNGKey(cfg.seed)
-    w = jnp.zeros((m,))
-    for t in range(1, cfg.outer_iters + 1):
-        w = step(t, key0, x, y, mask, w)
-        if callback is not None:
-            callback(t, w)
-    return w
+    prog = EngineProgram(
+        state=jnp.zeros((m,)),
+        step=lambda t, w: step(t, key0, x, y, mask, w),
+        w_of=lambda w: w)
+    return drive_with_callback(prog, cfg.outer_iters, callback)

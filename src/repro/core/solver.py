@@ -1,0 +1,274 @@
+"""Unified solver framework: one API over D3CA / RADiSA / ADMM.
+
+The paper's three doubly distributed optimizers share one P x Q execution
+story (the way CoCoA frames local solvers as pluggable subproblems and
+SCOPE separates the outer cooperative loop from the local computation).
+This module provides that story once:
+
+  * a :class:`Solver` protocol with a registry --
+    ``get_solver("d3ca" | "radisa" | "admm")`` returns the solver class;
+  * two orthogonal knobs threaded end-to-end:
+      - ``engine="simulated" | "shard_map"``  -- vmap grid on one device
+        vs one block per device on a (data=P, model=Q) mesh;
+      - ``local_backend="ref" | "pallas"``    -- pure-jnp cell-local
+        solver vs the Pallas TPU kernels (interpret mode on CPU), used
+        inside the vmap grid and inside each shard_map cell alike;
+  * a shared outer driver: objective / duality-gap history, early
+    stopping, warm starts from a previous ``w`` / ``alpha``.
+
+Example::
+
+    from repro.core.solver import get_solver
+
+    solver = get_solver("d3ca")(engine="shard_map", local_backend="pallas")
+    res = solver.solve("hinge", X, y, P=4, Q=2,
+                       cfg=D3CAConfig(lam=1e-2, outer_iters=20),
+                       f_star=f_star, tol=1e-2)
+    res.w, res.history[-1]["objective"], res.converged
+
+Engine x backend support matrix: see README ("Unified solver API").
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Type
+
+from .admm import (ADMMConfig, admm_shard_map_program, admm_simulated_program,
+                   make_admm_step)
+from .d3ca import (D3CAConfig, d3ca_shard_map_program, d3ca_simulated_program,
+                   make_d3ca_step)
+from .engines import EngineProgram, drive, prepare_shard_map
+from .losses import get_loss
+from .partition import partition
+from .radisa import (RADiSAConfig, make_radisa_step,
+                     radisa_shard_map_program, radisa_simulated_program)
+from .reference import rel_opt
+from .util import axes_size
+
+ENGINES = ("simulated", "shard_map")
+LOCAL_BACKENDS = ("ref", "pallas")
+
+
+@dataclasses.dataclass
+class SolveResult:
+    """Outcome of :meth:`Solver.solve`."""
+
+    w: Any                          # (m,) global primal iterate
+    alpha: Optional[Any]            # (n,) global dual iterate (D3CA only)
+    history: List[Dict[str, float]]  # per-iter: iter, time_s, objective,
+    #                                  [duality_gap], [rel_opt]
+    iters: int                      # outer iterations actually run
+    converged: bool                 # True iff early stopping triggered
+    solver: str
+    engine: str
+    local_backend: str
+
+
+def _unpack_warm_start(warm_start):
+    if warm_start is None:
+        return None, None
+    if isinstance(warm_start, SolveResult):
+        return warm_start.w, warm_start.alpha
+    if isinstance(warm_start, (tuple, list)):
+        w0 = warm_start[0] if len(warm_start) > 0 else None
+        alpha0 = warm_start[1] if len(warm_start) > 1 else None
+        return w0, alpha0
+    return warm_start, None         # bare w
+
+
+class Solver:
+    """Base class: one doubly distributed optimizer under two engines.
+
+    Subclasses bind the algorithm (config class + the two
+    ``EngineProgram`` builders); everything about *running* a solve --
+    data prep and padding, the outer loop, history, early stopping, warm
+    starts -- lives here, once.
+    """
+
+    name: str = ""
+    config_cls: Type = None
+    has_dual: bool = False
+    #: ADMM's inner solve is a cached Cholesky; it accepts the knob but
+    #: has no kernel to dispatch to.
+    uses_local_backend: bool = True
+
+    def __init__(self, engine: str = "simulated", local_backend: str = "ref"):
+        if engine not in ENGINES:
+            raise ValueError(f"engine={engine!r}; expected one of {ENGINES}")
+        if local_backend not in LOCAL_BACKENDS:
+            raise ValueError(f"local_backend={local_backend!r}; expected one "
+                             f"of {LOCAL_BACKENDS}")
+        self.engine = engine
+        self.local_backend = local_backend
+
+    # ---- subclass hooks ---------------------------------------------------
+    def _simulated_program(self, loss, data, cfg, w0, alpha0) -> EngineProgram:
+        raise NotImplementedError
+
+    def _shard_map_program(self, loss, sdata, cfg, w0, alpha0) -> EngineProgram:
+        raise NotImplementedError
+
+    # ---- program construction --------------------------------------------
+    def program(self, loss_name: str, X, y, *, P: int = None, Q: int = None,
+                cfg=None, mesh=None, warm_start=None,
+                data_axis="data", model_axis: str = "model") -> EngineProgram:
+        """Bind the solver to data under the configured engine/backend.
+
+        Pads the feature dimension to a multiple of P*Q (identically for
+        both engines) so RADiSA's P sub-blocks always divide m_q and the
+        engines see bit-identical blocks.
+        """
+        loss = get_loss(loss_name)
+        cfg = cfg if cfg is not None else self.config_cls()
+        w0, alpha0 = _unpack_warm_start(warm_start)
+        if self.engine == "simulated":
+            if P is None or Q is None:
+                raise ValueError("engine='simulated' needs P and Q")
+            data = partition(X, y, P, Q, m_multiple=P * Q)
+            return self._simulated_program(loss, data, cfg, w0, alpha0)
+        if mesh is None:
+            if P is None or Q is None:
+                raise ValueError("engine='shard_map' needs a mesh or P and Q")
+            from repro.launch.mesh import make_grid_mesh
+            mesh = make_grid_mesh(P, Q)
+        Pn = axes_size(mesh, data_axis)
+        Qn = axes_size(mesh, model_axis)
+        if (P is not None and P != Pn) or (Q is not None and Q != Qn):
+            raise ValueError(f"mesh is {Pn}x{Qn} but P={P}, Q={Q} requested")
+        sdata = prepare_shard_map(mesh, X, y, data_axis=data_axis,
+                                  model_axis=model_axis,
+                                  m_multiple=Pn * Qn)
+        return self._shard_map_program(loss, sdata, cfg, w0, alpha0)
+
+    # ---- the shared outer driver ------------------------------------------
+    def solve(self, loss_name: str, X, y, *, P: int = None, Q: int = None,
+              cfg=None, mesh=None, warm_start=None,
+              tol: Optional[float] = None, f_star: Optional[float] = None,
+              record_history: bool = True,
+              callback: Optional[Callable] = None) -> SolveResult:
+        """Run the solver.  Early stopping (when ``tol`` is given) uses, in
+        order of preference: relative optimality vs ``f_star``; the duality
+        gap (dual solvers); the relative objective change between iterates.
+        ``callback(t, w, alpha)`` fires every iteration.
+        """
+        loss = get_loss(loss_name)
+        cfg = cfg if cfg is not None else self.config_cls()
+        prog = self.program(loss_name, X, y, P=P, Q=Q, cfg=cfg, mesh=mesh,
+                            warm_start=warm_start)
+        lam = cfg.lam
+        history: List[Dict[str, float]] = []
+        need_obs = record_history or callback is not None or tol is not None
+        prev_f = [None]
+        t0 = time.perf_counter()
+
+        def observe(t, state):
+            if not need_obs:
+                return False
+            w = prog.w_of(state)
+            alpha = prog.alpha_of(state) if prog.alpha_of else None
+            f = float(loss.objective(X, y, w, lam))
+            entry = {"iter": t, "time_s": time.perf_counter() - t0,
+                     "objective": f}
+            if alpha is not None:
+                entry["duality_gap"] = float(
+                    f - loss.dual_objective(X, y, alpha, lam))
+            if f_star is not None:
+                entry["rel_opt"] = float(rel_opt(f, f_star))
+            if record_history:
+                history.append(entry)
+            if callback is not None:
+                callback(t, w, alpha)
+            stop = False
+            if tol is not None:
+                if f_star is not None:
+                    stop = entry["rel_opt"] < tol
+                elif "duality_gap" in entry:
+                    stop = entry["duality_gap"] < tol
+                elif prev_f[0] is not None:
+                    stop = abs(f - prev_f[0]) <= tol * max(1.0, abs(f))
+            prev_f[0] = f
+            return stop
+
+        state, iters, stopped = drive(prog, cfg.outer_iters, observe)
+        return SolveResult(
+            w=prog.w_of(state),
+            alpha=prog.alpha_of(state) if prog.alpha_of else None,
+            history=history, iters=iters, converged=stopped,
+            solver=self.name, engine=self.engine,
+            local_backend=self.local_backend)
+
+
+# ---------------------------------------------------------------------------
+# the three solvers
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Type[Solver]] = {}
+
+
+def register_solver(cls: Type[Solver]) -> Type[Solver]:
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def get_solver(name: str) -> Type[Solver]:
+    """Look up a solver class by name; instantiate with
+    ``get_solver(name)(engine=..., local_backend=...)``."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown solver {name!r}; available: "
+                       f"{available_solvers()}") from None
+
+
+def available_solvers():
+    return sorted(_REGISTRY)
+
+
+@register_solver
+class D3CASolver(Solver):
+    name = "d3ca"
+    config_cls = D3CAConfig
+    has_dual = True
+    make_step = staticmethod(make_d3ca_step)   # for dry-run lowering
+
+    def _simulated_program(self, loss, data, cfg, w0, alpha0):
+        return d3ca_simulated_program(loss, data, cfg,
+                                      local_backend=self.local_backend,
+                                      w0=w0, alpha0=alpha0)
+
+    def _shard_map_program(self, loss, sdata, cfg, w0, alpha0):
+        return d3ca_shard_map_program(loss, sdata, cfg,
+                                      local_backend=self.local_backend,
+                                      w0=w0, alpha0=alpha0)
+
+
+@register_solver
+class RADiSASolver(Solver):
+    name = "radisa"
+    config_cls = RADiSAConfig
+    make_step = staticmethod(make_radisa_step)
+
+    def _simulated_program(self, loss, data, cfg, w0, alpha0):
+        return radisa_simulated_program(loss, data, cfg,
+                                        local_backend=self.local_backend,
+                                        w0=w0)
+
+    def _shard_map_program(self, loss, sdata, cfg, w0, alpha0):
+        return radisa_shard_map_program(loss, sdata, cfg,
+                                        local_backend=self.local_backend,
+                                        w0=w0)
+
+
+@register_solver
+class ADMMSolver(Solver):
+    name = "admm"
+    config_cls = ADMMConfig
+    uses_local_backend = False     # knob accepted, inner solve is Cholesky
+    make_step = staticmethod(make_admm_step)
+
+    def _simulated_program(self, loss, data, cfg, w0, alpha0):
+        return admm_simulated_program(loss, data, cfg, w0=w0)
+
+    def _shard_map_program(self, loss, sdata, cfg, w0, alpha0):
+        return admm_shard_map_program(loss, sdata, cfg, w0=w0)

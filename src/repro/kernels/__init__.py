@@ -9,3 +9,10 @@ Each package: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper), ref.py (pure-jnp oracle).  Validated in interpret mode on CPU;
 on TPU pass interpret=False.
 """
+import jax as _jax
+
+
+def default_interpret() -> bool:
+    """Interpret mode everywhere but real TPUs (where kernels compile).
+    The single source of truth for the ref/pallas dispatch sites."""
+    return _jax.default_backend() != "tpu"

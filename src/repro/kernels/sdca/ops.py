@@ -5,20 +5,26 @@ from functools import partial
 
 import jax
 
+from .. import default_interpret
 from .ref import sdca_epoch_ref
 from .sdca import sdca_epoch_pallas
 
 
-@partial(jax.jit, static_argnames=("lam", "n", "Q", "loss", "backend"))
+@partial(jax.jit, static_argnames=("lam", "n", "Q", "loss", "backend",
+                                   "interpret"))
 def sdca_epoch(x, y, mask, alpha0, w0, idx, *, lam, n, Q, loss="hinge",
-               backend="pallas"):
+               backend="pallas", beta=None, interpret=None):
     """One local SDCA epoch on a data block.
 
     backend="pallas": TPU kernel (interpret-mode on CPU).
     backend="ref": pure-jnp oracle.
+    ``beta`` (runtime scalar or None) selects step_mode="beta".
     """
     if backend == "ref":
         return sdca_epoch_ref(x, y, mask, alpha0, w0, idx,
-                              lam=lam, n=n, Q=Q, loss=loss)
+                              lam=lam, n=n, Q=Q, loss=loss, beta=beta)
+    if interpret is None:
+        interpret = default_interpret()
     return sdca_epoch_pallas(x, y, mask, alpha0, w0, idx,
-                             lam=lam, n=n, Q=Q, loss=loss)
+                             lam=lam, n=n, Q=Q, loss=loss, beta=beta,
+                             interpret=interpret)

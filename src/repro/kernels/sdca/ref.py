@@ -11,10 +11,12 @@ import jax.numpy as jnp
 
 
 def sdca_epoch_ref(x, y, mask, alpha0, w0, idx, *, lam, n, Q,
-                   loss: str = "hinge"):
+                   loss: str = "hinge", beta=None):
     """x: (n_p, m_q); idx: (steps,) int32 coordinate order.
 
-    Returns (dalpha (n_p,), w_final (m_q,)) in float32.
+    ``beta`` (runtime scalar) replaces the ||x_i||^2 denominator when
+    given (the paper's step_mode="beta").  Returns (dalpha (n_p,),
+    w_final (m_q,)) in float32.
     """
     x = x.astype(jnp.float32)
     y = y.astype(jnp.float32)
@@ -25,14 +27,15 @@ def sdca_epoch_ref(x, y, mask, alpha0, w0, idx, *, lam, n, Q,
         xi = x[i]
         zloc = xi @ w
         a_i = alpha0[i] + dalpha[i]
+        denom = jnp.maximum(x_sq[i] if beta is None else beta, 1e-12)
         if loss == "hinge":
-            d = (y[i] / Q - zloc) * lam * n / jnp.maximum(x_sq[i], 1e-12)
+            d = (y[i] / Q - zloc) * lam * n / denom
             lo = jnp.where(y[i] > 0, 0.0, -1.0)
             hi = jnp.where(y[i] > 0, 1.0, 0.0)
             d = jnp.clip(a_i + d, lo, hi) - a_i
         elif loss == "squared":
             num = y[i] / Q - a_i / (2.0 * Q) - zloc
-            den = 1.0 / (2.0 * Q) + x_sq[i] / (lam * n)
+            den = 1.0 / (2.0 * Q) + denom / (lam * n)
             d = num / jnp.maximum(den, 1e-12)
         else:
             raise ValueError(loss)

@@ -10,7 +10,11 @@ TPU adaptation of the paper's random-access CPU loop (DESIGN.md §2):
     is exactly the dependency structure of dual coordinate ascent);
   * the running primal block w and the dual deltas live in VMEM scratch
     for the whole epoch; nothing but one data row moves per step;
-  * outputs are flushed on the last step.
+  * outputs are flushed on the last step;
+  * the paper's beta step-size variant (step_mode="beta", beta = lam/t)
+    rides along as a second scalar-prefetch argument -- beta changes every
+    outer iteration, so it must be a runtime input, not a compile-time
+    constant.
 
 Supported losses: hinge (closed form), squared.
 """
@@ -25,6 +29,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(idx_ref,            # scalar prefetch: (steps,) int32
+            beta_ref,           # scalar prefetch: (1,) f32 (paper's beta)
             x_row_ref,          # (1, m_q) gathered row
             y_row_ref,          # (1, 1) label
             mask_row_ref,       # (1, 1)
@@ -34,7 +39,7 @@ def _kernel(idx_ref,            # scalar prefetch: (steps,) int32
             w_out_ref,          # out: (1, m_q)
             w_vmem,             # scratch: (1, m_q) f32
             dal_vmem,           # scratch: (n_p, 1) f32
-            *, lam, n, Q, steps, loss):
+            *, lam, n, Q, steps, loss, use_beta):
     h = pl.program_id(0)
 
     @pl.when(h == 0)
@@ -51,15 +56,17 @@ def _kernel(idx_ref,            # scalar prefetch: (steps,) int32
     w = w_vmem[0, :]
     zloc = jnp.sum(xi * w)
     x_sq = jnp.sum(xi * xi)
+    denom = beta_ref[0] if use_beta else x_sq
+    denom = jnp.maximum(denom, 1e-12)
 
     if loss == "hinge":
-        d = (yi / Q - zloc) * lam * n / jnp.maximum(x_sq, 1e-12)
+        d = (yi / Q - zloc) * lam * n / denom
         lo = jnp.where(yi > 0, 0.0, -1.0)
         hi = jnp.where(yi > 0, 1.0, 0.0)
         d = jnp.clip(a_i + d, lo, hi) - a_i
     elif loss == "squared":
         num = yi / Q - a_i / (2.0 * Q) - zloc
-        den = 1.0 / (2.0 * Q) + x_sq / (lam * n)
+        den = 1.0 / (2.0 * Q) + denom / (lam * n)
         d = num / jnp.maximum(den, 1e-12)
     else:
         raise ValueError(loss)
@@ -75,28 +82,33 @@ def _kernel(idx_ref,            # scalar prefetch: (steps,) int32
 
 
 def sdca_epoch_pallas(x, y, mask, alpha0, w0, idx, *, lam, n, Q,
-                      loss: str = "hinge", interpret: bool = True):
+                      loss: str = "hinge", beta=None, interpret: bool = True):
     """Drop-in kernel version of ``ref.sdca_epoch_ref``.
 
-    x: (n_p, m_q) f32; idx: (steps,) int32.  Returns (dalpha, w_final).
+    x: (n_p, m_q) f32; idx: (steps,) int32.  ``beta`` (a runtime scalar,
+    may be traced) selects the paper's step_mode="beta" denominator.
+    Returns (dalpha, w_final).
     """
     n_p, m_q = x.shape
     steps = idx.shape[0]
+    use_beta = beta is not None
+    beta_arr = jnp.reshape(
+        jnp.asarray(beta if use_beta else 0.0, jnp.float32), (1,))
     kern = functools.partial(_kernel, lam=float(lam), n=int(n), Q=int(Q),
-                             steps=steps, loss=loss)
+                             steps=steps, loss=loss, use_beta=use_beta)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(steps,),
         in_specs=[
-            pl.BlockSpec((1, m_q), lambda h, idx_ref: (idx_ref[h], 0)),
-            pl.BlockSpec((1, 1), lambda h, idx_ref: (idx_ref[h], 0)),
-            pl.BlockSpec((1, 1), lambda h, idx_ref: (idx_ref[h], 0)),
-            pl.BlockSpec((1, 1), lambda h, idx_ref: (idx_ref[h], 0)),
-            pl.BlockSpec((1, m_q), lambda h, idx_ref: (0, 0)),
+            pl.BlockSpec((1, m_q), lambda h, idx_ref, b: (idx_ref[h], 0)),
+            pl.BlockSpec((1, 1), lambda h, idx_ref, b: (idx_ref[h], 0)),
+            pl.BlockSpec((1, 1), lambda h, idx_ref, b: (idx_ref[h], 0)),
+            pl.BlockSpec((1, 1), lambda h, idx_ref, b: (idx_ref[h], 0)),
+            pl.BlockSpec((1, m_q), lambda h, idx_ref, b: (0, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((n_p, 1), lambda h, idx_ref: (0, 0)),
-            pl.BlockSpec((1, m_q), lambda h, idx_ref: (0, 0)),
+            pl.BlockSpec((n_p, 1), lambda h, idx_ref, b: (0, 0)),
+            pl.BlockSpec((1, m_q), lambda h, idx_ref, b: (0, 0)),
         ],
         scratch_shapes=[
             pltpu.VMEM((1, m_q), jnp.float32),
@@ -111,5 +123,6 @@ def sdca_epoch_pallas(x, y, mask, alpha0, w0, idx, *, lam, n, Q,
             jax.ShapeDtypeStruct((1, m_q), jnp.float32),
         ],
         interpret=interpret,
-    )(idx, x, y[:, None], mask[:, None], alpha0[:, None], w0[None, :])
+    )(idx, beta_arr, x, y[:, None], mask[:, None], alpha0[:, None],
+      w0[None, :])
     return dalpha[:, 0], w_fin[0]

@@ -2,7 +2,9 @@
 
 Same TPU scheme as the SDCA kernel: sequential step grid, scalar-prefetched
 minibatch order driving the row gather (pipelined DMA), sub-block iterate w
-and the anchor quantities resident in VMEM for all L steps.
+and the anchor quantities resident in VMEM for all L steps.  The step size
+eta_t = gamma / (1 + sqrt(t-1)) changes every outer iteration, so it is a
+runtime scalar-prefetch input rather than a compile-time constant.
 """
 from __future__ import annotations
 
@@ -22,9 +24,9 @@ def _grad(loss, z, y):
     raise ValueError(loss)
 
 
-def _kernel(idx_ref, x_row_ref, y_row_ref, mask_row_ref, z_row_ref,
+def _kernel(idx_ref, eta_ref, x_row_ref, y_row_ref, mask_row_ref, z_row_ref,
             w_anchor_ref, mu_ref, w_out_ref, w_vmem,
-            *, lam, eta, L, loss):
+            *, lam, L, loss):
     h = pl.program_id(0)
 
     @pl.when(h == 0)
@@ -42,7 +44,7 @@ def _kernel(idx_ref, x_row_ref, y_row_ref, mask_row_ref, z_row_ref,
     z = zj + jnp.sum(xj * (w - wa))
     g = (_grad(loss, z, yj) - _grad(loss, zj, yj)) * xj * mj \
         + mu + lam * (w - wa)
-    w_vmem[0, :] = w - eta * g
+    w_vmem[0, :] = w - eta_ref[0] * g
 
     @pl.when(h == L - 1)
     def _flush():
@@ -53,20 +55,20 @@ def svrg_inner_pallas(x_sub, y, mask, z_anchor, w_anchor, mu_sub, idx, *,
                       lam, eta, loss: str = "hinge", interpret: bool = True):
     n_p, m_sub = x_sub.shape
     L = idx.shape[0]
-    kern = functools.partial(_kernel, lam=float(lam), eta=float(eta),
-                             L=L, loss=loss)
+    eta_arr = jnp.reshape(jnp.asarray(eta, jnp.float32), (1,))
+    kern = functools.partial(_kernel, lam=float(lam), L=L, loss=loss)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(L,),
         in_specs=[
-            pl.BlockSpec((1, m_sub), lambda h, idx_ref: (idx_ref[h], 0)),
-            pl.BlockSpec((1, 1), lambda h, idx_ref: (idx_ref[h], 0)),
-            pl.BlockSpec((1, 1), lambda h, idx_ref: (idx_ref[h], 0)),
-            pl.BlockSpec((1, 1), lambda h, idx_ref: (idx_ref[h], 0)),
-            pl.BlockSpec((1, m_sub), lambda h, idx_ref: (0, 0)),
-            pl.BlockSpec((1, m_sub), lambda h, idx_ref: (0, 0)),
+            pl.BlockSpec((1, m_sub), lambda h, idx_ref, e: (idx_ref[h], 0)),
+            pl.BlockSpec((1, 1), lambda h, idx_ref, e: (idx_ref[h], 0)),
+            pl.BlockSpec((1, 1), lambda h, idx_ref, e: (idx_ref[h], 0)),
+            pl.BlockSpec((1, 1), lambda h, idx_ref, e: (idx_ref[h], 0)),
+            pl.BlockSpec((1, m_sub), lambda h, idx_ref, e: (0, 0)),
+            pl.BlockSpec((1, m_sub), lambda h, idx_ref, e: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, m_sub), lambda h, idx_ref: (0, 0)),
+        out_specs=pl.BlockSpec((1, m_sub), lambda h, idx_ref, e: (0, 0)),
         scratch_shapes=[pltpu.VMEM((1, m_sub), jnp.float32)],
     )
     w = pl.pallas_call(
@@ -74,6 +76,6 @@ def svrg_inner_pallas(x_sub, y, mask, z_anchor, w_anchor, mu_sub, idx, *,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((1, m_sub), jnp.float32),
         interpret=interpret,
-    )(idx, x_sub, y[:, None], mask[:, None], z_anchor[:, None],
+    )(idx, eta_arr, x_sub, y[:, None], mask[:, None], z_anchor[:, None],
       w_anchor[None, :], mu_sub[None, :])
     return w[0]

@@ -37,6 +37,15 @@ OUT_DIR = os.environ.get("REPRO_DRYRUN_DIR",
                                       "../../../experiments/dryrun"))
 
 
+def _cost_dict(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across jax versions: 0.4.x
+    returns a list with one dict per computation, newer jax a dict."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def cell_skip_reason(cfg, shape):
     if shape.name == "long_500k" and not cfg.sub_quadratic:
         return ("full softmax attention is O(S) memory per decoded token at "
@@ -91,7 +100,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, save: bool = True):
                 cell1.params, cell1.opt, cell1.batch).compile()
             result["accum_steps"] = cfg.train_accum
 
-    cost = cost_compiled.cost_analysis() or {}
+    cost = _cost_dict(cost_compiled)
     result["status"] = "ok"
     result["lower_s"] = round(t_lower, 2)
     result["compile_s"] = round(t_compile, 2)
@@ -164,7 +173,7 @@ def run_calibration(arch: str, shape_name: str, save: bool = True):
                 args = (cell.params, cell.cache, cell.batch)
             lowered = jax.jit(cell.fn).lower(*args)
             compiled = lowered.compile()
-        cost = compiled.cost_analysis() or {}
+        cost = _cost_dict(compiled)
         try:
             hlo = compiled.as_text()
         except Exception:
@@ -188,10 +197,15 @@ def run_calibration(arch: str, shape_name: str, save: bool = True):
 
 def run_paper_cell(algo: str = "d3ca", multi_pod: bool = False,
                    save: bool = True, block_n: int = 40960,
-                   block_m: int = 5120, inner_steps: int = None):
+                   block_m: int = 5120, inner_steps: int = None,
+                   local_backend: str = "ref"):
     """Dry-run the paper's own doubly distributed workload (hinge SVM) at
     production mesh scale: one (block_n x block_m) block per chip, i.e.
     the paper's weak-scaling cell (40k x 5k) per device.
+
+    The step builders come from the unified solver registry
+    (``get_solver(algo).make_step``), so the dry-run lowers exactly the
+    shard_map step the ``Solver`` API runs, under either local backend.
 
     The inner solver is a sequential lax.scan whose body cost_analysis
     counts once; we therefore also lower 1-step and 2-step variants and
@@ -203,8 +217,7 @@ def run_paper_cell(algo: str = "d3ca", multi_pod: bool = False,
     from jax.sharding import NamedSharding
     from jax.sharding import PartitionSpec as P
 
-    from repro.core import (D3CAConfig, RADiSAConfig, get_loss,
-                            make_d3ca_step, make_radisa_step)
+    from repro.core import (D3CAConfig, RADiSAConfig, get_loss, get_solver)
     import jax.numpy as jnp
 
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -222,6 +235,7 @@ def run_paper_cell(algo: str = "d3ca", multi_pod: bool = False,
                                     sharding=NamedSharding(mesh, spec))
 
     loss = get_loss("hinge")
+    make_step = get_solver(algo).make_step
     x = sds((n, m), P(daxes, "model"))
     y, maskv = sds((n,), P(daxes)), sds((n,), P(daxes))
     key0 = jax.random.PRNGKey(0)
@@ -229,20 +243,22 @@ def run_paper_cell(algo: str = "d3ca", multi_pod: bool = False,
 
     def lower_one(steps):
         if algo == "d3ca":
-            step = make_d3ca_step(
+            step = make_step(
                 loss, mesh, D3CAConfig(lam=1e-2, local_steps=steps),
-                n=n, n_p=block_n, data_axis=daxes)
+                n=n, n_p=block_n, data_axis=daxes,
+                local_backend=local_backend)
             args = (t_arg, key0, x, y, maskv, sds((n,), P(daxes)),
                     sds((m,), P("model")))
         else:
-            step = make_radisa_step(
+            step = make_step(
                 loss, mesh, RADiSAConfig(lam=1e-3, L=steps),
-                n=n, n_p=block_n, m_q=block_m, data_axis=daxes)
+                n=n, n_p=block_n, m_q=block_m, data_axis=daxes,
+                local_backend=local_backend)
             args = (t_arg, key0, x, y, maskv, sds((m,), P("model")))
         t0 = time.time()
         lowered = step.lower(*args)
         compiled = lowered.compile()
-        cost = compiled.cost_analysis() or {}
+        cost = _cost_dict(compiled)
         try:
             hlo = compiled.as_text()
         except Exception:
@@ -268,12 +284,14 @@ def run_paper_cell(algo: str = "d3ca", multi_pod: bool = False,
     result = {"arch": f"paper-svm-{algo}", "shape": f"{block_n}x{block_m}",
               "mesh": mesh_name, "kind": "paper", "status": "ok",
               "P": Pn, "Q": Qn, "inner_steps": inner,
+              "local_backend": local_backend,
               "full": lower_one(inner),
               "calib_A": lower_one(1), "calib_B": lower_one(2)}
     if save:
         os.makedirs(OUT_DIR, exist_ok=True)
+        suffix = "" if local_backend == "ref" else f"__{local_backend}"
         fn = os.path.join(
-            OUT_DIR, f"paper_svm_{algo}__{mesh_name}.json")
+            OUT_DIR, f"paper_svm_{algo}__{mesh_name}{suffix}.json")
         with open(fn, "w") as fh:
             json.dump(result, fh, indent=1)
     f = result["full"]
@@ -294,10 +312,13 @@ def main():
                     help="run the per-period cost calibration instead")
     ap.add_argument("--paper", choices=["d3ca", "radisa"], default=None,
                     help="dry-run the paper's SVM workload instead")
+    ap.add_argument("--backend", choices=["ref", "pallas"], default="ref",
+                    help="cell-local solver backend for --paper")
     args = ap.parse_args()
 
     if args.paper:
-        run_paper_cell(args.paper, multi_pod=args.multi_pod)
+        run_paper_cell(args.paper, multi_pod=args.multi_pod,
+                       local_backend=args.backend)
         return
 
     if args.all:

@@ -1,0 +1,141 @@
+"""CLI over the unified solver framework (``repro.core.solver``).
+
+Run any of the paper's doubly distributed optimizers on a synthetic
+dataset under any (engine, local_backend) pair:
+
+  PYTHONPATH=src python -m repro.launch.optimize \\
+      --solver d3ca --dataset dense --n 1600 --m 400 --mesh 4x2 \\
+      --engine simulated --backend ref --loss hinge --lam 0.1 --iters 15
+
+  # the production shard_map engine needs one device per grid cell;
+  # --force-host-devices N fakes them on CPU (set before jax init):
+  PYTHONPATH=src python -m repro.launch.optimize \\
+      --solver radisa --mesh 4x2 --engine shard_map --backend pallas \\
+      --force-host-devices 8
+
+Prints one line per outer iteration (objective, duality gap when the
+solver has a dual, relative optimality when --ref-epochs > 0) and a
+final JSON summary.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _parse_mesh(s: str):
+    try:
+        p, q = s.lower().split("x")
+        return int(p), int(q)
+    except ValueError:
+        raise argparse.ArgumentTypeError(f"--mesh expects PxQ, got {s!r}")
+
+
+def build_parser():
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.optimize",
+        description="Unified doubly distributed solver CLI")
+    ap.add_argument("--solver", default="d3ca",
+                    help="d3ca | radisa | admm (see get_solver)")
+    ap.add_argument("--engine", default="simulated",
+                    choices=["simulated", "shard_map"])
+    ap.add_argument("--backend", default="ref", choices=["ref", "pallas"],
+                    help="cell-local solver backend")
+    ap.add_argument("--mesh", type=_parse_mesh, default=(4, 2),
+                    metavar="PxQ", help="grid shape, e.g. 4x2")
+    ap.add_argument("--dataset", default="dense",
+                    choices=["dense", "sparse"])
+    ap.add_argument("--n", type=int, default=1600)
+    ap.add_argument("--m", type=int, default=400)
+    ap.add_argument("--density", type=float, default=0.05,
+                    help="nonzero fraction for --dataset sparse")
+    ap.add_argument("--loss", default="hinge",
+                    choices=["hinge", "squared", "logistic"])
+    ap.add_argument("--lam", type=float, default=1e-1)
+    ap.add_argument("--iters", type=int, default=15)
+    ap.add_argument("--tol", type=float, default=None,
+                    help="early-stopping tolerance (see Solver.solve)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ref-epochs", type=int, default=100,
+                    help="serial SDCA epochs for f*; 0 skips rel-opt")
+    ap.add_argument("--force-host-devices", type=int, default=None,
+                    help="fake N CPU devices (required before jax init "
+                         "for --engine shard_map on a laptop)")
+    ap.add_argument("--json-out", default=None,
+                    help="write the summary JSON here as well")
+    return ap
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    args = build_parser().parse_args(argv)
+
+    if args.force_host_devices:
+        if "jax" in sys.modules:
+            print("warning: jax already initialized; "
+                  "--force-host-devices has no effect", file=sys.stderr)
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count="
+              f"{args.force_host_devices}").strip()
+
+    # jax (and everything that imports it) only after the device forcing
+    from repro.core import get_solver, objective, serial_sdca
+    from repro.data import make_sparse_svm_data, make_svm_data
+
+    P, Q = args.mesh
+    if args.dataset == "dense":
+        X, y = make_svm_data(args.n, args.m, seed=args.seed)
+    else:
+        X, y = make_sparse_svm_data(args.n, args.m, density=args.density,
+                                    seed=args.seed)
+
+    f_star = None
+    if args.ref_epochs > 0:
+        w_ref, _ = serial_sdca(args.loss, X, y, lam=args.lam,
+                               epochs=args.ref_epochs)
+        f_star = float(objective(args.loss, X, y, w_ref, args.lam))
+
+    cls = get_solver(args.solver)
+    solver = cls(engine=args.engine, local_backend=args.backend)
+    cfg_kw = {"lam": args.lam, "outer_iters": args.iters}
+    if args.solver == "admm":
+        cfg_kw["rho"] = args.lam
+    cfg = cls.config_cls(**cfg_kw)
+
+    print(f"[optimize] {args.solver} engine={args.engine} "
+          f"backend={args.backend} grid={P}x{Q} "
+          f"{args.dataset}({X.shape[0]}x{X.shape[1]}) loss={args.loss} "
+          f"lam={args.lam}")
+    res = solver.solve(args.loss, X, y, P=P, Q=Q, cfg=cfg, tol=args.tol,
+                       f_star=f_star)
+    for h in res.history:
+        line = (f"  t={h['iter']:3d}  {h['time_s']:7.2f}s  "
+                f"f={h['objective']:.6f}")
+        if "duality_gap" in h:
+            line += f"  gap={h['duality_gap']:.3e}"
+        if "rel_opt" in h:
+            line += f"  rel_opt={h['rel_opt']:.4f}"
+        print(line)
+
+    summary = {
+        "solver": res.solver, "engine": res.engine,
+        "local_backend": res.local_backend, "P": P, "Q": Q,
+        "n": int(X.shape[0]), "m": int(X.shape[1]), "loss": args.loss,
+        "lam": args.lam, "iters": res.iters, "converged": res.converged,
+        "objective": res.history[-1]["objective"] if res.history else None,
+        "rel_opt": res.history[-1].get("rel_opt") if res.history else None,
+        "total_s": res.history[-1]["time_s"] if res.history else None,
+    }
+    print(json.dumps(summary, indent=1))
+    if args.json_out:
+        with open(args.json_out, "w") as fh:
+            json.dump({"summary": summary, "history": res.history}, fh,
+                      indent=1)
+    return summary
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Unified solver API on 8 forced host devices: every solver must produce
+the same iterates under (engine="shard_map", local_backend="pallas") as
+under (engine="simulated", local_backend="ref"), including when P*Q does
+not divide m (both engines pad identically).  Also the regression check
+that ``make_radisa_step`` fails loudly instead of silently truncating
+feature columns when P does not divide m_q.
+
+Executed as a subprocess by tests/test_solver.py (the device count must
+be fixed before jax initializes).  Prints max-abs diffs; exits nonzero
+on failure.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+import jax.numpy as jnp
+
+from repro.core import (ADMMConfig, D3CAConfig, RADiSAConfig, get_loss,
+                        get_solver, make_radisa_step)
+from repro.data import make_svm_data
+
+
+def main():
+    Pn, Qn = 4, 2
+    lam = 1.0
+    # m = 42: P*Q = 8 does not divide it -> exercises the shared padding
+    X, y = make_svm_data(120, 42, seed=1)
+
+    fails = 0
+
+    def check(name, a, b, tol=2e-4):
+        nonlocal fails
+        d = float(jnp.abs(a - b).max())
+        print(f"{name} {d:.3e}")
+        if not d < tol:
+            fails += 1
+
+    cases = [
+        ("d3ca", D3CAConfig(lam=lam, outer_iters=3, local_steps=12)),
+        ("radisa", RADiSAConfig(lam=lam, gamma=0.03, outer_iters=3, L=12)),
+        ("radisa_avg", RADiSAConfig(lam=lam, gamma=0.03, outer_iters=3,
+                                    L=12, variant="avg")),
+        ("admm", ADMMConfig(lam=lam, rho=lam, outer_iters=4)),
+    ]
+    for label, cfg in cases:
+        name = "radisa" if label.startswith("radisa") else label
+        base = get_solver(name)(engine="simulated", local_backend="ref")
+        dist = get_solver(name)(engine="shard_map", local_backend="pallas")
+        rb = base.solve("hinge", X, y, P=Pn, Q=Qn, cfg=cfg,
+                        record_history=False)
+        rd = dist.solve("hinge", X, y, P=Pn, Q=Qn, cfg=cfg,
+                        record_history=False)
+        check(f"{label}_w", rb.w, rd.w)
+        if rb.alpha is not None:
+            check(f"{label}_alpha", rb.alpha, rd.alpha)
+
+    # beta step mode across the engine x backend diagonal
+    cfg = D3CAConfig(lam=lam, outer_iters=2, local_steps=12,
+                     step_mode="beta")
+    rb = get_solver("d3ca")(engine="simulated", local_backend="ref").solve(
+        "hinge", X, y, P=Pn, Q=Qn, cfg=cfg, record_history=False)
+    rd = get_solver("d3ca")(engine="shard_map",
+                            local_backend="pallas").solve(
+        "hinge", X, y, P=Pn, Q=Qn, cfg=cfg, record_history=False)
+    check("d3ca_beta_w", rb.w, rd.w)
+
+    # regression: silent trailing-column drop is now a loud error
+    mesh = jax.make_mesh((Pn, Qn), ("data", "model"))
+    try:
+        make_radisa_step(get_loss("hinge"), mesh, RADiSAConfig(lam=lam),
+                         n=120, n_p=30, m_q=21)
+        print("make_radisa_step_mq_check MISSING")
+        fails += 1
+    except ValueError as e:
+        assert "sub-block" in str(e), e
+        print("make_radisa_step_mq_check raises ValueError")
+    # ... but variant="avg" never sub-splits, so it must still build
+    make_radisa_step(get_loss("hinge"), mesh,
+                     RADiSAConfig(lam=lam, variant="avg"),
+                     n=120, n_p=30, m_q=21)
+    print("make_radisa_step_avg_ok")
+
+    raise SystemExit(fails)
+
+
+if __name__ == "__main__":
+    main()

@@ -15,7 +15,8 @@ RNG = np.random.default_rng(7)
 @pytest.mark.parametrize("n_p,m_q,steps", [(8, 8, 8), (24, 16, 50),
                                            (64, 128, 64), (17, 9, 33)])
 @pytest.mark.parametrize("loss", ["hinge", "squared"])
-def test_sdca_kernel(n_p, m_q, steps, loss):
+@pytest.mark.parametrize("beta", [None, "m_q"])
+def test_sdca_kernel(n_p, m_q, steps, loss, beta):
     x = jnp.asarray(RNG.normal(size=(n_p, m_q)), jnp.float32)
     y = jnp.asarray(np.sign(RNG.normal(size=n_p)) + 0.0, jnp.float32)
     y = jnp.where(y == 0, 1.0, y)
@@ -23,7 +24,9 @@ def test_sdca_kernel(n_p, m_q, steps, loss):
     a0 = jnp.asarray(RNG.uniform(0, 0.5, n_p), jnp.float32) * (y > 0)
     w0 = jnp.asarray(RNG.normal(size=m_q) * 0.1, jnp.float32)
     idx = jnp.asarray(RNG.integers(0, n_p, steps), jnp.int32)
-    kw = dict(lam=0.2, n=200, Q=3, loss=loss)
+    # beta ~ ||x_i||^2 keeps the step-size-variant recursion contractive
+    kw = dict(lam=0.2, n=200, Q=3, loss=loss,
+              beta=float(m_q) if beta else None)
     da_r, w_r = sdca_epoch_ref(x, y, mask, a0, w0, idx, **kw)
     da_p, w_p = sdca_epoch_pallas(x, y, mask, a0, w0, idx, **kw)
     np.testing.assert_allclose(np.asarray(da_p), np.asarray(da_r),

@@ -1,0 +1,231 @@
+"""Unified solver framework: registry, the engine x local_backend matrix,
+the shared driver (history / early stopping / warm starts), and the
+ref<->pallas parity of the cell-local solvers."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ADMMConfig, D3CAConfig, RADiSAConfig,
+                        available_solvers, get_solver, objective,
+                        serial_sdca)
+from repro.core.local import local_sdca, local_svrg
+from repro.core.losses import get_loss
+from repro.data import make_svm_data
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+
+LAM = 1.0
+RNG = np.random.default_rng(11)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    X, y = make_svm_data(120, 36, seed=1)
+    w_ref, _ = serial_sdca("hinge", X, y, lam=LAM, epochs=200)
+    f_star = float(objective("hinge", X, y, w_ref, LAM))
+    return X, y, f_star
+
+
+# ---------------------------------------------------------------------------
+# registry + knob validation
+# ---------------------------------------------------------------------------
+
+def test_registry():
+    assert available_solvers() == ["admm", "d3ca", "radisa"]
+    for name in available_solvers():
+        cls = get_solver(name)
+        assert cls.name == name
+        assert cls.config_cls is not None
+    with pytest.raises(KeyError, match="unknown solver"):
+        get_solver("sgd")
+    with pytest.raises(ValueError, match="engine"):
+        get_solver("d3ca")(engine="mpi")
+    with pytest.raises(ValueError, match="local_backend"):
+        get_solver("d3ca")(local_backend="triton")
+
+
+def test_simulated_needs_grid(problem):
+    X, y, _ = problem
+    with pytest.raises(ValueError, match="needs P and Q"):
+        get_solver("d3ca")().solve("hinge", X, y)
+
+
+def test_pallas_logistic_raises(problem):
+    X, y, _ = problem
+    s = get_solver("d3ca")(engine="simulated", local_backend="pallas")
+    with pytest.raises(NotImplementedError, match="pallas"):
+        s.solve("logistic", X, y, P=2, Q=2,
+                cfg=D3CAConfig(lam=LAM, outer_iters=1, local_steps=4))
+
+
+# ---------------------------------------------------------------------------
+# simulated engine: ref == pallas for every solver (the shard_map side of
+# the matrix runs in the subprocess test below)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,cfg", [
+    ("d3ca", D3CAConfig(lam=LAM, outer_iters=3, local_steps=12)),
+    ("d3ca", D3CAConfig(lam=LAM, outer_iters=2, local_steps=12,
+                        step_mode="beta")),
+    ("radisa", RADiSAConfig(lam=LAM, gamma=0.03, outer_iters=3, L=12)),
+    ("radisa", RADiSAConfig(lam=LAM, gamma=0.03, outer_iters=3, L=12,
+                            variant="avg")),
+    ("admm", ADMMConfig(lam=LAM, rho=LAM, outer_iters=4)),
+])
+@pytest.mark.parametrize("loss", ["hinge", "squared"])
+def test_simulated_ref_matches_pallas(problem, name, cfg, loss):
+    X, y, _ = problem
+    ws = {}
+    for backend in ("ref", "pallas"):
+        s = get_solver(name)(engine="simulated", local_backend=backend)
+        ws[backend] = s.solve(loss, X, y, P=3, Q=2, cfg=cfg,
+                              record_history=False).w
+    np.testing.assert_allclose(np.asarray(ws["pallas"]),
+                               np.asarray(ws["ref"]), rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# shared driver: history, early stopping, warm starts
+# ---------------------------------------------------------------------------
+
+def test_history_and_duality_gap(problem):
+    X, y, f_star = problem
+    s = get_solver("d3ca")()
+    res = s.solve("hinge", X, y, P=3, Q=2,
+                  cfg=D3CAConfig(lam=LAM, outer_iters=6), f_star=f_star)
+    assert len(res.history) == 6 and res.iters == 6 and not res.converged
+    for h in res.history:
+        assert set(h) >= {"iter", "time_s", "objective", "duality_gap",
+                          "rel_opt"}
+        assert h["duality_gap"] > -1e-6      # gap certifies optimality
+    # objective decreases overall
+    assert res.history[-1]["objective"] < res.history[0]["objective"]
+    # radisa/admm are primal-only: no gap, no alpha
+    res2 = get_solver("radisa")().solve(
+        "hinge", X, y, P=3, Q=2,
+        cfg=RADiSAConfig(lam=LAM, gamma=0.05, outer_iters=2))
+    assert res2.alpha is None
+    assert "duality_gap" not in res2.history[0]
+
+
+def test_early_stopping_rel_opt(problem):
+    X, y, f_star = problem
+    s = get_solver("d3ca")()
+    res = s.solve("hinge", X, y, P=3, Q=2,
+                  cfg=D3CAConfig(lam=LAM, outer_iters=50),
+                  f_star=f_star, tol=0.05)
+    assert res.converged and res.iters < 50
+    assert res.history[-1]["rel_opt"] < 0.05
+
+
+def test_early_stopping_duality_gap(problem):
+    X, y, _ = problem
+    res = get_solver("d3ca")().solve(
+        "hinge", X, y, P=3, Q=2, cfg=D3CAConfig(lam=LAM, outer_iters=60),
+        tol=0.1)       # no f_star -> stops on the duality gap
+    assert res.converged and res.iters < 60
+    assert res.history[-1]["duality_gap"] < 0.1
+
+
+def test_warm_start(problem):
+    X, y, _ = problem
+    s = get_solver("d3ca")()
+    cfg = D3CAConfig(lam=LAM, outer_iters=4)
+    r1 = s.solve("hinge", X, y, P=3, Q=2, cfg=cfg)
+    r2 = s.solve("hinge", X, y, P=3, Q=2, cfg=cfg, warm_start=r1)
+    # warm-started run continues to improve on the cold objective
+    assert r2.history[-1]["objective"] < r1.history[-1]["objective"] + 1e-6
+    # bare-w warm starts work for primal-only solvers
+    r3 = get_solver("radisa")().solve(
+        "hinge", X, y, P=3, Q=2,
+        cfg=RADiSAConfig(lam=LAM, gamma=0.05, outer_iters=2),
+        warm_start=r1.w)
+    assert r3.history[-1]["objective"] < float(
+        objective("hinge", X, y, jnp.zeros(X.shape[1]), LAM))
+
+
+def test_callback_fires(problem):
+    X, y, _ = problem
+    seen = []
+    get_solver("admm")().solve(
+        "hinge", X, y, P=3, Q=2, cfg=ADMMConfig(lam=LAM, outer_iters=3),
+        callback=lambda t, w, a: seen.append((t, w.shape, a)))
+    assert [t for t, _, _ in seen] == [1, 2, 3]
+    assert all(shape == (X.shape[1],) for _, shape, _ in seen)
+    assert all(a is None for _, _, a in seen)
+
+
+# ---------------------------------------------------------------------------
+# cell-local solvers: ref <-> pallas parity across losses and step modes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("loss_name", ["hinge", "squared"])
+@pytest.mark.parametrize("step_mode", ["exact", "beta"])
+def test_local_sdca_backend_parity(loss_name, step_mode):
+    loss = get_loss(loss_name)
+    n_p, m_q, steps = 24, 16, 48
+    x = jnp.asarray(RNG.normal(size=(n_p, m_q)), jnp.float32)
+    y = jnp.asarray(np.sign(RNG.normal(size=n_p)) + 0.0, jnp.float32)
+    y = jnp.where(y == 0, 1.0, y)
+    mask = jnp.ones((n_p,)).at[-3:].set(0.0)
+    a0 = jnp.zeros((n_p,))
+    w0 = jnp.asarray(RNG.normal(size=m_q) * 0.1, jnp.float32)
+    key = jax.random.PRNGKey(5)
+    # beta of the order of ||x||^2 keeps the squared-loss recursion
+    # contractive (tiny beta amplifies f32 reduction-order noise)
+    kw = dict(lam=0.2, n=200, Q=3, steps=steps, key=key,
+              step_mode=step_mode, beta=float(m_q))
+    d_ref = local_sdca(loss, x, y, mask, a0, w0, backend="ref", **kw)
+    d_pal = local_sdca(loss, x, y, mask, a0, w0, backend="pallas", **kw)
+    np.testing.assert_allclose(np.asarray(d_pal), np.asarray(d_ref),
+                               rtol=1e-5, atol=1e-5)
+    # padded rows never move
+    np.testing.assert_array_equal(np.asarray(d_pal[-3:]), 0.0)
+
+
+@pytest.mark.parametrize("loss_name", ["hinge", "squared"])
+@pytest.mark.parametrize("lo", [None, 8])
+def test_local_svrg_backend_parity(loss_name, lo):
+    loss = get_loss(loss_name)
+    n_p, m_q, m_sub, L = 20, 16, 8, 32
+    x = jnp.asarray(RNG.normal(size=(n_p, m_q)), jnp.float32)
+    y = jnp.asarray(np.sign(RNG.normal(size=n_p)), jnp.float32)
+    y = jnp.where(y == 0, 1.0, y)
+    mask = jnp.ones((n_p,))
+    m_eff = m_q if lo is None else m_sub
+    wa = jnp.asarray(RNG.normal(size=m_eff) * 0.2, jnp.float32)
+    za = jnp.asarray(RNG.normal(size=n_p) * 0.3, jnp.float32)
+    mu = jnp.asarray(RNG.normal(size=m_eff) * 0.05, jnp.float32)
+    key = jax.random.PRNGKey(9)
+    kw = dict(lam=0.1, L=L, eta=0.03, key=key, lo=lo)
+    w_ref = local_svrg(loss, x, y, mask, za, wa, mu, backend="ref", **kw)
+    w_pal = local_svrg(loss, x, y, mask, za, wa, mu, backend="pallas", **kw)
+    np.testing.assert_allclose(np.asarray(w_pal), np.asarray(w_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_local_pallas_rejects_logistic():
+    loss = get_loss("logistic")
+    x = jnp.ones((4, 3))
+    with pytest.raises(NotImplementedError):
+        local_sdca(loss, x, jnp.ones(4), jnp.ones(4), jnp.zeros(4),
+                   jnp.zeros(3), lam=0.1, n=4, Q=1, steps=2,
+                   key=jax.random.PRNGKey(0), backend="pallas")
+
+
+# ---------------------------------------------------------------------------
+# shard_map side of the matrix (subprocess: forced device count)
+# ---------------------------------------------------------------------------
+
+def test_shard_map_pallas_matches_simulated_ref():
+    r = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "helpers",
+                                      "solver_equiv.py")],
+        env=ENV, timeout=600, capture_output=True, text=True, cwd=ROOT)
+    assert r.returncode == 0, r.stdout + r.stderr
