@@ -1,0 +1,143 @@
+"""CI bench-regression gate over ``BENCH_core.json``.
+
+Compares a freshly produced core-solver benchmark against the committed
+baseline (``benchmarks/baselines/BENCH_core_quick.json``) and fails --
+exit code 1 -- when any (solver, engine, backend[, sparse]) cell got
+more than ``--threshold`` slower.  Runs in the CI ``bench`` job after
+the artifact upload, so the numbers are preserved even when the gate
+trips.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \\
+        [--fresh BENCH_core.json] [--baseline benchmarks/baselines/...]
+        [--threshold 1.25]
+
+The baseline is committed from whatever machine produced it, and CI
+runners are a different (and varying) machine, so raw wall-clock ratios
+would trip on hardware alone.  The gate therefore compares
+**host-normalized** ratios: each payload's cells are divided by that
+payload's median s_per_iter over the cells both sides share, cancelling
+uniform machine-speed factors; what remains is the *relative* cost of a
+cell within the grid, which is what a code regression moves.  (The
+tradeoff: a regression that slows every cell by the same factor is
+indistinguishable from a slower runner -- the raw median shift is
+printed so humans can spot that case.)
+
+Provenance rules (the stamps written by ``benchmarks.common.provenance``):
+  * both payloads must carry a provenance block;
+  * both must be ``--quick`` runs -- full-size and quick numbers are not
+    comparable, so a mismatch is an error, not a silent pass;
+  * cells present on only one side are reported but never fail the gate
+    (new cells appear whenever the grid grows; the baseline is refreshed
+    by re-running ``core_bench --quick`` and committing the JSON).
+
+Speedups beyond the inverse threshold are reported too, as a nudge to
+refresh the baseline so the gate keeps teeth.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_BASELINE = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "baselines",
+    "BENCH_core_quick.json")
+
+
+def load(path):
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def compare(fresh: dict, baseline: dict, threshold: float):
+    """Returns (failures, report_lines)."""
+    lines = []
+    failures = []
+    for payload, name in ((fresh, "fresh"), (baseline, "baseline")):
+        prov = payload.get("provenance")
+        if not prov:
+            failures.append(f"{name} payload has no provenance stamp; "
+                            "re-run benchmarks.core_bench")
+            return failures, lines
+        if not prov.get("quick"):
+            failures.append(
+                f"{name} payload is not a --quick run "
+                f"(git_sha={prov.get('git_sha', '?')[:12]}); the gate only "
+                "compares quick grids")
+            return failures, lines
+
+    fcells = fresh.get("cells", {})
+    bcells = baseline.get("cells", {})
+    shared = sorted(set(fcells) & set(bcells))
+    if not shared:
+        failures.append("no cells shared between fresh and baseline")
+        return failures, lines
+
+    def median(xs):
+        xs = sorted(xs)
+        mid = len(xs) // 2
+        return xs[mid] if len(xs) % 2 else (xs[mid - 1] + xs[mid]) / 2.0
+
+    # cancel uniform machine-speed factors: compare each cell's share of
+    # its own payload's median, not raw wall clock (see module docstring)
+    med_f = median([fcells[k]["s_per_iter"] for k in shared])
+    med_b = median([bcells[k]["s_per_iter"] for k in shared])
+    lines.append(f"  host speed (median s_per_iter): baseline "
+                 f"{med_b * 1e3:.2f} ms, fresh {med_f * 1e3:.2f} ms "
+                 f"({med_f / med_b:.2f}x raw -- normalized out below)")
+
+    for key in sorted(set(fcells) | set(bcells)):
+        f, b = fcells.get(key), bcells.get(key)
+        if f is None:
+            lines.append(f"  {key}: only in baseline (grid shrank?)")
+            continue
+        if b is None:
+            lines.append(f"  {key}: new cell {f['s_per_iter'] * 1e3:.2f} ms "
+                         "(no baseline yet)")
+            continue
+        ratio = (f["s_per_iter"] / med_f) / (b["s_per_iter"] / med_b)
+        verdict = "ok"
+        if ratio > threshold:
+            verdict = "REGRESSION"
+            failures.append(
+                f"{key}: {b['s_per_iter'] * 1e3:.2f} -> "
+                f"{f['s_per_iter'] * 1e3:.2f} ms per iter "
+                f"({ratio:.2f}x normalized > {threshold:.2f}x)")
+        elif ratio < 1.0 / threshold:
+            verdict = "faster (consider refreshing the baseline)"
+        lines.append(f"  {key}: {ratio:.2f}x {verdict}")
+    return failures, lines
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", default=os.path.join(ROOT, "BENCH_core.json"))
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--threshold", type=float, default=1.25,
+                    help="fail when fresh/baseline s_per_iter exceeds this")
+    args = ap.parse_args(argv)
+
+    fresh = load(args.fresh)
+    baseline = load(args.baseline)
+    failures, lines = compare(fresh, baseline, args.threshold)
+
+    print(f"[check_regression] fresh={args.fresh}")
+    print(f"[check_regression] baseline={args.baseline} "
+          f"(sha {baseline.get('provenance', {}).get('git_sha', '?')[:12]},"
+          f" {baseline.get('provenance', {}).get('date', '?')})")
+    for line in lines:
+        print(line)
+    if failures:
+        print(f"[check_regression] FAIL ({len(failures)}):",
+              file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("[check_regression] PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

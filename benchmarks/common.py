@@ -6,8 +6,10 @@ shard_map engine can fake a P x Q device grid on CPU.
 """
 from __future__ import annotations
 
+import datetime
 import json
 import os
+import subprocess
 import sys
 import time
 
@@ -37,12 +39,34 @@ def ensure_host_devices(argv, count: int = 32):
 
 
 def add_engine_args(ap):
-    """--engine / --backend knobs shared by the fig benchmarks."""
+    """--engine / --backend / --block-format knobs shared by the fig
+    benchmarks."""
     ap.add_argument("--engine", default="simulated",
                     choices=["simulated", "shard_map"])
     ap.add_argument("--backend", default="ref", choices=["ref", "pallas"],
                     help="cell-local solver backend")
+    ap.add_argument("--block-format", default="dense",
+                    choices=["dense", "sparse"],
+                    help="per-cell layout (sparse = padded-ELL cells)")
     return ap
+
+
+def provenance(quick: bool) -> dict:
+    """Stamp for BENCH_*.json payloads: the regression gate and
+    trajectory plots must be able to trust what produced a number."""
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            timeout=10).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        sha = "unknown"
+    return {
+        "git_sha": sha,
+        "date": datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"),
+        "quick": bool(quick),
+    }
 
 
 def save_result(name: str, payload: dict):

@@ -10,9 +10,11 @@ performance story).
     PYTHONPATH=src python -m benchmarks.core_bench [--quick]
 
 Emits ``BENCH_core.json`` (repo root by default): seconds per outer
-iteration per (solver, engine, backend) cell plus the two headline
-ratios -- ref vs pallas per engine, and simulated vs shard_map per
-backend.
+iteration per (solver, engine, backend[, sparse]) cell plus the
+headline ratios -- ref vs pallas per engine, simulated vs shard_map per
+backend, and sparse vs dense per (engine, backend) on the low-density
+instance.  The payload carries a provenance stamp (git_sha / date /
+quick) that ``benchmarks.check_regression`` requires before gating.
 """
 from __future__ import annotations
 
@@ -33,16 +35,18 @@ if "jax" not in sys.modules:
 
 from repro.core import (D3CAConfig, RADiSAConfig, ADMMConfig,  # noqa: E402
                         get_solver, objective, serial_sdca)
-from repro.data import make_svm_data                        # noqa: E402
+from repro.data import make_sparse_svm_data, make_svm_data  # noqa: E402
 
 try:
-    from .common import emit_csv_row, timed
+    from .common import emit_csv_row, provenance, timed
 except ImportError:                       # `python benchmarks/core_bench.py`
-    from common import emit_csv_row, timed
+    from common import emit_csv_row, provenance, timed
 
 
-def bench_combo(name, cfg, X, y, P, Q, engine, backend, f_star, reps):
-    solver = get_solver(name)(engine=engine, local_backend=backend)
+def bench_combo(name, cfg, X, y, P, Q, engine, backend, f_star, reps,
+                block_format="dense"):
+    solver = get_solver(name)(engine=engine, local_backend=backend,
+                              block_format=block_format)
     prog = solver.program("hinge", X, y, P=P, Q=Q, cfg=cfg)
     state = prog.step(1, prog.state)          # compile + warm
     t = timed(lambda: prog.step(2, state), reps=reps, warmup=0)
@@ -65,10 +69,17 @@ def main(argv=None):
     n, m = (256, 96) if args.quick else (768, 256)
     inner = 32 if args.quick else 96
     iters = 3 if args.quick else 5
+    density = 0.05
     X, y = make_svm_data(n, m, seed=0)
+    # the sparse grid runs on a low-density instance (weak-scaling
+    # regime); dense np array in, partitioned into ELL cells by the
+    # block_format knob
+    Xs, ys = make_sparse_svm_data(n, m, density=density, seed=0)
     lam = 1e-1
     w_ref, _ = serial_sdca("hinge", X, y, lam=lam, epochs=100)
     f_star = float(objective("hinge", X, y, w_ref, lam))
+    ws_ref, _ = serial_sdca("hinge", Xs, ys, lam=lam, epochs=100)
+    fs_star = float(objective("hinge", Xs, ys, ws_ref, lam))
 
     configs = {
         "d3ca": D3CAConfig(lam=lam, outer_iters=iters, local_steps=inner),
@@ -77,8 +88,10 @@ def main(argv=None):
         "admm": ADMMConfig(lam=lam, rho=lam, outer_iters=iters),
     }
     out = {"n": n, "m": m, "P": P, "Q": Q, "lam": lam, "inner": inner,
+           "sparse_density": density,
            "note": "pallas numbers are interpret-mode on CPU unless run "
                    "on a TPU host",
+           "provenance": provenance(args.quick),
            "cells": {}, "ratios": {}}
 
     for name, cfg in configs.items():
@@ -91,6 +104,13 @@ def main(argv=None):
                 out["cells"][key] = cell
                 emit_csv_row(f"core/{key}", cell["s_per_iter"] * 1e6,
                              f"rel_opt={cell['rel_opt']:.4f}")
+                skey = f"{key}/sparse"
+                scell = bench_combo(name, cfg, Xs, ys, P, Q, engine,
+                                    backend, fs_star, args.reps,
+                                    block_format="sparse")
+                out["cells"][skey] = scell
+                emit_csv_row(f"core/{skey}", scell["s_per_iter"] * 1e6,
+                             f"rel_opt={scell['rel_opt']:.4f}")
 
     cells = out["cells"]
     for name in configs:
@@ -106,6 +126,13 @@ def main(argv=None):
             if s and d:
                 out["ratios"][f"{name}/{backend}/shard_map_over_simulated"] \
                     = (d["s_per_iter"] / s["s_per_iter"])
+            for engine in ("simulated", "shard_map"):
+                dn = cells.get(f"{name}/{engine}/{backend}")
+                sp = cells.get(f"{name}/{engine}/{backend}/sparse")
+                if dn and sp:
+                    out["ratios"][
+                        f"{name}/{engine}/{backend}/sparse_over_dense"] = (
+                        sp["s_per_iter"] / dn["s_per_iter"])
 
     with open(args.out, "w") as fh:
         json.dump(out, fh, indent=1)

@@ -1,7 +1,19 @@
 """Paper Figure 6: weak scaling.  Per-processor workload constant
 (block 40,000 x 5,000 scaled by --scale); P grows 1..7 for Q in {2,3,4}
 and two sparsity levels; efficiency = t(P=1) / t(P).  Runs through the
-unified solver API (any engine x backend)."""
+unified solver API (any engine x backend x block format).
+
+``--profile news20`` (or realsim) swaps the synthetic blocks for a
+paper-scale stand-in of the real dataset: block sizes chosen so that at
+``--scale 1.0`` the largest grid reaches the dataset's true (n, m) at
+its true density (~0.034% for news20), generated directly as CSR and
+solved with ``block_format="sparse"`` -- a dense news20 grid would need
+~100 GB, so the profile forces the sparse path and times outer
+iterations instead of time-to-tolerance (no dense serial reference at
+this scale).  The default ``--scale 0.01`` is a smoke-test size; the
+payload records ``scale`` and the effective per-grid (n, m) so scaled
+runs are never mistaken for paper-scale ones.
+"""
 from __future__ import annotations
 
 import argparse
@@ -12,10 +24,11 @@ from .common import add_engine_args, emit_csv_row, ensure_host_devices, \
 
 ensure_host_devices(sys.argv)
 
-from repro.configs.svm_paper import WEAK_P, WEAK_Q, WEAK_SPARSITY  # noqa: E402
+from repro.configs.svm_paper import (REAL_DATASETS, WEAK_P, WEAK_Q,  # noqa: E402,E501
+                                     WEAK_SPARSITY, synthetic_profile)
 from repro.core import (D3CAConfig, RADiSAConfig, get_solver,  # noqa: E402
                         objective, serial_sdca)
-from repro.data import make_sparse_svm_data                 # noqa: E402
+from repro.data import make_sparse_svm_csr, make_sparse_svm_data  # noqa: E402
 
 
 def time_to_tol(solver, X, y, P, Q, cfg, f_star, tol=0.05):
@@ -25,34 +38,45 @@ def time_to_tol(solver, X, y, P, Q, cfg, f_star, tol=0.05):
     return (hit or res.history[-1])["time_s"]
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--scale", type=float, default=0.01)
-    ap.add_argument("--iters", type=int, default=12)
-    ap.add_argument("--max-p", type=int, default=4)
-    add_engine_args(ap)
-    args = ap.parse_args(argv)
+def time_iters(solver, X, y, P, Q, cfg):
+    """Wall time of ``cfg.outer_iters`` outer iterations (history off --
+    at news20 scale the per-iter objective pass would dominate)."""
+    import time
 
-    bn, bm = int(40000 * args.scale), int(5000 * args.scale)
-    out = {"engine": args.engine, "backend": args.backend}
-    for r in WEAK_SPARSITY:
+    import jax
+    prog = solver.program("hinge", X, y, P=P, Q=Q, cfg=cfg)
+    state = prog.step(1, prog.state)            # compile + warm
+    jax.block_until_ready(state)
+    t0 = time.perf_counter()
+    for t in range(2, cfg.outer_iters + 2):
+        state = prog.step(t, state)
+    jax.block_until_ready(state)
+    return time.perf_counter() - t0
+
+
+def run_grid(args, make_data, sparsities, out):
+    """Shared weak-scaling sweep; ``make_data(P, Q, r) -> (X, y, bn, bm)``."""
+    for r in sparsities:
         for Q in WEAK_Q[:2] if args.max_p < 7 else WEAK_Q:
             base = {}
             for P in [p for p in WEAK_P if p <= args.max_p]:
-                n, m = P * bn, Q * bm
-                X, y = make_sparse_svm_data(n, m, density=max(r, 0.05),
-                                            seed=P)
+                X, y, n, m = make_data(P, Q, r)
                 for method, lam in (("radisa", 0.1), ("d3ca", 1.0)):
-                    w_ref, _ = serial_sdca("hinge", X, y, lam=lam, epochs=60)
-                    f_star = float(objective("hinge", X, y, w_ref, lam))
-                    solver = get_solver(method)(engine=args.engine,
-                                                local_backend=args.backend)
+                    solver = get_solver(method)(
+                        engine=args.engine, local_backend=args.backend,
+                        block_format=args.block_format)
                     if method == "radisa":
                         cfg = RADiSAConfig(lam=lam, gamma=0.05 / P,
                                            outer_iters=args.iters)
                     else:
                         cfg = D3CAConfig(lam=lam, outer_iters=args.iters)
-                    t = time_to_tol(solver, X, y, P, Q, cfg, f_star)
+                    if args.profile:
+                        t = time_iters(solver, X, y, P, Q, cfg)
+                    else:
+                        w_ref, _ = serial_sdca("hinge", X, y, lam=lam,
+                                               epochs=60)
+                        f_star = float(objective("hinge", X, y, w_ref, lam))
+                        t = time_to_tol(solver, X, y, P, Q, cfg, f_star)
                     kk = f"{method}_r{r}_Q{Q}"
                     base.setdefault(kk, {})
                     base[kk][P] = t
@@ -60,6 +84,54 @@ def main(argv=None):
                     emit_csv_row(f"fig6/{kk}/P{P}", t * 1e6,
                                  f"efficiency={eff:.1f}%")
             out.update(base)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.01)
+    ap.add_argument("--iters", type=int, default=12)
+    ap.add_argument("--max-p", type=int, default=4)
+    ap.add_argument("--profile", default=None,
+                    choices=sorted(REAL_DATASETS),
+                    help="paper-scale synthetic stand-in for a real "
+                         "dataset (forces --block-format sparse)")
+    add_engine_args(ap)
+    args = ap.parse_args(argv)
+
+    out = {"engine": args.engine, "backend": args.backend,
+           "block_format": args.block_format, "profile": args.profile,
+           "scale": args.scale}
+
+    if args.profile:
+        args.block_format = "sparse"    # dense cells cannot hold news20
+        out["block_format"] = "sparse"
+        out["profile_full_size"] = REAL_DATASETS[args.profile]
+        out["grid_sizes"] = {}          # label -> effective (n, m) per P
+        if args.scale != 1.0:
+            print(f"[fig6] NOTE: --scale {args.scale} shrinks the "
+                  f"{args.profile} profile blocks by that factor; pass "
+                  "--scale 1.0 for true paper-scale runs", file=sys.stderr)
+
+        def make_data(P, Q, r):
+            bn, bm, density = synthetic_profile(args.profile, args.max_p, Q)
+            bn, bm = max(int(bn * args.scale), 8), max(int(bm * args.scale), 8)
+            n, m = P * bn, Q * bm
+            out["grid_sizes"][f"Q{Q}_P{P}"] = [n, m]
+            X, y = make_sparse_svm_csr(n, m, density=density, seed=P)
+            return X, y, n, m
+
+        sparsities = [REAL_DATASETS[args.profile]["density"]]
+    else:
+        def make_data(P, Q, r):
+            bn, bm = int(40000 * args.scale), int(5000 * args.scale)
+            n, m = P * bn, Q * bm
+            X, y = make_sparse_svm_data(n, m, density=max(r, 0.05), seed=P)
+            return X, y, n, m
+
+        sparsities = WEAK_SPARSITY
+
+    out = run_grid(args, make_data, sparsities, out)
     save_result("fig6_weak", out)
 
 

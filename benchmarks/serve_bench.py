@@ -28,6 +28,11 @@ from repro.models import Transformer, reduced
 from repro.serve import (EngineConfig, InferenceEngine, SamplingParams,
                          ServeMetrics, percentiles)
 
+try:
+    from .common import provenance
+except ImportError:                     # `python benchmarks/serve_bench.py`
+    from common import provenance
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -79,6 +84,9 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=os.path.join(ROOT, "BENCH_serve.json"))
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized trace (marks the payload's provenance; "
+                         "the default trace is already CI-sized)")
     args = ap.parse_args(argv)
 
     cfg = reduced(get_config(args.arch))
@@ -106,6 +114,7 @@ def main(argv=None):
     served = run_engine(engine, trace)
 
     result = {
+        "provenance": provenance(args.quick),
         "arch": args.arch, "requests": args.requests, "slots": args.slots,
         "trace": {"prompt_len": [len(r.prompt) for r in trace],
                   "max_new_tokens": [r.max_new_tokens for r in trace]},

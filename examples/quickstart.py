@@ -31,10 +31,12 @@ def main():
     data = partition(X, y, P=4, Q=2)
 
     # 4. the two proposed methods + the ADMM baseline
-    report = lambda name: (lambda t, w, *_: print(
-        f"  {name} iter {t:3d}: rel-opt "
-        f"{float(rel_opt(objective('hinge', X, y, w, lam), f_star)):.4f}")
-        if t % 5 == 0 else None)
+    def report(name):
+        def cb(t, w, *_):
+            if t % 5 == 0:
+                print(f"  {name} iter {t:3d}: rel-opt "
+                      f"{float(rel_opt(objective('hinge', X, y, w, lam), f_star)):.4f}")
+        return cb
 
     print("D3CA (dual coordinate ascent):")
     d3ca_simulated("hinge", data, D3CAConfig(lam=lam, outer_iters=15),

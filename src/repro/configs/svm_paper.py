@@ -43,3 +43,22 @@ STRONG_CONFIGS = [(1, 1), (2, 1), (1, 2), (4, 1), (2, 2), (1, 4),
 WEAK_P = list(range(1, 8))
 WEAK_Q = [2, 3, 4]
 WEAK_SPARSITY = [0.01, 0.05]
+
+# Part 2 real datasets (paper §IV): shapes and densities of the LIBSVM
+# files.  ``synthetic_profile`` gives the per-block numbers the fig6
+# harness uses to run a paper-scale synthetic stand-in when the real
+# file is absent -- at these densities the sparse (padded-ELL) block
+# format is mandatory: a dense news20 block grid would need ~100 GB.
+REAL_DATASETS = {
+    # news20.binary: 19,996 x 1,355,191 at ~0.034% density (~9.1M nnz)
+    "news20": {"n": 19996, "m": 1355191, "density": 3.4e-4, "lam": 1e-4},
+    # real-sim: 72,309 x 20,958 at ~0.24% density (~3.7M nnz)
+    "realsim": {"n": 72309, "m": 20958, "density": 2.4e-3, "lam": 1e-4},
+}
+
+
+def synthetic_profile(name: str, max_p: int, Q: int):
+    """Per-block (block_n, block_m, density) for a weak-scaling run whose
+    LARGEST grid (P=max_p, given Q) reaches the real dataset's size."""
+    d = REAL_DATASETS[name]
+    return d["n"] // max_p, d["m"] // Q, d["density"]

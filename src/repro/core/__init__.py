@@ -1,26 +1,32 @@
 """Core: the paper's doubly distributed optimization algorithms."""
 from .admm import (ADMMConfig, admm_distributed,
                    admm_setup_simulated, admm_simulated)
-from .d3ca import D3CAConfig, d3ca_distributed, d3ca_simulated, make_d3ca_step
-from .engines import EngineProgram, drive, prepare_shard_map
+from .d3ca import (D3CAConfig, d3ca_distributed, d3ca_simulated,
+                   make_d3ca_step, make_d3ca_step_sparse)
+from .engines import (EngineProgram, drive, prepare_shard_map,
+                      prepare_shard_map_sparse)
 from .losses import LOSSES, get_loss
-from .partition import DoublyPartitioned, partition
-from .radisa import (RADiSAConfig, make_radisa_step, radisa_distributed,
-                     radisa_simulated)
+from .partition import (DoublyPartitioned, SparseDoublyPartitioned,
+                        partition, partition_sparse)
+from .radisa import (RADiSAConfig, make_radisa_step, make_radisa_step_sparse,
+                     radisa_distributed, radisa_simulated)
 from .reference import duality_gap, objective, rel_opt, serial_sdca
-from .solver import (ENGINES, LOCAL_BACKENDS, SolveResult, Solver,
-                     available_solvers, get_solver, register_solver)
+from .solver import (BLOCK_FORMATS, ENGINES, LOCAL_BACKENDS, SolveResult,
+                     Solver, available_solvers, get_solver, register_solver)
 
 __all__ = [
     "ADMMConfig", "admm_distributed", "admm_setup_simulated",
     "admm_simulated",
     "D3CAConfig", "d3ca_distributed", "d3ca_simulated", "make_d3ca_step",
+    "make_d3ca_step_sparse",
     "EngineProgram", "drive", "prepare_shard_map",
+    "prepare_shard_map_sparse",
     "LOSSES", "get_loss",
-    "DoublyPartitioned", "partition",
-    "RADiSAConfig", "make_radisa_step", "radisa_distributed",
-    "radisa_simulated",
+    "DoublyPartitioned", "SparseDoublyPartitioned", "partition",
+    "partition_sparse",
+    "RADiSAConfig", "make_radisa_step", "make_radisa_step_sparse",
+    "radisa_distributed", "radisa_simulated",
     "duality_gap", "objective", "rel_opt", "serial_sdca",
-    "ENGINES", "LOCAL_BACKENDS", "SolveResult", "Solver",
+    "BLOCK_FORMATS", "ENGINES", "LOCAL_BACKENDS", "SolveResult", "Solver",
     "available_solvers", "get_solver", "register_solver",
 ]

@@ -37,9 +37,11 @@ import jax.numpy as jnp
 from jax.scipy.linalg import cho_factor, cho_solve
 from jax.sharding import PartitionSpec as P
 
-from .engines import EngineProgram, ShardMapData, drive_with_callback
+from .engines import (EngineProgram, SparseShardMapData,
+                      drive_with_callback)
 from .losses import Loss, get_loss
-from .partition import DoublyPartitioned
+from .partition import (DoublyPartitioned, SparseDoublyPartitioned,
+                        ell_gather, ell_scatter_add)
 from .util import pvary, shard_map
 
 
@@ -77,10 +79,43 @@ def prox_loss(loss_name: str, v, y, c):
 # simulated grid engine
 # ---------------------------------------------------------------------------
 
-def admm_setup_simulated(data: DoublyPartitioned, cfg: ADMMConfig):
-    """Cache the per-column-block Cholesky factors (excluded from timing)."""
+def _sparse_Aw(data: SparseDoublyPartitioned, w_blocks):
+    """A_pq w_q for every cell -> (P, Q, n_p), by per-row gathers."""
+    def pq(cols_pq, vals_pq, w_q):
+        return ell_gather(w_q, cols_pq, vals_pq)
+    return jax.vmap(lambda cp, vp: jax.vmap(pq)(cp, vp, w_blocks))(
+        data.cols, data.vals)
+
+
+def _sparse_rhs(data: SparseDoublyPartitioned, b):
+    """sum_p A_pq^T b_pq -> (Q, m_q), by per-cell scatter-adds."""
+    m_q = data.m_q
+
+    def pq(cols_pq, vals_pq, b_pq):
+        return ell_scatter_add(m_q, cols_pq, vals_pq, b_pq)
+    per_cell = jax.vmap(lambda cp, vp, bp: jax.vmap(pq)(cp, vp, bp))(
+        data.cols, data.vals, b)                          # (P, Q, m_q)
+    return per_cell.sum(axis=0)
+
+
+def admm_setup_simulated(data, cfg: ADMMConfig):
+    """Cache the per-column-block Cholesky factors (excluded from timing).
+
+    ``data`` may be dense or sparse; the sparse gram is a scatter-add of
+    per-row outer products over the ELL entries (padding slots are
+    (0, 0.0) and contribute nothing)."""
     # M_q = (2 lam / rho) I + sum_p A_pq^T A_pq   (m_q x m_q)
-    gram = jnp.einsum("pqnm,pqnk->qmk", data.x_blocks, data.x_blocks)
+    if isinstance(data, SparseDoublyPartitioned):
+        m_q = data.m_q
+
+        def pq(cols_pq, vals_pq):
+            outer = vals_pq[:, :, None] * vals_pq[:, None, :]
+            return jnp.zeros((m_q, m_q)).at[
+                cols_pq[:, :, None], cols_pq[:, None, :]].add(outer)
+        gram = jax.vmap(lambda cp, vp: jax.vmap(pq)(cp, vp))(
+            data.cols, data.vals).sum(axis=0)            # (Q, m_q, m_q)
+    else:
+        gram = jnp.einsum("pqnm,pqnk->qmk", data.x_blocks, data.x_blocks)
     eye = jnp.eye(data.m_q)
     M = gram + (cfg.lam / cfg.rho) * eye[None]
     return jax.vmap(lambda Mq: cho_factor(Mq)[0])(M)     # (Q, m_q, m_q)
@@ -90,7 +125,9 @@ def admm_simulated_program(loss: Loss, data: DoublyPartitioned,
                            cfg: ADMMConfig, *, chol=None,
                            w0=None) -> EngineProgram:
     """vmap-over-cells engine.  State: (s (P,Q,n_p), u (P,Q,n_p),
-    w_blocks (Q, m_q)).  The Cholesky setup runs at build time."""
+    w_blocks (Q, m_q)).  The Cholesky setup runs at build time.
+    ``data`` may be dense or sparse (padded-ELL cells)."""
+    sparse = isinstance(data, SparseDoublyPartitioned)
     loss_name = loss.name
     Pn, Qn = data.P, data.Q
     n = data.n
@@ -98,19 +135,27 @@ def admm_simulated_program(loss: Loss, data: DoublyPartitioned,
         chol = admm_setup_simulated(data, cfg)
     c_prox = Qn / (cfg.rho * n)   # f_p carries the global 1/n factor
 
+    def matvec(w):
+        if sparse:
+            return _sparse_Aw(data, w)
+        return jnp.einsum("pqnm,qm->pqn", data.x_blocks, w)
+
     @jax.jit
     def step(t, state):
         s, u, w = state
-        Aw = jnp.einsum("pqnm,qm->pqn", data.x_blocks, w)
+        Aw = matvec(w)
         cmat = Aw - u                                    # c_pq
         v = cmat.sum(axis=1)                             # (P, n_p)
         z = prox_loss(loss_name, v, data.y_blocks, c_prox)
         z = jnp.where(data.mask[:, :] > 0, z, v)         # padded rows: identity
         s = cmat + ((z - v) / Qn)[:, None, :]
         b = s + u
-        rhs = jnp.einsum("pqn,pqnm->qm", b, data.x_blocks)
+        if sparse:
+            rhs = _sparse_rhs(data, b)
+        else:
+            rhs = jnp.einsum("pqn,pqnm->qm", b, data.x_blocks)
         w = jax.vmap(lambda Lq, r: cho_solve((Lq, False), r))(chol, rhs)
-        u = u + s - jnp.einsum("pqnm,qm->pqn", data.x_blocks, w)
+        u = u + s - matvec(w)
         return s, u, w
 
     w_init = (jnp.zeros((Qn, data.m_q)) if w0 is None
@@ -192,26 +237,106 @@ def admm_setup_distributed(mesh, x, cfg: ADMMConfig, *,
     ))(x)
 
 
-def admm_shard_map_program(loss: Loss, sdata: ShardMapData, cfg: ADMMConfig,
+def make_admm_step_sparse(loss_name: str, mesh, cfg: ADMMConfig, *, n: int,
+                          m_q: int, data_axis: str = "data",
+                          model_axis: str = "model"):
+    """Sparse-cell variant of :func:`make_admm_step`: the two products
+    with the local block become a per-row gather (A_pq w_q) and a
+    scatter-add (A_pq^T b)."""
+    Qn = mesh.shape[model_axis]
+    c_prox = Qn / (cfg.rho * n)
+
+    def step(cols, vals, y, mask, s, u, w, chol):
+        def cell(cols_b, vals_b, y_b, mask_b, s_b, u_b, w_b, chol_b):
+            y_b = pvary(y_b, (model_axis,))
+            mask_b = pvary(mask_b, (model_axis,))
+            w_b = pvary(w_b, (data_axis,))
+            chol_b = pvary(chol_b, (data_axis,))
+            s_b, u_b = s_b[:, 0], u_b[:, 0]
+            cvec = ell_gather(w_b, cols_b, vals_b) - u_b
+            v = jax.lax.psum(cvec, model_axis)
+            z = prox_loss(loss_name, v, y_b, c_prox)
+            z = jnp.where(mask_b > 0, z, v)
+            s_new = cvec + (z - v) / Qn
+            b = s_new + u_b
+            rhs = jax.lax.psum(ell_scatter_add(m_q, cols_b, vals_b, b),
+                               data_axis)
+            w_new = cho_solve((chol_b[0], False), rhs)
+            u_new = u_b + s_new - ell_gather(w_new, cols_b, vals_b)
+            return s_new[:, None], u_new[:, None], w_new
+
+        return shard_map(
+            cell, mesh,
+            in_specs=(P(data_axis, model_axis), P(data_axis, model_axis),
+                      P(data_axis), P(data_axis),
+                      P(data_axis, model_axis), P(data_axis, model_axis),
+                      P(model_axis), P(model_axis)),
+            out_specs=(P(data_axis, model_axis), P(data_axis, model_axis),
+                       P(model_axis)),
+        )(cols, vals, y, mask, s, u, w, chol)
+
+    return jax.jit(step)
+
+
+def admm_setup_distributed_sparse(mesh, cols, vals, m_q: int,
+                                  cfg: ADMMConfig, *,
+                                  data_axis: str = "data",
+                                  model_axis: str = "model"):
+    """Cached Cholesky factors from ELL cells: scatter-add of per-row
+    outer products, reduced over observation partitions."""
+    def cell(cols_b, vals_b):
+        outer = vals_b[:, :, None] * vals_b[:, None, :]
+        gram = jax.lax.psum(
+            jnp.zeros((m_q, m_q)).at[
+                cols_b[:, :, None], cols_b[:, None, :]].add(outer),
+            data_axis)
+        M = gram + (cfg.lam / cfg.rho) * jnp.eye(m_q, dtype=vals_b.dtype)
+        return cho_factor(M)[0][None]
+
+    return jax.jit(shard_map(
+        cell, mesh,
+        in_specs=(P(data_axis, model_axis), P(data_axis, model_axis)),
+        out_specs=P(model_axis),
+    ))(cols, vals)
+
+
+def admm_shard_map_program(loss: Loss, sdata, cfg: ADMMConfig,
                            *, w0=None) -> EngineProgram:
     """shard_map engine.  State: (s (n_pad, Q), u (n_pad, Q), w (m_pad,)).
 
     The cached Cholesky setup runs at build time (excluded from step
-    timings, as in the paper)."""
+    timings, as in the paper).  ``sdata`` is a :class:`ShardMapData` or
+    :class:`SparseShardMapData`."""
     mesh = sdata.mesh
-    chol = admm_setup_distributed(mesh, sdata.x, cfg,
-                                  data_axis=sdata.data_axis,
-                                  model_axis=sdata.model_axis)
-    step = make_admm_step(loss.name, mesh, cfg, n=sdata.n,
-                          data_axis=sdata.data_axis,
-                          model_axis=sdata.model_axis)
+    if isinstance(sdata, SparseShardMapData):
+        chol = admm_setup_distributed_sparse(
+            mesh, sdata.cols, sdata.vals, sdata.m_q, cfg,
+            data_axis=sdata.data_axis, model_axis=sdata.model_axis)
+        step = make_admm_step_sparse(loss.name, mesh, cfg, n=sdata.n,
+                                     m_q=sdata.m_q,
+                                     data_axis=sdata.data_axis,
+                                     model_axis=sdata.model_axis)
+
+        def run(t, st):
+            return step(sdata.cols, sdata.vals, sdata.y, sdata.mask, *st,
+                        chol)
+    else:
+        chol = admm_setup_distributed(mesh, sdata.x, cfg,
+                                      data_axis=sdata.data_axis,
+                                      model_axis=sdata.model_axis)
+        step = make_admm_step(loss.name, mesh, cfg, n=sdata.n,
+                              data_axis=sdata.data_axis,
+                              model_axis=sdata.model_axis)
+
+        def run(t, st):
+            return step(sdata.x, sdata.y, sdata.mask, *st, chol)
     from jax.sharding import NamedSharding
     su_sharding = NamedSharding(mesh, P(sdata.data_axis, sdata.model_axis))
     zeros_su = jax.device_put(jnp.zeros((sdata.n_pad, sdata.Q)), su_sharding)
     w_init = sdata.zeros_model() if w0 is None else sdata.pad_w(w0)
     return EngineProgram(
         state=(zeros_su, zeros_su, w_init),
-        step=lambda t, st: step(sdata.x, sdata.y, sdata.mask, *st, chol),
+        step=run,
         w_of=lambda st: st[2][: sdata.m])
 
 

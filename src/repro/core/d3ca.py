@@ -28,10 +28,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from .engines import EngineProgram, ShardMapData, drive_with_callback
-from .local import local_sdca
+from .engines import (EngineProgram, SparseShardMapData,
+                      drive_with_callback)
+from .local import local_sdca, local_sdca_sparse
 from .losses import Loss, get_loss
-from .partition import DoublyPartitioned
+from .partition import (DoublyPartitioned, SparseDoublyPartitioned,
+                        ell_scatter_add)
 from .util import pvary, shard_map
 
 
@@ -51,14 +53,24 @@ class D3CAConfig:
 def d3ca_simulated_program(loss: Loss, data: DoublyPartitioned,
                            cfg: D3CAConfig, *, local_backend: str = "ref",
                            w0=None, alpha0=None) -> EngineProgram:
-    """vmap-over-cells engine.  State: (alpha (P, n_p), w_blocks (Q, m_q))."""
+    """vmap-over-cells engine.  State: (alpha (P, n_p), w_blocks (Q, m_q)).
+
+    ``data`` may be a dense :class:`DoublyPartitioned` or a sparse
+    :class:`SparseDoublyPartitioned` (padded-ELL cells); the update rules
+    are identical, only the cell-local solver and the primal-dual map
+    switch between dense einsum and gather/scatter forms."""
+    sparse = isinstance(data, SparseDoublyPartitioned)
     Pn, Qn = data.P, data.Q
-    n, lam = data.n, cfg.lam
+    n, m_q, lam = data.n, data.m_q, cfg.lam
     steps = cfg.local_steps or data.n_p
     key0 = jax.random.PRNGKey(cfg.seed)
 
-    local = partial(local_sdca, loss, lam=lam, n=n, Q=Qn, steps=steps,
-                    backend=local_backend)
+    if sparse:
+        local = partial(local_sdca_sparse, loss, lam=lam, n=n, Q=Qn,
+                        steps=steps, backend=local_backend)
+    else:
+        local = partial(local_sdca, loss, lam=lam, n=n, Q=Qn, steps=steps,
+                        backend=local_backend)
 
     @jax.jit
     def outer(t, state):
@@ -68,7 +80,9 @@ def d3ca_simulated_program(loss: Loss, data: DoublyPartitioned,
 
         def cell(p, q):
             key_p = jax.random.fold_in(key_t, p)  # coordinate order per p
-            return local(data.x_blocks[p, q], data.y_blocks[p], data.mask[p],
+            x_cell = ((data.cols[p, q], data.vals[p, q]) if sparse
+                      else (data.x_blocks[p, q],))
+            return local(*x_cell, data.y_blocks[p], data.mask[p],
                          alpha[p], w_blocks[q], key=key_p,
                          step_mode=cfg.step_mode, beta=beta)
 
@@ -78,8 +92,17 @@ def d3ca_simulated_program(loss: Loss, data: DoublyPartitioned,
         # step 6: alpha_[p,.] += (1/(P*Q)) sum_q dalpha[p, q]
         alpha = alpha + dalpha.sum(axis=1) / (Pn * Qn)
         # step 9: w_[., q] = (1/(lam n)) sum_p alpha_[p,q]^T x_[p,q]
-        w_blocks = jnp.einsum("pn,pqnm->qm", alpha * data.mask,
-                              data.x_blocks) / (lam * n)
+        am = alpha * data.mask
+        if sparse:
+            def col_block(cols_q, vals_q):   # (P, n_p, k) each
+                def one(cols_pq, vals_pq, a_p):
+                    return ell_scatter_add(m_q, cols_pq, vals_pq, a_p)
+                return jax.vmap(one)(cols_q, vals_q, am).sum(axis=0)
+            w_blocks = jax.vmap(col_block, in_axes=(1, 1))(
+                data.cols, data.vals) / (lam * n)
+        else:
+            w_blocks = jnp.einsum("pn,pqnm->qm", am,
+                                  data.x_blocks) / (lam * n)
         return alpha, w_blocks
 
     alpha_init = (jnp.zeros((Pn, data.n_p)) if alpha0 is None
@@ -157,21 +180,86 @@ def make_d3ca_step(loss: Loss, mesh, cfg: D3CAConfig, *, n: int, n_p: int,
     return jax.jit(step, static_argnums=())
 
 
-def d3ca_shard_map_program(loss: Loss, sdata: ShardMapData, cfg: D3CAConfig,
+def make_d3ca_step_sparse(loss: Loss, mesh, cfg: D3CAConfig, *, n: int,
+                          n_p: int, m_q: int, data_axis: str = "data",
+                          model_axis: str = "model",
+                          local_backend: str = "ref"):
+    """Sparse-cell variant of :func:`make_d3ca_step`.
+
+    The data block per device is the padded-ELL pair cols/vals
+    (n_p, k) with block-local column ids; the primal-dual map of step 9
+    becomes a scatter-add into the local w block before the psum.
+    """
+    from .util import as_axes, axes_index, axes_size
+    lam = cfg.lam
+    daxes = as_axes(data_axis)
+    Qn = axes_size(mesh, model_axis)
+    Pn = axes_size(mesh, data_axis)
+    steps = cfg.local_steps or n_p
+
+    def step(t, key0, cols, vals, y, mask, alpha, w):
+        beta = lam / t
+        key_t = jax.random.fold_in(key0, t)
+
+        def cell(cols_b, vals_b, y_b, mask_b, a_b, w_b):
+            y_b = pvary(y_b, (model_axis,))
+            mask_b = pvary(mask_b, (model_axis,))
+            a_b = pvary(a_b, (model_axis,))
+            w_b = pvary(w_b, daxes)
+            p = axes_index(data_axis)
+            key_p = jax.random.fold_in(key_t, p)
+            dalpha = local_sdca_sparse(
+                loss, cols_b, vals_b, y_b, mask_b, a_b, w_b,
+                lam=lam, n=n, Q=Qn, steps=steps, key=key_p,
+                step_mode=cfg.step_mode, beta=beta, backend=local_backend)
+            # step 6: average the dual deltas of the Q feature blocks
+            a_new = a_b + jax.lax.pmean(dalpha, model_axis) / Pn
+            # step 9: primal-dual map -- scatter-add the cell's
+            # contribution, then reduce over observation partitions
+            contrib = ell_scatter_add(m_q, cols_b, vals_b, a_new * mask_b)
+            w_new = jax.lax.psum(contrib, data_axis) / (lam * n)
+            return a_new, w_new
+
+        return shard_map(
+            cell, mesh,
+            in_specs=(P(data_axis, model_axis), P(data_axis, model_axis),
+                      P(data_axis), P(data_axis), P(data_axis),
+                      P(model_axis)),
+            out_specs=(P(data_axis), P(model_axis)),
+        )(cols, vals, y, mask, alpha, w)
+
+    return jax.jit(step, static_argnums=())
+
+
+def d3ca_shard_map_program(loss: Loss, sdata, cfg: D3CAConfig,
                            *, local_backend: str = "ref",
                            w0=None, alpha0=None) -> EngineProgram:
-    """shard_map engine.  State: (alpha (n_pad,), w (m_pad,)) sharded."""
-    step = make_d3ca_step(loss, sdata.mesh, cfg, n=sdata.n, n_p=sdata.n_p,
-                          data_axis=sdata.data_axis,
-                          model_axis=sdata.model_axis,
-                          local_backend=local_backend)
+    """shard_map engine.  State: (alpha (n_pad,), w (m_pad,)) sharded.
+    ``sdata`` is a :class:`ShardMapData` or :class:`SparseShardMapData`."""
     key0 = jax.random.PRNGKey(cfg.seed)
+    if isinstance(sdata, SparseShardMapData):
+        step = make_d3ca_step_sparse(
+            loss, sdata.mesh, cfg, n=sdata.n, n_p=sdata.n_p, m_q=sdata.m_q,
+            data_axis=sdata.data_axis, model_axis=sdata.model_axis,
+            local_backend=local_backend)
+
+        def run(t, s):
+            return step(t, key0, sdata.cols, sdata.vals, sdata.y,
+                        sdata.mask, *s)
+    else:
+        step = make_d3ca_step(loss, sdata.mesh, cfg, n=sdata.n,
+                              n_p=sdata.n_p, data_axis=sdata.data_axis,
+                              model_axis=sdata.model_axis,
+                              local_backend=local_backend)
+
+        def run(t, s):
+            return step(t, key0, sdata.x, sdata.y, sdata.mask, *s)
     alpha_init = (sdata.zeros_data() if alpha0 is None
                   else sdata.pad_alpha(alpha0))
     w_init = sdata.zeros_model() if w0 is None else sdata.pad_w(w0)
     return EngineProgram(
         state=(alpha_init, w_init),
-        step=lambda t, s: step(t, key0, sdata.x, sdata.y, sdata.mask, *s),
+        step=run,
         w_of=lambda s: s[1][: sdata.m],
         alpha_of=lambda s: s[0][: sdata.n])
 

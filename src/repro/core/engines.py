@@ -131,6 +131,111 @@ class ShardMapData:
         return self.put(jnp.asarray(ap), P(self.data_axis))
 
 
+@dataclasses.dataclass(frozen=True)
+class SparseShardMapData:
+    """Padded-ELL global arrays placed on a (data=P, model=Q) mesh.
+
+    The (n_pad, Q*k) ``cols``/``vals`` arrays are sharded
+    (data, model): device (p, q) holds exactly the (n_p, k) ELL cell of
+    block (p, q), with block-LOCAL column ids in [0, m_q).  Device
+    memory for the data block is O(n_p * k) ~ O(nnz), not O(n_p * m_q).
+    """
+
+    mesh: Any
+    cols: jnp.ndarray       # (n_pad, Q*k) int32  sharded (data, model)
+    vals: jnp.ndarray       # (n_pad, Q*k) f32    sharded (data, model)
+    y: jnp.ndarray          # (n_pad,)            sharded (data,)
+    mask: jnp.ndarray       # (n_pad,)            sharded (data,)
+    n: int                  # true observation count
+    m: int                  # true feature count
+    m_q: int                # padded feature-block width (m_pad = Q * m_q)
+    P: int
+    Q: int
+    data_axis: Any = "data"
+    model_axis: str = "model"
+
+    @property
+    def n_pad(self) -> int:
+        return self.cols.shape[0]
+
+    @property
+    def m_pad(self) -> int:
+        return self.Q * self.m_q
+
+    @property
+    def n_p(self) -> int:
+        return self.cols.shape[0] // self.P
+
+    @property
+    def k(self) -> int:
+        return self.cols.shape[1] // self.Q
+
+    def put(self, arr, spec):
+        return jax.device_put(arr, NamedSharding(self.mesh, spec))
+
+    def zeros_data(self):
+        return self.put(jnp.zeros((self.n_pad,)), P(self.data_axis))
+
+    def zeros_model(self):
+        return self.put(jnp.zeros((self.m_pad,)), P(self.model_axis))
+
+    def pad_w(self, w):
+        wp = np.zeros((self.m_pad,), np.float32)
+        wp[: self.m] = np.asarray(w, np.float32)
+        return self.put(jnp.asarray(wp), P(self.model_axis))
+
+    def pad_alpha(self, alpha):
+        ap = np.zeros((self.n_pad,), np.float32)
+        ap[: self.n] = np.asarray(alpha, np.float32)
+        return self.put(jnp.asarray(ap), P(self.data_axis))
+
+
+def prepare_shard_map_sparse(mesh, X, y, *, data_axis="data",
+                             model_axis="model",
+                             m_multiple: int | None = None,
+                             k_multiple: int = 8) -> SparseShardMapData:
+    """Sparse analogue of :func:`prepare_shard_map`.
+
+    ``X`` is a :class:`~repro.data.sparse.CSRMatrix` (or a dense array,
+    converted).  Padding matches ``partition_sparse`` bit-for-bit, so a
+    shard_map cell sees the same ELL block as the simulated grid's cell.
+    """
+    from repro.data.sparse import CSRMatrix, csr_from_dense
+    from .partition import _ceil_to as ceil_to, _ell_blocks
+    if not isinstance(X, CSRMatrix):
+        X = csr_from_dense(np.asarray(X))
+    Pn = axes_size(mesh, data_axis)
+    Qn = axes_size(mesh, model_axis)
+    if m_multiple is not None and m_multiple % Qn:
+        raise ValueError(f"m_multiple={m_multiple} not a multiple of Q={Qn}")
+    n, m = X.shape
+    m_pad = ceil_to(m, m_multiple or Qn)
+    cols, vals, y_blocks, mask_blocks = _ell_blocks(
+        X, y, Pn, Qn, m_pad, k_multiple)
+    _, _, n_p, k = cols.shape
+    # (P, Q, n_p, k) -> (P*n_p, Q*k): block (p, q) lands at the
+    # [p*n_p:(p+1)*n_p, q*k:(q+1)*k] tile, which the (data, model)
+    # sharding assigns to device (p, q)
+    cols_g = cols.transpose(0, 2, 1, 3).reshape(Pn * n_p, Qn * k)
+    vals_g = vals.transpose(0, 2, 1, 3).reshape(Pn * n_p, Qn * k)
+    daxes = as_axes(data_axis)
+    put = _putter(mesh)
+    return SparseShardMapData(
+        mesh=mesh,
+        cols=put(jnp.asarray(cols_g), P(daxes, model_axis)),
+        vals=put(jnp.asarray(vals_g), P(daxes, model_axis)),
+        y=put(jnp.asarray(y_blocks.reshape(-1)), P(daxes)),
+        mask=put(jnp.asarray(mask_blocks.reshape(-1)), P(daxes)),
+        n=n, m=m, m_q=m_pad // Qn, P=Pn, Q=Qn,
+        data_axis=data_axis, model_axis=model_axis)
+
+
+def _putter(mesh):
+    def put(a, spec):
+        return jax.device_put(a, NamedSharding(mesh, spec))
+    return put
+
+
 def prepare_shard_map(mesh, X, y, *, data_axis="data", model_axis="model",
                       m_multiple: int | None = None) -> ShardMapData:
     """Pad (X, y) so the mesh divides both axes and place the shards.
@@ -152,7 +257,7 @@ def prepare_shard_map(mesh, X, y, *, data_axis="data", model_axis="model",
     maskp = np.zeros((n_pad,), np.float32)
     maskp[:n] = 1.0
     daxes = as_axes(data_axis)
-    put = lambda a, spec: jax.device_put(a, NamedSharding(mesh, spec))
+    put = _putter(mesh)
     return ShardMapData(
         mesh=mesh,
         x=put(jnp.asarray(Xp), P(daxes, model_axis)),

@@ -172,3 +172,105 @@ def local_svrg(loss: Loss, x_sub, y, mask, z_anchor, w_anchor_sub, mu_sub,
 
     w_fin, _ = jax.lax.scan(body, w_anchor_sub, idx)
     return w_fin
+
+
+# ----------------------------------------------------------------------------
+# Sparse-cell variants: the block is a padded-ELL pair (cols, vals) of shape
+# (n_p, k) with block-local column ids; k ~ max row nnz, so a cell's memory
+# and per-step work scale with the nonzero count instead of m_q.  Padding
+# slots carry (col=0, val=0): gathers read w[0] harmlessly and scatters add
+# zero, so they are inert.  Same PRNG draw as the dense variants, so sparse
+# and dense runs agree to float tolerance on identical data.
+# ----------------------------------------------------------------------------
+
+def local_sdca_sparse(loss: Loss, cols, vals, y, mask, alpha0, w0, *, lam, n,
+                      Q, steps, key, step_mode: str = "exact", beta=None,
+                      backend: str = "ref"):
+    """Sparse-cell version of :func:`local_sdca`.
+
+    Args:
+      cols, vals: (n_p, k) padded-ELL local block (block-local columns).
+      w0: (m_q,) dense local view of the shared primal block.
+      Everything else as in :func:`local_sdca`.
+
+    Returns:
+      delta_alpha: (n_p,) accumulated dual change of this cell.
+    """
+    n_p = cols.shape[0]
+    idx = jax.random.randint(key, (steps,), 0, n_p)
+    use_beta = step_mode == "beta"
+
+    if backend == "pallas":
+        _check_pallas_loss(loss)
+        from repro.kernels.sdca import sdca_epoch_sparse_pallas
+        dalpha, _ = sdca_epoch_sparse_pallas(
+            cols, vals, y, mask, alpha0, w0, idx, lam=lam, n=n, Q=Q,
+            loss=loss.name, beta=(beta if use_beta else None),
+            interpret=_interpret())
+        return dalpha
+    if backend != "ref":
+        raise ValueError(f"unknown local backend {backend!r}")
+
+    x_sq = jnp.sum(vals * vals, axis=1)  # (n_p,)
+
+    def body(carry, i):
+        w, dalpha = carry
+        ci, vi = cols[i], vals[i]
+        zloc = jnp.sum(vi * w[ci])        # local contribution to x_i . w
+        a_i = alpha0[i] + dalpha[i]
+        d = loss.sdca_delta(a_i, x_sq[i], zloc, y[i], lam, n, Q,
+                            beta=(beta if use_beta else None))
+        d = d * mask[i]                   # padded rows never move
+        w = w.at[ci].add((d / (lam * n)) * vi)
+        dalpha = dalpha.at[i].add(d)
+        return (w, dalpha), None
+
+    (w_fin, dalpha), _ = jax.lax.scan(body, (w0, jnp.zeros_like(alpha0)), idx)
+    del w_fin  # D3CA recomputes w from the primal-dual map (step 9)
+    return dalpha
+
+
+def local_svrg_sparse(loss: Loss, cols, vals, y, mask, z_anchor,
+                      w_anchor_sub, mu_sub, *, lam, L, eta, key, lo=None,
+                      backend: str = "ref"):
+    """Sparse-cell version of :func:`local_svrg`.
+
+    The cell always receives the FULL feature block as (n_p, k) ELL; the
+    assigned sub-block window ``[lo, lo + m_sub)`` (``lo`` may be a
+    traced scalar -- it follows the per-iteration permutation) is
+    selected by masking the in-window entries of each sampled row.
+    ``lo=None`` means the window is the whole block (RADiSA-avg).
+
+    Returns:
+      w_sub: (m_sub,) updated sub-block iterate.
+    """
+    n_p = cols.shape[0]
+    m_sub = w_anchor_sub.shape[0]
+    idx = jax.random.randint(key, (L,), 0, n_p)
+    lo = 0 if lo is None else lo
+
+    if backend == "pallas":
+        _check_pallas_loss(loss)
+        from repro.kernels.svrg import svrg_inner_sparse_pallas
+        return svrg_inner_sparse_pallas(
+            cols, vals, y, mask, z_anchor, w_anchor_sub, mu_sub, idx,
+            lam=lam, eta=eta, lo=lo, loss=loss.name, interpret=_interpret())
+    if backend != "ref":
+        raise ValueError(f"unknown local backend {backend!r}")
+
+    def body(w, j):
+        ci, vi = cols[j], vals[j]
+        rel = ci - lo
+        sel = ((rel >= 0) & (rel < m_sub)).astype(vi.dtype)
+        relc = jnp.clip(rel, 0, m_sub - 1)
+        diff = w - w_anchor_sub
+        corr = jnp.sum(vi * sel * diff[relc])   # x_j[window] @ (w - wa)
+        z = z_anchor[j] + corr
+        gdiff = (loss.grad(z, y[j]) - loss.grad(z_anchor[j], y[j])) * mask[j]
+        g_sparse = jnp.zeros((m_sub,), vi.dtype).at[relc].add(
+            gdiff * vi * sel)
+        g = g_sparse + mu_sub + lam * diff
+        return w - eta * g, None
+
+    w_fin, _ = jax.lax.scan(body, w_anchor_sub, idx)
+    return w_fin

@@ -194,7 +194,7 @@ squared = Loss("squared", _sq_value, _sq_grad, _sq_conj, _sq_bounds,
 logistic = Loss("logistic", _log_value, _log_grad, _log_conj, _log_bounds,
                 _log_sdca_delta)
 
-LOSSES = {l.name: l for l in (hinge, squared, logistic)}
+LOSSES = {fn.name: fn for fn in (hinge, squared, logistic)}
 
 
 def get_loss(name: str) -> Loss:

@@ -100,6 +100,167 @@ def partition(X, y, P: int, Q: int, *,
     return DoublyPartitioned(x_blocks, y_blocks, mask_blocks, n, m, P, Q)
 
 
+# ---------------------------------------------------------------------------
+# sparse (padded ELL) cell format
+# ---------------------------------------------------------------------------
+
+def ell_gather(w, cols, vals):
+    """Row inner products of an ELL block with a dense vector.
+
+    ``w (m_q,)``, ``cols``/``vals`` ``(..., n_p, k)`` -> ``(..., n_p)``:
+    each row's x_i . w as a gather of w at the row's column ids.
+    Padding slots (col=0, val=0) read w[0] and contribute nothing.
+    The single definition of the gather every sparse engine/cell uses.
+    """
+    return jnp.sum(vals * w[cols], axis=-1)
+
+
+def ell_scatter_add(m_q: int, cols, vals, coef):
+    """Column accumulation of an ELL cell: sum_i coef[i] * x_i -> (m_q,).
+
+    ``cols``/``vals`` ``(n_p, k)``, ``coef (n_p,)``.  Scatter-ADD, so the
+    duplicate index-0 padding slots (val=0) are inert.  The single
+    definition of the scatter every sparse engine/cell uses (vmap it for
+    block grids).
+    """
+    return jnp.zeros((m_q,), vals.dtype).at[cols].add(vals * coef[:, None])
+
+
+def _ell_blocks(csr, y, P: int, Q: int, m_pad: int, k_multiple: int):
+    """Host-side: bucket CSR rows into the P x Q grid as padded ELL cells.
+
+    For every (p, q) cell each local row stores at most ``k`` entries as
+    (block-local column id, value); ``k`` is the max per-cell-row nonzero
+    count over the WHOLE grid, rounded up to ``k_multiple`` (lane
+    alignment for the TPU kernels).  Padding slots use (col=0, val=0.0):
+    every consumer either gathers (x0 reads are harmless) or scatter-ADDs
+    (zero increments are inert), so the duplicate index-0 slots never
+    change a result.
+
+    Returns numpy ``cols (P, Q, n_p, k) int32``, ``vals (..., k) f32``,
+    ``y_blocks (P, n_p)``, ``mask (P, n_p)``.
+    """
+    import numpy as onp
+    n = csr.shape[0]
+    n_pad = _ceil_to(n, P)
+    n_p, m_q = n_pad // P, m_pad // Q
+
+    # per (row, q) nonzero count -> global k
+    q_of = onp.minimum(csr.indices // m_q, Q - 1)
+    row = csr.row_ids()
+    counts = onp.zeros((n, Q), dtype=onp.int64)
+    onp.add.at(counts, (row, q_of), 1)
+    k_max = int(counts.max()) if counts.size else 0
+    k = max(_ceil_to(max(k_max, 1), k_multiple), k_multiple)
+
+    cols = onp.zeros((P, Q, n_p, k), dtype=onp.int32)
+    vals = onp.zeros((P, Q, n_p, k), dtype=onp.float32)
+    # ELL slot of each entry = its rank within its (row, q) group (stable
+    # sort keeps the CSR entry order inside every group)
+    pair = row * Q + q_of
+    perm = onp.argsort(pair, kind="stable")
+    sp = pair[perm]
+    is_start = onp.r_[True, sp[1:] != sp[:-1]] if sp.size else \
+        onp.zeros((0,), dtype=bool)
+    run_id = onp.cumsum(is_start) - 1
+    run_starts = onp.flatnonzero(is_start)
+    ranks = onp.empty((csr.nnz,), dtype=onp.int64)
+    ranks[perm] = onp.arange(csr.nnz, dtype=onp.int64) - run_starts[run_id]
+    p_of = row // n_p
+    r_loc = row % n_p
+    c_loc = csr.indices - q_of * m_q
+    cols[p_of, q_of, r_loc, ranks] = c_loc.astype(onp.int32)
+    vals[p_of, q_of, r_loc, ranks] = csr.data.astype(onp.float32)
+
+    yp = onp.zeros((n_pad,), dtype=onp.float32)
+    yp[:n] = onp.asarray(y, dtype=onp.float32)
+    maskp = onp.zeros((n_pad,), dtype=onp.float32)
+    maskp[:n] = 1.0
+    return cols, vals, yp.reshape(P, n_p), maskp.reshape(P, n_p)
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseDoublyPartitioned:
+    """Block-major padded-ELL view of a sparse training set.
+
+    The per-(p, q) cell is ``cols[p, q] (n_p, k) int32`` (block-local
+    column ids in [0, m_q)) + ``vals[p, q] (n_p, k) f32``; peak block
+    memory scales with the nonzero count (k ~= max cell-row nnz), not
+    with m_q -- that is the whole point.
+    """
+
+    cols: jnp.ndarray       # (P, Q, n_p, k) int32, block-local columns
+    vals: jnp.ndarray       # (P, Q, n_p, k) f32
+    y_blocks: jnp.ndarray   # (P, n_p)
+    mask: jnp.ndarray       # (P, n_p)   1.0 = real row, 0.0 = padding
+    n: int                  # true number of observations
+    m: int                  # true number of features
+    m_q: int                # padded feature-block width
+    P: int
+    Q: int
+
+    @property
+    def n_p(self) -> int:
+        return self.cols.shape[2]
+
+    @property
+    def k(self) -> int:
+        return self.cols.shape[3]
+
+    # ---- global <-> block conversions (same padding rule as dense) --------
+    def w_to_blocks(self, w):
+        m_pad = self.Q * self.m_q
+        wp = jnp.zeros((m_pad,), w.dtype).at[: self.m].set(w)
+        return wp.reshape(self.Q, self.m_q)
+
+    def w_from_blocks(self, w_blocks):
+        return w_blocks.reshape(-1)[: self.m]
+
+    def alpha_to_blocks(self, alpha):
+        n_pad = self.P * self.n_p
+        ap = jnp.zeros((n_pad,), alpha.dtype).at[: self.n].set(alpha)
+        return ap.reshape(self.P, self.n_p)
+
+    def alpha_from_blocks(self, alpha_blocks):
+        return alpha_blocks.reshape(-1)[: self.n]
+
+    def dense(self):
+        """Reassemble the dense (n, m) matrix and labels (tests only)."""
+        Pn, Qn, n_p, k = self.cols.shape
+        X = np.zeros((Pn * n_p, Qn * self.m_q), dtype=np.float32)
+        cols = np.asarray(self.cols)
+        vals = np.asarray(self.vals)
+        p, q, r, s = np.meshgrid(np.arange(Pn), np.arange(Qn),
+                                 np.arange(n_p), np.arange(k),
+                                 indexing="ij")
+        np.add.at(X, (p * n_p + r, q * self.m_q + cols), vals)
+        y = np.asarray(self.y_blocks).reshape(-1)
+        return X[: self.n, : self.m], y[: self.n]
+
+
+def partition_sparse(X, y, P: int, Q: int, *, m_multiple: int | None = None,
+                     k_multiple: int = 8) -> SparseDoublyPartitioned:
+    """Split (X, y) into the sparse P x Q padded-ELL block grid.
+
+    ``X`` may be a :class:`~repro.data.sparse.CSRMatrix` (preferred --
+    never densifies) or a dense array (converted row-wise).  The padding
+    rule matches ``partition(..., m_multiple=...)`` exactly, so sparse
+    and dense runs see the same logical blocks.
+    """
+    from repro.data.sparse import CSRMatrix, csr_from_dense
+    if not isinstance(X, CSRMatrix):
+        X = csr_from_dense(np.asarray(X))
+    if m_multiple is not None and m_multiple % Q:
+        raise ValueError(f"m_multiple={m_multiple} not a multiple of Q={Q}")
+    n, m = X.shape
+    m_pad = _ceil_to(m, m_multiple or Q)
+    cols, vals, y_blocks, mask = _ell_blocks(X, y, P, Q, m_pad, k_multiple)
+    return SparseDoublyPartitioned(
+        cols=jnp.asarray(cols), vals=jnp.asarray(vals),
+        y_blocks=jnp.asarray(y_blocks), mask=jnp.asarray(mask),
+        n=n, m=m, m_q=m_pad // Q, P=P, Q=Q)
+
+
 def subblock_slices(m_q: int, P: int):
     """RADiSA pre-splits every feature block [., q] into P sub-blocks.
 

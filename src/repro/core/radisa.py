@@ -33,10 +33,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from .engines import EngineProgram, ShardMapData, drive_with_callback
-from .local import local_svrg
+from .engines import (EngineProgram, SparseShardMapData,
+                      drive_with_callback)
+from .local import local_svrg, local_svrg_sparse
 from .losses import Loss, get_loss
-from .partition import DoublyPartitioned, subblock_slices
+from .partition import (DoublyPartitioned, SparseDoublyPartitioned,
+                        ell_gather, ell_scatter_add, subblock_slices)
 from .util import pvary, shard_map
 
 
@@ -63,6 +65,27 @@ def _anchor_quantities(loss: Loss, data: DoublyPartitioned, w_blocks, lam):
     return z, mu
 
 
+def _anchor_quantities_sparse(loss: Loss, data: SparseDoublyPartitioned,
+                              w_blocks, lam):
+    """Sparse-cell anchor pass: the row inner products become per-row
+    gathers of w and the column gradient a scatter-add over rows."""
+    m_q = data.m_q
+
+    def z_block(cols_q, vals_q, w_q):    # (P, n_p, k), (P, n_p, k), (m_q,)
+        return ell_gather(w_q, cols_q, vals_q)            # (P, n_p)
+    z = jax.vmap(z_block, in_axes=(1, 1, 0))(
+        data.cols, data.vals, w_blocks).sum(axis=0)       # (P, n_p)
+    gz = loss.grad(z, data.y_blocks) * data.mask          # (P, n_p)
+
+    def mu_block(cols_q, vals_q):
+        def one(cols_pq, vals_pq, g_p):
+            return ell_scatter_add(m_q, cols_pq, vals_pq, g_p)
+        return jax.vmap(one)(cols_q, vals_q, gz).sum(axis=0)
+    mu = jax.vmap(mu_block, in_axes=(1, 1))(data.cols, data.vals) / data.n \
+        + lam * w_blocks
+    return z, mu
+
+
 # ----------------------------------------------------------------------------
 # simulated grid engine
 # ----------------------------------------------------------------------------
@@ -73,18 +96,25 @@ def radisa_simulated_program(loss: Loss, data: DoublyPartitioned,
                              w0=None) -> EngineProgram:
     """vmap-over-cells engine.  State: w_blocks (Q, m_q).
 
-    Requires P | m_q (pre-pad with ``partition(..., m_multiple=P*Q)``)."""
+    Requires P | m_q (pre-pad with ``partition(..., m_multiple=P*Q)``).
+    ``data`` may be dense (:class:`DoublyPartitioned`) or sparse
+    (:class:`SparseDoublyPartitioned`, padded-ELL cells)."""
+    sparse = isinstance(data, SparseDoublyPartitioned)
     Pn, Qn = data.P, data.Q
     lam = cfg.lam
     L = cfg.L or data.n_p
     m_sub = subblock_slices(data.m_q, Pn)
     key0 = jax.random.PRNGKey(cfg.seed)
+    local = local_svrg_sparse if sparse else local_svrg
 
     @jax.jit
     def outer(t, w_blocks):
         eta = cfg.eta(t)
         key_t = jax.random.fold_in(key0, t)
-        z, mu = _anchor_quantities(loss, data, w_blocks, lam)
+        if sparse:
+            z, mu = _anchor_quantities_sparse(loss, data, w_blocks, lam)
+        else:
+            z, mu = _anchor_quantities(loss, data, w_blocks, lam)
         # step 5: non-overlapping random sub-block exchange, shared perm
         perm = jax.random.permutation(jax.random.fold_in(key_t, 0), Pn)
         key_cells = jax.random.fold_in(key_t, 1)
@@ -98,10 +128,12 @@ def radisa_simulated_program(loss: Loss, data: DoublyPartitioned,
             lo_arg = lo
             if cfg.variant == "avg":
                 lo_arg, w_anchor, mu_sub = None, w_blocks[q], mu[q]
-            w_new = local_svrg(loss, data.x_blocks[p, q], data.y_blocks[p],
-                               data.mask[p], z[p], w_anchor, mu_sub,
-                               lam=lam, L=L, eta=eta, key=key_pq, lo=lo_arg,
-                               backend=local_backend)
+            x_cell = ((data.cols[p, q], data.vals[p, q]) if sparse
+                      else (data.x_blocks[p, q],))
+            w_new = local(loss, *x_cell, data.y_blocks[p],
+                          data.mask[p], z[p], w_anchor, mu_sub,
+                          lam=lam, L=L, eta=eta, key=key_pq, lo=lo_arg,
+                          backend=local_backend)
             return w_new
 
         w_cells = jax.vmap(lambda p: jax.vmap(lambda q: cell(p, q))(
@@ -236,20 +268,113 @@ def make_radisa_step(loss: Loss, mesh, cfg: RADiSAConfig, *, n: int, n_p: int,
     return jax.jit(step)
 
 
-def radisa_shard_map_program(loss: Loss, sdata: ShardMapData,
-                             cfg: RADiSAConfig, *,
+def make_radisa_step_sparse(loss: Loss, mesh, cfg: RADiSAConfig, *, n: int,
+                            n_p: int, m_q: int, data_axis: str = "data",
+                            model_axis: str = "model",
+                            local_backend: str = "ref"):
+    """Sparse-cell variant of :func:`make_radisa_step`.
+
+    The device-local block is the padded-ELL pair cols/vals (n_p, k)
+    with block-local column ids; the anchor pass becomes a gather-matvec
+    (rows) and a scatter-add (columns), and the sub-block window is
+    selected inside the local solver by masking entry columns (the ELL
+    row cannot be column-sliced).
+    """
+    from .util import as_axes, axes_index, axes_size
+    lam = cfg.lam
+    daxes = as_axes(data_axis)
+    Pn, Qn = axes_size(mesh, data_axis), axes_size(mesh, model_axis)
+    L = cfg.L or n_p
+    avg = cfg.variant == "avg"
+    if not avg and m_q % Pn:
+        raise ValueError(
+            f"RADiSA pre-splits each feature block into P={Pn} sub-blocks, "
+            f"but P does not divide m_q={m_q}; truncating would silently "
+            f"drop the trailing {m_q % Pn} feature columns of every block. "
+            "Pad the feature dimension to a multiple of P*Q first (the "
+            "unified Solver API does this), or use variant='avg'.")
+    m_sub = m_q // Pn
+
+    def step(t, key0, cols, vals, y, mask, w):
+        eta = cfg.eta(t)
+        key_t = jax.random.fold_in(key0, t)
+
+        def cell(cols_b, vals_b, y_b, mask_b, w_b):
+            y_b = pvary(y_b, (model_axis,))
+            mask_b = pvary(mask_b, (model_axis,))
+            w_b = pvary(w_b, daxes)
+            p = axes_index(data_axis)
+            q = axes_index(model_axis)
+            # (1) anchor inner products: per-row gather of the local w
+            # block, reduced across feature blocks
+            z = jax.lax.psum(ell_gather(w_b, cols_b, vals_b), model_axis)
+            # (2) full anchor gradient: scatter-add over the cell's
+            # entries, reduced across observation partitions
+            gz = loss.grad(z, y_b) * mask_b
+            mu = jax.lax.psum(ell_scatter_add(m_q, cols_b, vals_b, gz),
+                              data_axis) / n + lam * w_b
+            # (3) sub-block assignment (shared permutation) + local SVRG
+            perm = jax.random.permutation(jax.random.fold_in(key_t, 0), Pn)
+            key_pq = jax.random.fold_in(jax.random.fold_in(key_t, 1),
+                                        p * Qn + q)
+            s = perm[p]
+            lo = s * m_sub
+            if avg:
+                lo_arg, w_anchor, mu_sub = None, w_b, mu
+            else:
+                lo_arg = lo
+                w_anchor = jax.lax.dynamic_slice(w_b, (lo,), (m_sub,))
+                mu_sub = jax.lax.dynamic_slice(mu, (lo,), (m_sub,))
+            w_new = local_svrg_sparse(
+                loss, cols_b, vals_b, y_b, mask_b, z, w_anchor, mu_sub,
+                lam=lam, L=L, eta=eta, key=key_pq, lo=lo_arg,
+                backend=local_backend)
+            # (4) recombine
+            if avg:
+                return jax.lax.pmean(w_new, data_axis)
+            delta = jnp.zeros_like(w_b)
+            delta = jax.lax.dynamic_update_slice(delta, w_new - w_anchor,
+                                                 (lo,))
+            return w_b + jax.lax.psum(delta, data_axis)
+
+        return shard_map(
+            cell, mesh,
+            in_specs=(P(data_axis, model_axis), P(data_axis, model_axis),
+                      P(data_axis), P(data_axis), P(model_axis)),
+            out_specs=P(model_axis),
+        )(cols, vals, y, mask, w)
+
+    return jax.jit(step)
+
+
+def radisa_shard_map_program(loss: Loss, sdata, cfg: RADiSAConfig, *,
                              local_backend: str = "ref",
                              w0=None) -> EngineProgram:
-    """shard_map engine.  State: w (m_pad,) sharded over the model axis."""
-    step = make_radisa_step(loss, sdata.mesh, cfg, n=sdata.n, n_p=sdata.n_p,
-                            m_q=sdata.m_q, data_axis=sdata.data_axis,
-                            model_axis=sdata.model_axis,
-                            local_backend=local_backend)
+    """shard_map engine.  State: w (m_pad,) sharded over the model axis.
+    ``sdata`` is a :class:`ShardMapData` or :class:`SparseShardMapData`."""
     key0 = jax.random.PRNGKey(cfg.seed)
+    if isinstance(sdata, SparseShardMapData):
+        step = make_radisa_step_sparse(
+            loss, sdata.mesh, cfg, n=sdata.n, n_p=sdata.n_p, m_q=sdata.m_q,
+            data_axis=sdata.data_axis, model_axis=sdata.model_axis,
+            local_backend=local_backend)
+
+        def run(t, w):
+            return step(t, key0, sdata.cols, sdata.vals, sdata.y,
+                        sdata.mask, w)
+    else:
+        step = make_radisa_step(loss, sdata.mesh, cfg, n=sdata.n,
+                                n_p=sdata.n_p, m_q=sdata.m_q,
+                                data_axis=sdata.data_axis,
+                                model_axis=sdata.model_axis,
+                                local_backend=local_backend)
+
+        def run(t, w):
+            return step(t, key0, sdata.x, sdata.y, sdata.mask, w)
     w_init = sdata.zeros_model() if w0 is None else sdata.pad_w(w0)
     return EngineProgram(
         state=w_init,
-        step=lambda t, w: step(t, key0, sdata.x, sdata.y, sdata.mask, w),
+        step=run,
         w_of=lambda w: w[: sdata.m])
 
 

@@ -7,12 +7,16 @@ This module provides that story once:
 
   * a :class:`Solver` protocol with a registry --
     ``get_solver("d3ca" | "radisa" | "admm")`` returns the solver class;
-  * two orthogonal knobs threaded end-to-end:
+  * three orthogonal knobs threaded end-to-end:
       - ``engine="simulated" | "shard_map"``  -- vmap grid on one device
         vs one block per device on a (data=P, model=Q) mesh;
       - ``local_backend="ref" | "pallas"``    -- pure-jnp cell-local
         solver vs the Pallas TPU kernels (interpret mode on CPU), used
         inside the vmap grid and inside each shard_map cell alike;
+      - ``block_format="dense" | "sparse"``   -- per-cell (n_p, m_q)
+        dense tiles vs padded-ELL sparse cells whose memory scales with
+        the nonzero count (news20-scale instances; accepts a
+        :class:`~repro.data.sparse.CSRMatrix` without ever densifying);
   * a shared outer driver: objective / duality-gap history, early
     stopping, warm starts from a previous ``w`` / ``alpha``.
 
@@ -20,7 +24,8 @@ Example::
 
     from repro.core.solver import get_solver
 
-    solver = get_solver("d3ca")(engine="shard_map", local_backend="pallas")
+    solver = get_solver("d3ca")(engine="shard_map", local_backend="pallas",
+                                block_format="sparse")
     res = solver.solve("hinge", X, y, P=4, Q=2,
                        cfg=D3CAConfig(lam=1e-2, outer_iters=20),
                        f_star=f_star, tol=1e-2)
@@ -38,9 +43,10 @@ from .admm import (ADMMConfig, admm_shard_map_program, admm_simulated_program,
                    make_admm_step)
 from .d3ca import (D3CAConfig, d3ca_shard_map_program, d3ca_simulated_program,
                    make_d3ca_step)
-from .engines import EngineProgram, drive, prepare_shard_map
+from .engines import (EngineProgram, drive, prepare_shard_map,
+                      prepare_shard_map_sparse)
 from .losses import get_loss
-from .partition import partition
+from .partition import partition, partition_sparse
 from .radisa import (RADiSAConfig, make_radisa_step,
                      radisa_shard_map_program, radisa_simulated_program)
 from .reference import rel_opt
@@ -48,6 +54,7 @@ from .util import axes_size
 
 ENGINES = ("simulated", "shard_map")
 LOCAL_BACKENDS = ("ref", "pallas")
+BLOCK_FORMATS = ("dense", "sparse")
 
 
 @dataclasses.dataclass
@@ -63,6 +70,7 @@ class SolveResult:
     solver: str
     engine: str
     local_backend: str
+    block_format: str = "dense"
 
 
 def _unpack_warm_start(warm_start):
@@ -93,14 +101,19 @@ class Solver:
     #: has no kernel to dispatch to.
     uses_local_backend: bool = True
 
-    def __init__(self, engine: str = "simulated", local_backend: str = "ref"):
+    def __init__(self, engine: str = "simulated", local_backend: str = "ref",
+                 block_format: str = "dense"):
         if engine not in ENGINES:
             raise ValueError(f"engine={engine!r}; expected one of {ENGINES}")
         if local_backend not in LOCAL_BACKENDS:
             raise ValueError(f"local_backend={local_backend!r}; expected one "
                              f"of {LOCAL_BACKENDS}")
+        if block_format not in BLOCK_FORMATS:
+            raise ValueError(f"block_format={block_format!r}; expected one "
+                             f"of {BLOCK_FORMATS}")
         self.engine = engine
         self.local_backend = local_backend
+        self.block_format = block_format
 
     # ---- subclass hooks ---------------------------------------------------
     def _simulated_program(self, loss, data, cfg, w0, alpha0) -> EngineProgram:
@@ -116,16 +129,26 @@ class Solver:
         """Bind the solver to data under the configured engine/backend.
 
         Pads the feature dimension to a multiple of P*Q (identically for
-        both engines) so RADiSA's P sub-blocks always divide m_q and the
-        engines see bit-identical blocks.
+        both engines and both block formats) so RADiSA's P sub-blocks
+        always divide m_q and the engines see bit-identical blocks.
+        ``block_format="sparse"`` accepts a
+        :class:`~repro.data.sparse.CSRMatrix` ``X`` and never
+        materializes the dense matrix; dense ``X`` is converted cell by
+        cell.  ``block_format="dense"`` densifies a CSR input.
         """
         loss = get_loss(loss_name)
         cfg = cfg if cfg is not None else self.config_cls()
         w0, alpha0 = _unpack_warm_start(warm_start)
+        sparse = self.block_format == "sparse"
+        if not sparse and hasattr(X, "toarray"):
+            X = X.toarray()       # CSR input under block_format="dense"
         if self.engine == "simulated":
             if P is None or Q is None:
                 raise ValueError("engine='simulated' needs P and Q")
-            data = partition(X, y, P, Q, m_multiple=P * Q)
+            if sparse:
+                data = partition_sparse(X, y, P, Q, m_multiple=P * Q)
+            else:
+                data = partition(X, y, P, Q, m_multiple=P * Q)
             return self._simulated_program(loss, data, cfg, w0, alpha0)
         if mesh is None:
             if P is None or Q is None:
@@ -136,9 +159,9 @@ class Solver:
         Qn = axes_size(mesh, model_axis)
         if (P is not None and P != Pn) or (Q is not None and Q != Qn):
             raise ValueError(f"mesh is {Pn}x{Qn} but P={P}, Q={Q} requested")
-        sdata = prepare_shard_map(mesh, X, y, data_axis=data_axis,
-                                  model_axis=model_axis,
-                                  m_multiple=Pn * Qn)
+        prep = prepare_shard_map_sparse if sparse else prepare_shard_map
+        sdata = prep(mesh, X, y, data_axis=data_axis,
+                     model_axis=model_axis, m_multiple=Pn * Qn)
         return self._shard_map_program(loss, sdata, cfg, w0, alpha0)
 
     # ---- the shared outer driver ------------------------------------------
@@ -196,7 +219,8 @@ class Solver:
             alpha=prog.alpha_of(state) if prog.alpha_of else None,
             history=history, iters=iters, converged=stopped,
             solver=self.name, engine=self.engine,
-            local_backend=self.local_backend)
+            local_backend=self.local_backend,
+            block_format=self.block_format)
 
 
 # ---------------------------------------------------------------------------

@@ -1,3 +1,11 @@
 from .synthetic import make_svm_data, make_sparse_svm_data
-from .libsvm import load_libsvm, save_libsvm
+from .sparse import CSRMatrix, csr_from_dense, make_sparse_svm_csr
+from .libsvm import load_libsvm, load_libsvm_csr, save_libsvm
 from .tokens import TokenPipeline, synthetic_token_batch
+
+__all__ = [
+    "make_svm_data", "make_sparse_svm_data",
+    "CSRMatrix", "csr_from_dense", "make_sparse_svm_csr",
+    "load_libsvm", "load_libsvm_csr", "save_libsvm",
+    "TokenPipeline", "synthetic_token_batch",
+]

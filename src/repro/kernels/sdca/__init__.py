@@ -1,3 +1,7 @@
 from .ops import sdca_epoch
 from .ref import sdca_epoch_ref
 from .sdca import sdca_epoch_pallas
+from .sparse import sdca_epoch_sparse_pallas
+
+__all__ = ["sdca_epoch", "sdca_epoch_ref", "sdca_epoch_pallas",
+           "sdca_epoch_sparse_pallas"]

@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: local SDCA epoch on a padded-ELL sparse block.
+
+Sparse sibling of ``sdca.sdca_epoch_pallas`` for news20-scale blocks.
+Same TPU scheme -- sequential step grid, scalar-prefetched coordinate
+order driving the row DMA, the primal block and dual deltas resident in
+VMEM -- but the gathered row is the (1, k) ELL row (column ids + values)
+instead of the (1, m_q) dense row, so the per-step DMA traffic scales
+with the row's nonzero count, not the block width.
+
+Inside the step the sparse row is combined with the dense VMEM-resident
+``w`` by gather (``z_loc = sum(vals * w[cols])``) and scatter-ADD
+(``w[cols] += d * vals``).  ELL padding slots carry (col=0, val=0): the
+gather reads w[0] harmlessly and the scatter adds zero, so duplicate
+index-0 slots are inert by construction.  The gather/scatter pair is
+exact in interpret mode (CPU CI); on real TPUs it requires the dynamic
+gather/scatter lowering of recent Mosaic -- real-TPU validation rides
+the same ROADMAP follow-up as the dense kernels.
+
+Supported losses: hinge (closed form), squared.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref,            # scalar prefetch: (steps,) int32
+            beta_ref,           # scalar prefetch: (1,) f32 (paper's beta)
+            cols_row_ref,       # (1, k) gathered ELL column ids
+            vals_row_ref,       # (1, k) gathered ELL values
+            y_row_ref,          # (1, 1) label
+            mask_row_ref,       # (1, 1)
+            alpha_row_ref,      # (1, 1) alpha0[i]
+            w0_ref,             # (1, m_q) initial w block
+            dalpha_ref,         # out: (n_p, 1)
+            w_out_ref,          # out: (1, m_q)
+            w_vmem,             # scratch: (1, m_q) f32
+            dal_vmem,           # scratch: (n_p, 1) f32
+            *, lam, n, Q, steps, loss, use_beta):
+    h = pl.program_id(0)
+
+    @pl.when(h == 0)
+    def _init():
+        w_vmem[...] = w0_ref[...].astype(jnp.float32)
+        dal_vmem[...] = jnp.zeros_like(dal_vmem)
+
+    i = idx_ref[h]
+    ci = cols_row_ref[0, :]
+    vi = vals_row_ref[0, :].astype(jnp.float32)
+    yi = y_row_ref[0, 0].astype(jnp.float32)
+    mi = mask_row_ref[0, 0].astype(jnp.float32)
+    a_i = alpha_row_ref[0, 0].astype(jnp.float32) + dal_vmem[i, 0]
+
+    w = w_vmem[0, :]
+    zloc = jnp.sum(vi * jnp.take(w, ci, axis=0))
+    x_sq = jnp.sum(vi * vi)
+    denom = beta_ref[0] if use_beta else x_sq
+    denom = jnp.maximum(denom, 1e-12)
+
+    if loss == "hinge":
+        d = (yi / Q - zloc) * lam * n / denom
+        lo = jnp.where(yi > 0, 0.0, -1.0)
+        hi = jnp.where(yi > 0, 1.0, 0.0)
+        d = jnp.clip(a_i + d, lo, hi) - a_i
+    elif loss == "squared":
+        num = yi / Q - a_i / (2.0 * Q) - zloc
+        den = 1.0 / (2.0 * Q) + denom / (lam * n)
+        d = num / jnp.maximum(den, 1e-12)
+    else:
+        raise ValueError(loss)
+    d = d * mi
+
+    w_vmem[0, :] = w.at[ci].add((d / (lam * n)) * vi)
+    dal_vmem[i, 0] = dal_vmem[i, 0] + d
+
+    @pl.when(h == steps - 1)
+    def _flush():
+        dalpha_ref[...] = dal_vmem[...]
+        w_out_ref[...] = w_vmem[...]
+
+
+def sdca_epoch_sparse_pallas(cols, vals, y, mask, alpha0, w0, idx, *, lam, n,
+                             Q, loss: str = "hinge", beta=None,
+                             interpret: bool = True):
+    """Sparse-cell kernel version of one local SDCA epoch.
+
+    cols/vals: (n_p, k) padded-ELL block; w0: (m_q,) dense primal block;
+    idx: (steps,) int32.  ``beta`` (a runtime scalar, may be traced)
+    selects the paper's step_mode="beta" denominator.
+    Returns (dalpha, w_final).
+    """
+    n_p, k = cols.shape
+    m_q = w0.shape[0]
+    steps = idx.shape[0]
+    use_beta = beta is not None
+    beta_arr = jnp.reshape(
+        jnp.asarray(beta if use_beta else 0.0, jnp.float32), (1,))
+    kern = functools.partial(_kernel, lam=float(lam), n=int(n), Q=int(Q),
+                             steps=steps, loss=loss, use_beta=use_beta)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda h, idx_ref, b: (idx_ref[h], 0)),
+            pl.BlockSpec((1, k), lambda h, idx_ref, b: (idx_ref[h], 0)),
+            pl.BlockSpec((1, 1), lambda h, idx_ref, b: (idx_ref[h], 0)),
+            pl.BlockSpec((1, 1), lambda h, idx_ref, b: (idx_ref[h], 0)),
+            pl.BlockSpec((1, 1), lambda h, idx_ref, b: (idx_ref[h], 0)),
+            pl.BlockSpec((1, m_q), lambda h, idx_ref, b: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n_p, 1), lambda h, idx_ref, b: (0, 0)),
+            pl.BlockSpec((1, m_q), lambda h, idx_ref, b: (0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, m_q), jnp.float32),
+            pltpu.VMEM((n_p, 1), jnp.float32),
+        ],
+    )
+    dalpha, w_fin = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_p, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, m_q), jnp.float32),
+        ],
+        interpret=interpret,
+    )(idx, beta_arr, cols, vals, y[:, None], mask[:, None], alpha0[:, None],
+      w0[None, :])
+    return dalpha[:, 0], w_fin[0]

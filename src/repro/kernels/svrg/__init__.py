@@ -1,3 +1,7 @@
 from .ops import svrg_inner
 from .ref import svrg_inner_ref
+from .sparse import svrg_inner_sparse_pallas
 from .svrg import svrg_inner_pallas
+
+__all__ = ["svrg_inner", "svrg_inner_ref", "svrg_inner_pallas",
+           "svrg_inner_sparse_pallas"]

@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: RADiSA inner loop on a padded-ELL sparse block.
+
+Sparse sibling of ``svrg.svrg_inner_pallas``.  The gathered row is the
+(1, k) ELL row of the FULL feature block; the assigned sub-block window
+``[lo, lo + m_sub)`` is selected inside the kernel by masking the
+entries whose block-local column falls in the window.  ``lo`` changes
+with the per-iteration sub-block permutation, so it is a runtime
+scalar-prefetch input (alongside the minibatch order and eta_t).
+
+The SVRG direction has a dense part (mu + lam * (w - w_anchor), both
+VMEM-resident (1, m_sub) blocks) and a sparse part -- the loss-gradient
+difference times the row -- applied with a scatter-ADD at the in-window
+entries.  ELL padding (col=0, val=0) masks/adds to nothing, exactly as
+in the sparse SDCA kernel.  Gather/scatter are exact in interpret mode
+(CPU CI); real-TPU lowering rides the ROADMAP kernel-validation
+follow-up.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _grad(loss, z, y):
+    if loss == "hinge":
+        return jnp.where(y * z < 1.0, -y, 0.0)
+    if loss == "squared":
+        return 2.0 * (z - y)
+    raise ValueError(loss)
+
+
+def _kernel(idx_ref,            # scalar prefetch: (L,) int32
+            lo_ref,             # scalar prefetch: (1,) int32 window start
+            eta_ref,            # scalar prefetch: (1,) f32 step size
+            cols_row_ref,       # (1, k) gathered ELL column ids
+            vals_row_ref,       # (1, k) gathered ELL values
+            y_row_ref,          # (1, 1)
+            mask_row_ref,       # (1, 1)
+            z_row_ref,          # (1, 1) anchor inner product
+            w_anchor_ref,       # (1, m_sub)
+            mu_ref,             # (1, m_sub)
+            w_out_ref,          # out: (1, m_sub)
+            w_vmem,             # scratch: (1, m_sub) f32
+            *, lam, L, m_sub, loss):
+    h = pl.program_id(0)
+
+    @pl.when(h == 0)
+    def _init():
+        w_vmem[...] = w_anchor_ref[...].astype(jnp.float32)
+
+    ci = cols_row_ref[0, :]
+    vi = vals_row_ref[0, :].astype(jnp.float32)
+    yj = y_row_ref[0, 0].astype(jnp.float32)
+    mj = mask_row_ref[0, 0].astype(jnp.float32)
+    zj = z_row_ref[0, 0].astype(jnp.float32)
+    wa = w_anchor_ref[0, :].astype(jnp.float32)
+    mu = mu_ref[0, :].astype(jnp.float32)
+
+    rel = ci - lo_ref[0]
+    sel = ((rel >= 0) & (rel < m_sub)).astype(jnp.float32)
+    relc = jnp.clip(rel, 0, m_sub - 1)
+
+    w = w_vmem[0, :]
+    diff = w - wa
+    corr = jnp.sum(vi * sel * jnp.take(diff, relc, axis=0))
+    z = zj + corr
+    gscale = (_grad(loss, z, yj) - _grad(loss, zj, yj)) * mj
+    g_sparse = jnp.zeros((m_sub,), jnp.float32).at[relc].add(
+        gscale * vi * sel)
+    w_vmem[0, :] = w - eta_ref[0] * (g_sparse + mu + lam * diff)
+
+    @pl.when(h == L - 1)
+    def _flush():
+        w_out_ref[...] = w_vmem[...]
+
+
+def svrg_inner_sparse_pallas(cols, vals, y, mask, z_anchor, w_anchor, mu_sub,
+                             idx, *, lam, eta, lo=0, loss: str = "hinge",
+                             interpret: bool = True):
+    """Sparse-cell kernel version of the RADiSA inner loop.
+
+    cols/vals: (n_p, k) padded-ELL FULL feature block (block-local column
+    ids); w_anchor/mu_sub: (m_sub,) sub-block windows; ``lo`` (runtime
+    scalar, may be traced) is the window start within the block.
+    Returns the updated (m_sub,) sub-block iterate.
+    """
+    n_p, k = cols.shape
+    m_sub = w_anchor.shape[0]
+    L = idx.shape[0]
+    lo_arr = jnp.reshape(jnp.asarray(lo, jnp.int32), (1,))
+    eta_arr = jnp.reshape(jnp.asarray(eta, jnp.float32), (1,))
+    kern = functools.partial(_kernel, lam=float(lam), L=L, m_sub=m_sub,
+                             loss=loss)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(L,),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda h, idx_ref, lo_, e: (idx_ref[h], 0)),
+            pl.BlockSpec((1, k), lambda h, idx_ref, lo_, e: (idx_ref[h], 0)),
+            pl.BlockSpec((1, 1), lambda h, idx_ref, lo_, e: (idx_ref[h], 0)),
+            pl.BlockSpec((1, 1), lambda h, idx_ref, lo_, e: (idx_ref[h], 0)),
+            pl.BlockSpec((1, 1), lambda h, idx_ref, lo_, e: (idx_ref[h], 0)),
+            pl.BlockSpec((1, m_sub), lambda h, idx_ref, lo_, e: (0, 0)),
+            pl.BlockSpec((1, m_sub), lambda h, idx_ref, lo_, e: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m_sub),
+                               lambda h, idx_ref, lo_, e: (0, 0)),
+        scratch_shapes=[pltpu.VMEM((1, m_sub), jnp.float32)],
+    )
+    w = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, m_sub), jnp.float32),
+        interpret=interpret,
+    )(idx, lo_arr, eta_arr, cols, vals, y[:, None], mask[:, None],
+      z_anchor[:, None], w_anchor[None, :], mu_sub[None, :])
+    return w[0]

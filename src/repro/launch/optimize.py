@@ -13,6 +13,12 @@ dataset under any (engine, local_backend) pair:
       --solver radisa --mesh 4x2 --engine shard_map --backend pallas \\
       --force-host-devices 8
 
+  # news20-scale sparse instances: --block-format sparse keeps every
+  # block in the padded-ELL cell format (memory ~ nnz, never densified)
+  PYTHONPATH=src python -m repro.launch.optimize \\
+      --solver d3ca --dataset sparse --density 0.01 --n 20000 --m 50000 \\
+      --block-format sparse
+
 Prints one line per outer iteration (objective, duality gap when the
 solver has a dual, relative optimality when --ref-epochs > 0) and a
 final JSON summary.
@@ -43,10 +49,17 @@ def build_parser():
                     choices=["simulated", "shard_map"])
     ap.add_argument("--backend", default="ref", choices=["ref", "pallas"],
                     help="cell-local solver backend")
+    ap.add_argument("--block-format", default="dense",
+                    choices=["dense", "sparse"],
+                    help="per-cell data layout: dense (n_p, m_q) tiles or "
+                         "padded-ELL sparse cells (memory ~ nnz)")
     ap.add_argument("--mesh", type=_parse_mesh, default=(4, 2),
                     metavar="PxQ", help="grid shape, e.g. 4x2")
     ap.add_argument("--dataset", default="dense",
-                    choices=["dense", "sparse"])
+                    choices=["dense", "sparse", "libsvm"])
+    ap.add_argument("--libsvm-path", default=None,
+                    help="path for --dataset libsvm (streamed into CSR "
+                         "when --block-format sparse)")
     ap.add_argument("--n", type=int, default=1600)
     ap.add_argument("--m", type=int, default=400)
     ap.add_argument("--density", type=float, default=0.05,
@@ -83,30 +96,52 @@ def main(argv=None):
 
     # jax (and everything that imports it) only after the device forcing
     from repro.core import get_solver, objective, serial_sdca
-    from repro.data import make_sparse_svm_data, make_svm_data
+    from repro.data import (load_libsvm, load_libsvm_csr,
+                            make_sparse_svm_csr, make_sparse_svm_data,
+                            make_svm_data)
 
     P, Q = args.mesh
+    sparse_fmt = args.block_format == "sparse"
     if args.dataset == "dense":
         X, y = make_svm_data(args.n, args.m, seed=args.seed)
+    elif args.dataset == "libsvm":
+        if not args.libsvm_path:
+            build_parser().error("--dataset libsvm needs --libsvm-path")
+        loader = load_libsvm_csr if sparse_fmt else load_libsvm
+        X, y = loader(args.libsvm_path)
+    elif sparse_fmt:
+        # CSR all the way down: the dense matrix is never materialized
+        X, y = make_sparse_svm_csr(args.n, args.m, density=args.density,
+                                   seed=args.seed)
     else:
         X, y = make_sparse_svm_data(args.n, args.m, density=args.density,
                                     seed=args.seed)
 
     f_star = None
     if args.ref_epochs > 0:
-        w_ref, _ = serial_sdca(args.loss, X, y, lam=args.lam,
-                               epochs=args.ref_epochs)
-        f_star = float(objective(args.loss, X, y, w_ref, args.lam))
+        n_, m_ = X.shape
+        if hasattr(X, "toarray") and n_ * m_ > 20_000_000:
+            print(f"[optimize] skipping f* reference: densifying "
+                  f"{n_}x{m_} for serial SDCA would need "
+                  f"{n_ * m_ * 4 / 1e9:.1f} GB (pass --ref-epochs 0 to "
+                  "silence)", file=sys.stderr)
+        else:
+            X_ref = X.toarray() if hasattr(X, "toarray") else X
+            w_ref, _ = serial_sdca(args.loss, X_ref, y, lam=args.lam,
+                                   epochs=args.ref_epochs)
+            f_star = float(objective(args.loss, X_ref, y, w_ref, args.lam))
 
     cls = get_solver(args.solver)
-    solver = cls(engine=args.engine, local_backend=args.backend)
+    solver = cls(engine=args.engine, local_backend=args.backend,
+                 block_format=args.block_format)
     cfg_kw = {"lam": args.lam, "outer_iters": args.iters}
     if args.solver == "admm":
         cfg_kw["rho"] = args.lam
     cfg = cls.config_cls(**cfg_kw)
 
     print(f"[optimize] {args.solver} engine={args.engine} "
-          f"backend={args.backend} grid={P}x{Q} "
+          f"backend={args.backend} block_format={args.block_format} "
+          f"grid={P}x{Q} "
           f"{args.dataset}({X.shape[0]}x{X.shape[1]}) loss={args.loss} "
           f"lam={args.lam}")
     res = solver.solve(args.loss, X, y, P=P, Q=Q, cfg=cfg, tol=args.tol,
@@ -122,7 +157,8 @@ def main(argv=None):
 
     summary = {
         "solver": res.solver, "engine": res.engine,
-        "local_backend": res.local_backend, "P": P, "Q": Q,
+        "local_backend": res.local_backend,
+        "block_format": res.block_format, "P": P, "Q": Q,
         "n": int(X.shape[0]), "m": int(X.shape[1]), "loss": args.loss,
         "lam": args.lam, "iters": res.iters, "converged": res.converged,
         "objective": res.history[-1]["objective"] if res.history else None,

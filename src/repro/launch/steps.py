@@ -36,8 +36,8 @@ def param_shardings(model: Transformer, mesh, key=None):
     captured = {}
 
     def only_params(k):
-        p, l = model.init(k)
-        captured["logical"] = l   # static python structure; side-channel out
+        p, logical_ = model.init(k)
+        captured["logical"] = logical_  # static py structure; side-channel out
         return p
 
     shapes = jax.eval_shape(only_params, key)

@@ -63,16 +63,16 @@ def _init_attn(key, cfg: ModelConfig, cross: bool):
         "wv": trunc_normal(ks[2], (dm, KV * hd), s, dt),
         "wo": trunc_normal(ks[3], (H * hd, dm), (H * hd) ** -0.5, dt),
     }
-    l = {
+    lg = {
         "wq": ("fsdp", "heads"), "wk": ("fsdp", "kv_heads"),
         "wv": ("fsdp", "kv_heads"), "wo": ("heads", "fsdp"),
     }
     if cfg.qk_norm:
         p["q_norm"] = jnp.ones((hd,), dt)
         p["k_norm"] = jnp.ones((hd,), dt)
-        l["q_norm"] = (None,)
-        l["k_norm"] = (None,)
-    return p, l
+        lg["q_norm"] = (None,)
+        lg["k_norm"] = (None,)
+    return p, lg
 
 
 def _init_mlp(key, cfg: ModelConfig):
@@ -84,9 +84,9 @@ def _init_mlp(key, cfg: ModelConfig):
         "w_up": trunc_normal(ks[1], (dm, dff), dm ** -0.5, dt),
         "w_down": trunc_normal(ks[2], (dff, dm), dff ** -0.5, dt),
     }
-    l = {"w_gate": ("fsdp", "ff"), "w_up": ("fsdp", "ff"),
+    lg = {"w_gate": ("fsdp", "ff"), "w_up": ("fsdp", "ff"),
          "w_down": ("ff", "fsdp")}
-    return p, l
+    return p, lg
 
 
 def _init_layer(key, cfg: ModelConfig, kind: str):
@@ -94,22 +94,22 @@ def _init_layer(key, cfg: ModelConfig, kind: str):
     dt = cfg.pdtype
     p: Dict[str, Any] = {"ln1": jnp.ones((cfg.d_model,), dt),
                          "ln2": jnp.ones((cfg.d_model,), dt)}
-    l: Dict[str, Any] = {"ln1": ("fsdp",), "ln2": ("fsdp",)}
+    lg: Dict[str, Any] = {"ln1": ("fsdp",), "ln2": ("fsdp",)}
     if kind in (ATTN, LOCAL, XATTN):
-        p["mixer"], l["mixer"] = _init_attn(ks[0], cfg, kind == XATTN)
+        p["mixer"], lg["mixer"] = _init_attn(ks[0], cfg, kind == XATTN)
     elif kind == RWKV:
-        p["mixer"], l["mixer"] = init_rwkv(ks[0], cfg)
+        p["mixer"], lg["mixer"] = init_rwkv(ks[0], cfg)
     elif kind == RGLRU:
-        p["mixer"], l["mixer"] = init_rglru(ks[0], cfg)
+        p["mixer"], lg["mixer"] = init_rglru(ks[0], cfg)
     else:
         raise ValueError(kind)
     if kind == RWKV:
-        p["mlp"], l["mlp"] = init_rwkv_channel_mix(ks[1], cfg)
+        p["mlp"], lg["mlp"] = init_rwkv_channel_mix(ks[1], cfg)
     elif cfg.moe is not None:
-        p["mlp"], l["mlp"] = init_moe(ks[1], cfg)
+        p["mlp"], lg["mlp"] = init_moe(ks[1], cfg)
     else:
-        p["mlp"], l["mlp"] = _init_mlp(ks[1], cfg)
-    return p, l
+        p["mlp"], lg["mlp"] = _init_mlp(ks[1], cfg)
+    return p, lg
 
 
 # ---------------------------------------------------------------------------
@@ -162,10 +162,10 @@ class Transformer:
         rem = []
         rem_l = []
         for r in range(n_rem):
-            p, l = _init_layer(jax.random.fold_in(keys[3], r), cfg,
+            p, lg = _init_layer(jax.random.fold_in(keys[3], r), cfg,
                                cfg.pattern[r % len(cfg.pattern)])
             rem.append(p)
-            rem_l.append(l)
+            rem_l.append(lg)
         params["remainder"] = rem
         logical["remainder"] = rem_l
         return params, logical

@@ -24,7 +24,8 @@ class AdamWConfig:
 
 
 def init(params):
-    zeros = lambda p: jnp.zeros_like(p)
+    def zeros(p):
+        return jnp.zeros_like(p)
     return {
         "mu": jax.tree.map(zeros, params),
         "nu": jax.tree.map(zeros, params),

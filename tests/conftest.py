@@ -4,3 +4,14 @@ import sys
 # tests run on ONE device (the dry-run sets its own 512-device flag in a
 # subprocess); make sure src/ is importable without installation.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_configure(config):
+    # CI splits tier1 into a matrix over the two engines:
+    #   -m "not shard_map"  -> everything single-device (simulated split)
+    #   -m shard_map        -> the subprocess suites that force a device
+    #                          grid (shard_map split)
+    config.addinivalue_line(
+        "markers",
+        "shard_map: exercises the shard_map engine in a subprocess with a "
+        "forced multi-device grid (CI runs these in their own matrix leg)")

@@ -72,7 +72,8 @@ def test_all_three_agree(problem):
     """All three optimizers find (roughly) the same objective value."""
     X, y, f_star = problem
     data = partition(X, y, 3, 2)
-    f = lambda w: float(objective("hinge", X, y, w, LAM))
+    def f(w):
+        return float(objective("hinge", X, y, w, LAM))
     w1, _ = d3ca_simulated("hinge", data, D3CAConfig(lam=LAM, outer_iters=30))
     w2 = radisa_simulated("hinge", data, RADiSAConfig(
         lam=LAM, gamma=0.05, outer_iters=40))
@@ -101,7 +102,8 @@ def test_paper_qualitative_radisa_avg_best_small_lam():
     w_ref, _ = serial_sdca("hinge", X, y, lam=lam, epochs=400)
     f_star = float(objective("hinge", X, y, w_ref, lam))
     data = partition(X, y, 4, 2)
-    ro = lambda w: float(rel_opt(objective("hinge", X, y, w, lam), f_star))
+    def ro(w):
+        return float(rel_opt(objective("hinge", X, y, w, lam), f_star))
     w_d, _ = d3ca_simulated("hinge", data, D3CAConfig(lam=lam, outer_iters=15))
     w_r = radisa_simulated("hinge", data, RADiSAConfig(
         lam=lam, gamma=0.02, outer_iters=15))

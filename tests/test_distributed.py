@@ -16,11 +16,13 @@ def _run(script, timeout=600):
                           capture_output=True, text=True, cwd=ROOT)
 
 
+@pytest.mark.shard_map
 def test_shard_map_engines_match_simulated():
     r = _run(os.path.join(ROOT, "tests", "helpers", "dist_equiv.py"))
     assert r.returncode == 0, r.stdout + r.stderr
 
 
+@pytest.mark.shard_map
 def test_dryrun_small_mesh():
     r = _run(os.path.join(ROOT, "tests", "helpers", "dryrun_small.py"))
     assert r.returncode == 0, r.stdout + r.stderr

@@ -34,8 +34,9 @@ def test_prox_is_minimizer(loss_name, v, y, c):
     loss = get_loss(loss_name)
     z = float(prox_loss(loss_name, jnp.float32(v), jnp.float32(y),
                         jnp.float32(c)))
-    obj = lambda t: c * float(loss.value(jnp.float32(t), jnp.float32(y))) \
-        + 0.5 * (t - v) ** 2
+    def obj(t):
+        return c * float(loss.value(jnp.float32(t), jnp.float32(y))) \
+            + 0.5 * (t - v) ** 2
     base = obj(z)
     for dz in (-1e-2, 1e-2, -0.3, 0.3):
         assert base <= obj(z + dz) + 1e-5

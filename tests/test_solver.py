@@ -223,6 +223,7 @@ def test_local_pallas_rejects_logistic():
 # shard_map side of the matrix (subprocess: forced device count)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.shard_map
 def test_shard_map_pallas_matches_simulated_ref():
     r = subprocess.run(
         [sys.executable, os.path.join(ROOT, "tests", "helpers",

@@ -1,0 +1,244 @@
+"""Sparse block format: CSR containers, the padded-ELL partition, the
+gather-based local solvers/kernels, and sparse == dense equivalence of
+the full solver matrix (the shard_map side runs in a subprocess with a
+forced device grid)."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ADMMConfig, D3CAConfig, RADiSAConfig, get_solver,
+                        partition, partition_sparse)
+from repro.core.local import (local_sdca, local_sdca_sparse, local_svrg,
+                              local_svrg_sparse)
+from repro.core.losses import get_loss
+from repro.data import (CSRMatrix, csr_from_dense, load_libsvm,
+                        load_libsvm_csr, make_sparse_svm_csr,
+                        make_sparse_svm_data, save_libsvm)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+
+LAM = 1.0
+RNG = np.random.default_rng(23)
+
+
+def _instance():
+    """120 x 41 at 15% density: P*Q = 8 does not divide m = 41 (pads to
+    m_q = 24), and zeroing columns 24+ leaves feature block q=1 entirely
+    zero -- the two padding edge cases the format must survive."""
+    X, y = make_sparse_svm_data(120, 41, density=0.15, seed=7)
+    X[:, 24:] = 0.0
+    return X, y
+
+
+# ---------------------------------------------------------------------------
+# host-side containers
+# ---------------------------------------------------------------------------
+
+def test_csr_roundtrip_and_products():
+    X, y = _instance()
+    csr = csr_from_dense(X)
+    assert csr.shape == X.shape
+    assert csr.nnz == int((X != 0).sum())
+    np.testing.assert_array_equal(csr.toarray(), X)
+    w = RNG.normal(size=X.shape[1]).astype(np.float32)
+    a = RNG.normal(size=X.shape[0]).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(csr @ w), X @ w,
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(csr.T @ a), X.T @ a,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_libsvm_csr_streams_without_densifying(tmp_path):
+    X, y = _instance()
+    path = str(tmp_path / "inst.svm")
+    save_libsvm(path, X, y)
+    Xd, yd = load_libsvm(path)
+    csr, yc = load_libsvm_csr(path)
+    assert isinstance(csr, CSRMatrix)
+    np.testing.assert_array_equal(csr.toarray(), Xd)
+    np.testing.assert_array_equal(yc, yd)
+
+
+def test_make_sparse_svm_csr_properties():
+    csr, y = make_sparse_svm_csr(300, 80, density=0.05, seed=3)
+    assert csr.shape == (300, 80)
+    assert set(np.unique(y)) <= {-1.0, 1.0}
+    assert 0.02 < csr.density < 0.10
+    # standardized: unit variance on columns that have entries
+    Xd = csr.toarray()
+    std = Xd.std(axis=0)
+    np.testing.assert_allclose(std[std > 0], 1.0, atol=1e-4)
+    # every row has at least one entry (labels carry signal)
+    assert csr.row_nnz().min() >= 1
+
+
+# ---------------------------------------------------------------------------
+# padded-ELL partition
+# ---------------------------------------------------------------------------
+
+def test_partition_sparse_matches_dense_blocks():
+    X, y = _instance()
+    sp = partition_sparse(X, y, 4, 2, m_multiple=8)
+    dn = partition(X, y, 4, 2, m_multiple=8)
+    assert sp.m_q == dn.m_q and sp.n_p == dn.n_p
+    Xs, ys = sp.dense()
+    Xd, yd = dn.dense()
+    np.testing.assert_allclose(Xs, np.asarray(Xd), atol=1e-6)
+    np.testing.assert_array_equal(ys, np.asarray(yd))
+    np.testing.assert_array_equal(np.asarray(sp.mask), np.asarray(dn.mask))
+    # CSR input produces the identical partition
+    sp2 = partition_sparse(csr_from_dense(X), y, 4, 2, m_multiple=8)
+    np.testing.assert_array_equal(np.asarray(sp2.cols), np.asarray(sp.cols))
+    np.testing.assert_array_equal(np.asarray(sp2.vals), np.asarray(sp.vals))
+
+
+def test_cell_buffers_scale_with_nnz():
+    """The acceptance-criterion assert: peak block memory is O(nnz)
+    (via the cell buffer shapes), not O(n_p * m_q)."""
+    n, m = 256, 400
+    csr, y = make_sparse_svm_csr(n, m, density=0.02, seed=1)
+    sp = partition_sparse(csr, y, 4, 2, m_multiple=8)
+    # ELL width tracks the max per-cell-row nonzero count (lane-rounded),
+    # far below the dense block width
+    assert sp.cols.shape == (4, 2, sp.n_p, sp.k)
+    assert sp.k < sp.m_q // 4
+    # total cell elements beat the dense grid by a wide margin
+    dense_elems = 4 * 2 * sp.n_p * sp.m_q
+    assert sp.vals.size < dense_elems / 4
+    # k is exactly the lane-rounded max cell-row count, i.e. nnz-driven
+    q_of = np.minimum(csr.indices // sp.m_q, 1)
+    counts = np.zeros((n, 2), dtype=int)
+    np.add.at(counts, (csr.row_ids(), q_of), 1)
+    k_exact = int(counts.max())
+    assert sp.k == -(-max(k_exact, 1) // 8) * 8
+    # denser instance -> wider ELL, same m_q
+    csr2, y2 = make_sparse_svm_csr(n, m, density=0.08, seed=1)
+    sp2 = partition_sparse(csr2, y2, 4, 2, m_multiple=8)
+    assert sp2.k > sp.k and sp2.m_q == sp.m_q
+
+
+# ---------------------------------------------------------------------------
+# sparse local solvers: dense parity and ref <-> pallas parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("loss_name", ["hinge", "squared"])
+@pytest.mark.parametrize("step_mode", ["exact", "beta"])
+def test_local_sdca_sparse_parity(loss_name, step_mode):
+    loss = get_loss(loss_name)
+    X, y = _instance()
+    # P = Q = 1: the single ELL cell covers the whole (unpadded) matrix,
+    # so the dense local solver is directly comparable
+    sp = partition_sparse(X, y, 1, 1, k_multiple=8)
+    assert sp.m_q == X.shape[1]
+    x = jnp.asarray(X)
+    cols, vals = sp.cols[0, 0], sp.vals[0, 0]
+    mask = jnp.ones((sp.n_p,)).at[-3:].set(0.0)
+    a0 = jnp.zeros((sp.n_p,))
+    w0 = jnp.asarray(RNG.normal(size=sp.m_q) * 0.1, jnp.float32)
+    kw = dict(lam=0.2, n=200, Q=3, steps=48, key=jax.random.PRNGKey(5),
+              step_mode=step_mode, beta=float(sp.m_q))
+    d_dense = local_sdca(loss, x, sp.y_blocks[0], mask, a0, w0,
+                         backend="ref", **kw)
+    d_ref = local_sdca_sparse(loss, cols, vals, sp.y_blocks[0], mask, a0,
+                              w0, backend="ref", **kw)
+    d_pal = local_sdca_sparse(loss, cols, vals, sp.y_blocks[0], mask, a0,
+                              w0, backend="pallas", **kw)
+    np.testing.assert_allclose(np.asarray(d_pal), np.asarray(d_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(d_pal[-3:]), 0.0)
+    np.testing.assert_allclose(np.asarray(d_ref), np.asarray(d_dense),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("loss_name", ["hinge", "squared"])
+@pytest.mark.parametrize("lo", [None, 8])
+def test_local_svrg_sparse_parity(loss_name, lo):
+    loss = get_loss(loss_name)
+    X, y = _instance()
+    sp = partition_sparse(X, y, 1, 1, k_multiple=8)
+    assert sp.m_q == X.shape[1]
+    x = jnp.asarray(X)
+    cols, vals = sp.cols[0, 0], sp.vals[0, 0]
+    mask = jnp.ones((sp.n_p,))
+    m_sub = sp.m_q if lo is None else 8
+    wa = jnp.asarray(RNG.normal(size=m_sub) * 0.2, jnp.float32)
+    za = jnp.asarray(RNG.normal(size=sp.n_p) * 0.3, jnp.float32)
+    mu = jnp.asarray(RNG.normal(size=m_sub) * 0.05, jnp.float32)
+    kw = dict(lam=0.1, L=32, eta=0.03, key=jax.random.PRNGKey(9), lo=lo)
+    w_dense = local_svrg(loss, x, sp.y_blocks[0], mask, za, wa, mu,
+                         backend="ref", **kw)
+    w_ref = local_svrg_sparse(loss, cols, vals, sp.y_blocks[0], mask, za,
+                              wa, mu, backend="ref", **kw)
+    w_pal = local_svrg_sparse(loss, cols, vals, sp.y_blocks[0], mask, za,
+                              wa, mu, backend="pallas", **kw)
+    np.testing.assert_allclose(np.asarray(w_ref), np.asarray(w_dense),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(w_pal), np.asarray(w_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# full-solver equivalence, simulated engine (the shard_map side of the
+# matrix runs in the subprocess below)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,cfg", [
+    ("d3ca", D3CAConfig(lam=LAM, outer_iters=3, local_steps=12)),
+    ("radisa", RADiSAConfig(lam=LAM, gamma=0.03, outer_iters=3, L=12)),
+    ("radisa", RADiSAConfig(lam=LAM, gamma=0.03, outer_iters=2, L=12,
+                            variant="avg")),
+    ("admm", ADMMConfig(lam=LAM, rho=LAM, outer_iters=4)),
+])
+def test_sparse_matches_dense_simulated(name, cfg):
+    X, y = _instance()
+    base = get_solver(name)(engine="simulated", local_backend="ref").solve(
+        "hinge", X, y, P=4, Q=2, cfg=cfg, record_history=False)
+    backends = ("ref",) if name == "admm" else ("ref", "pallas")
+    for backend in backends:
+        rs = get_solver(name)(engine="simulated", local_backend=backend,
+                              block_format="sparse").solve(
+            "hinge", csr_from_dense(X), y, P=4, Q=2, cfg=cfg,
+            record_history=False)
+        assert rs.block_format == "sparse"
+        np.testing.assert_allclose(np.asarray(rs.w), np.asarray(base.w),
+                                   rtol=2e-4, atol=2e-4)
+        if base.alpha is not None:
+            np.testing.assert_allclose(
+                np.asarray(rs.alpha), np.asarray(base.alpha),
+                rtol=2e-4, atol=2e-4)
+
+
+def test_block_format_knob_validation():
+    with pytest.raises(ValueError, match="block_format"):
+        get_solver("d3ca")(block_format="csc")
+
+
+def test_optimize_cli_sparse_all_solvers(capsys):
+    from repro.launch.optimize import main as optimize_main
+    for solver in ("d3ca", "radisa", "admm"):
+        summary = optimize_main([
+            "--solver", solver, "--dataset", "sparse", "--density", "0.05",
+            "--n", "96", "--m", "40", "--block-format", "sparse",
+            "--iters", "2", "--ref-epochs", "5"])
+        assert summary["block_format"] == "sparse"
+        assert summary["objective"] is not None
+    capsys.readouterr()
+
+
+# ---------------------------------------------------------------------------
+# shard_map side of the matrix (subprocess: forced device count)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.shard_map
+def test_shard_map_sparse_matches_simulated_dense():
+    r = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "helpers",
+                                      "sparse_equiv.py")],
+        env=ENV, timeout=600, capture_output=True, text=True, cwd=ROOT)
+    assert r.returncode == 0, r.stdout + r.stderr
