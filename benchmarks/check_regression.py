@@ -51,10 +51,42 @@ def load(path):
         return json.load(fh)
 
 
+def validate_payload(payload, name: str):
+    """Structural check of one BENCH_core payload.  Returns a list of
+    per-key failure messages naming the payload and the missing field --
+    a malformed baseline/fresh file must fail the gate with an
+    actionable message, never a bare KeyError."""
+    errs = []
+    if not isinstance(payload, dict):
+        return [f"{name} payload is {type(payload).__name__}, not a JSON "
+                "object; re-run benchmarks.core_bench"]
+    cells = payload.get("cells")
+    if not isinstance(cells, dict):
+        return [f"{name} payload field 'cells' is "
+                f"{'missing' if cells is None else type(cells).__name__}; "
+                "expected a dict of benchmark cells (re-run "
+                "benchmarks.core_bench)"]
+    for key, cell in sorted(cells.items()):
+        if not isinstance(cell, dict):
+            errs.append(f"{name} payload cell {key!r} is "
+                        f"{type(cell).__name__}, not a dict")
+        elif "s_per_iter" not in cell:
+            errs.append(f"{name} payload cell {key!r} is missing "
+                        f"'s_per_iter' (has: {sorted(cell) or 'nothing'})")
+        elif not isinstance(cell["s_per_iter"], (int, float)):
+            errs.append(f"{name} payload cell {key!r} has non-numeric "
+                        f"s_per_iter={cell['s_per_iter']!r}")
+    return errs
+
+
 def compare(fresh: dict, baseline: dict, threshold: float):
     """Returns (failures, report_lines)."""
     lines = []
     failures = []
+    for payload, name in ((fresh, "fresh"), (baseline, "baseline")):
+        failures.extend(validate_payload(payload, name))
+    if failures:
+        return failures, lines
     for payload, name in ((fresh, "fresh"), (baseline, "baseline")):
         prov = payload.get("provenance")
         if not prov:

@@ -24,8 +24,8 @@ def ensure_host_devices(argv, count: int = 32):
     engine.  Must run before anything imports jax (the device count is
     locked at first init) -- call it between the stdlib imports and the
     ``repro.*`` imports of a benchmark script."""
-    if not any("shard_map" in a for a in argv):
-        return      # also matches the --engine=shard_map form
+    if not any("shard_map" in a or "async" in a for a in argv):
+        return      # also matches the --engine=shard_map / =async forms
     flags = os.environ.get("XLA_FLAGS", "")
     if "xla_force_host_platform_device_count" in flags:
         return      # already forced (possibly by an earlier fig module)
@@ -39,15 +39,18 @@ def ensure_host_devices(argv, count: int = 32):
 
 
 def add_engine_args(ap):
-    """--engine / --backend / --block-format knobs shared by the fig
-    benchmarks."""
+    """--engine / --backend / --block-format / --staleness knobs shared
+    by the fig benchmarks."""
     ap.add_argument("--engine", default="simulated",
-                    choices=["simulated", "shard_map"])
+                    choices=["simulated", "shard_map", "sync", "async"])
     ap.add_argument("--backend", default="ref", choices=["ref", "pallas"],
                     help="cell-local solver backend")
     ap.add_argument("--block-format", default="dense",
                     choices=["dense", "sparse"],
                     help="per-cell layout (sparse = padded-ELL cells)")
+    ap.add_argument("--staleness", type=int, default=0, metavar="TAU",
+                    help="async engine only: reduction delay tau "
+                         "(0 = synchronous)")
     return ap
 
 

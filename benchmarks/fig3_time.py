@@ -28,7 +28,8 @@ from repro.core import (ADMMConfig, D3CAConfig, RADiSAConfig,  # noqa: E402
 from repro.data import make_svm_data                        # noqa: E402
 
 
-def run_instance(exp, lam, scale, iters, engine, backend, seed=0):
+def run_instance(exp, lam, scale, iters, engine, backend, seed=0,
+                 staleness=0):
     bn, bm = int(exp.block_n * scale), int(exp.block_m * scale)
     n, m = exp.P * bn, exp.Q * bm
     X, y = make_svm_data(n, m, seed=seed)
@@ -40,7 +41,8 @@ def run_instance(exp, lam, scale, iters, engine, backend, seed=0):
            "methods": {}}
 
     def trace(name, cfg, label):
-        solver = get_solver(name)(engine=engine, local_backend=backend)
+        solver = get_solver(name)(engine=engine, local_backend=backend,
+                                  staleness=staleness)
         res = solver.solve("hinge", X, y, P=exp.P, Q=exp.Q, cfg=cfg,
                            f_star=f_star)
         hist = [{"iter": h["iter"], "time_s": h["time_s"],
@@ -74,7 +76,8 @@ def main(argv=None):
     for exp in PART1:
         for lam in (1e-1, 1e-2):
             results.append(run_instance(exp, lam, scale, args.iters,
-                                        args.engine, args.backend))
+                                        args.engine, args.backend,
+                                        staleness=args.staleness))
     save_result("fig3_time", {"scale": scale, "engine": args.engine,
                               "backend": args.backend, "results": results})
 

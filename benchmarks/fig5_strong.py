@@ -63,7 +63,8 @@ def main(argv=None):
             w_ref, _ = serial_sdca("hinge", X, y, lam=lam, epochs=200)
             f_star = float(objective("hinge", X, y, w_ref, lam))
             solver = get_solver(method)(engine=args.engine,
-                                        local_backend=args.backend)
+                                        local_backend=args.backend,
+                                        staleness=args.staleness)
             for (P, Q) in STRONG_CONFIGS:
                 n_p = -(-n // P)
                 if method == "radisa":

@@ -64,7 +64,8 @@ def run_grid(args, make_data, sparsities, out):
                 for method, lam in (("radisa", 0.1), ("d3ca", 1.0)):
                     solver = get_solver(method)(
                         engine=args.engine, local_backend=args.backend,
-                        block_format=args.block_format)
+                        block_format=args.block_format,
+                        staleness=args.staleness)
                     if method == "radisa":
                         cfg = RADiSAConfig(lam=lam, gamma=0.05 / P,
                                            outer_iters=args.iters)

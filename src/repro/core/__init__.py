@@ -1,9 +1,11 @@
 """Core: the paper's doubly distributed optimization algorithms."""
 from .admm import (ADMMConfig, admm_distributed,
                    admm_setup_simulated, admm_simulated)
+from .comm import Comm, CommSchedule, StaleComm, SyncComm
 from .d3ca import (D3CAConfig, d3ca_distributed, d3ca_simulated,
                    make_d3ca_step, make_d3ca_step_sparse)
-from .engines import (EngineProgram, drive, prepare_shard_map,
+from .engines import (CellProgram, EngineProgram, drive, grid_program,
+                      mesh_program, prepare_shard_map,
                       prepare_shard_map_sparse)
 from .losses import LOSSES, get_loss
 from .partition import (DoublyPartitioned, SparseDoublyPartitioned,
@@ -17,10 +19,11 @@ from .solver import (BLOCK_FORMATS, ENGINES, LOCAL_BACKENDS, SolveResult,
 __all__ = [
     "ADMMConfig", "admm_distributed", "admm_setup_simulated",
     "admm_simulated",
+    "Comm", "CommSchedule", "StaleComm", "SyncComm",
     "D3CAConfig", "d3ca_distributed", "d3ca_simulated", "make_d3ca_step",
     "make_d3ca_step_sparse",
-    "EngineProgram", "drive", "prepare_shard_map",
-    "prepare_shard_map_sparse",
+    "CellProgram", "EngineProgram", "drive", "grid_program", "mesh_program",
+    "prepare_shard_map", "prepare_shard_map_sparse",
     "LOSSES", "get_loss",
     "DoublyPartitioned", "SparseDoublyPartitioned", "partition",
     "partition_sparse",

@@ -21,12 +21,18 @@ predictions s_pq = A_pq w_q, the augmented Lagrangian alternates:
      factorization time is excluded from benchmark timings).
   3. dual ascent: u_pq += s_pq - A_pq w_q.
 
+Since Engine API v2 the per-step math is ONE
+:class:`~repro.core.engines.CellProgram` with the two reductions
+declared as named collectives::
+
+    CommSchedule().psum("v", axis="model")    # exchange (rows)
+                  .psum("rhs", axis="data")   # ridge right-hand side
+
 All three loss proxes are provided (hinge / squared / logistic-Newton).
 
 ADMM has no stochastic local solver, so the ``local_backend`` knob of the
 unified framework is accepted and ignored (its inner solve is the cached
 Cholesky back-substitution -- see the support matrix in the README).
-Both engines are exposed as ``EngineProgram`` builders like d3ca/radisa.
 """
 from __future__ import annotations
 
@@ -37,12 +43,14 @@ import jax.numpy as jnp
 from jax.scipy.linalg import cho_factor, cho_solve
 from jax.sharding import PartitionSpec as P
 
-from .engines import (EngineProgram, SparseShardMapData,
-                      drive_with_callback)
+from .comm import CommSchedule
+from .engines import (CellProgram, EngineProgram, SparseShardMapData,
+                      drive_with_callback, grid_program, mesh_program,
+                      mesh_step_fn)
 from .losses import Loss, get_loss
 from .partition import (DoublyPartitioned, SparseDoublyPartitioned,
                         ell_gather, ell_scatter_add)
-from .util import pvary, shard_map
+from .util import shard_map
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,28 +83,55 @@ def prox_loss(loss_name: str, v, y, c):
     raise ValueError(loss_name)
 
 
+def admm_schedule() -> CommSchedule:
+    """ADMM's two reduction points (exchange rows, ridge rhs columns)."""
+    return (CommSchedule()
+            .psum("v", axis="model")
+            .psum("rhs", axis="data"))
+
+
+def admm_cell_program(loss_name: str, cfg: ADMMConfig, *, n: int, m_q: int,
+                      sparse: bool = False) -> CellProgram:
+    """The ONE ADMM program every engine executes.
+
+    Per-cell data: ``(x_b[, vals_b], y_b, mask_b, chol_b (1, m_q, m_q))``;
+    per-cell state: ``(s_b (n_p, 1), u_b (n_p, 1), w_b (m_q,))``.
+    """
+
+    def cell(comm, t, data, state):
+        if sparse:
+            cols_b, vals_b, y_b, mask_b, chol_b = data
+            matvec = lambda w: ell_gather(w, cols_b, vals_b)   # noqa: E731
+            colsum = lambda b: ell_scatter_add(m_q, cols_b, vals_b, b)  # noqa: E731
+        else:
+            x_b, y_b, mask_b, chol_b = data
+            matvec = lambda w: x_b @ w                         # noqa: E731
+            colsum = lambda b: b @ x_b                         # noqa: E731
+        s_b, u_b, w_b = state
+        Qn = comm.axis_size("model")
+        c_prox = Qn / (cfg.rho * n)   # f_p carries the global 1/n factor
+        s_b, u_b = s_b[:, 0], u_b[:, 0]
+        cvec = matvec(w_b) - u_b
+        v = comm("v", cvec)
+        z = prox_loss(loss_name, v, y_b, c_prox)
+        z = jnp.where(mask_b > 0, z, v)      # padded rows: identity
+        s_new = cvec + (z - v) / Qn
+        b = s_new + u_b
+        rhs = comm("rhs", colsum(b))
+        w_new = cho_solve((chol_b[0], False), rhs)
+        u_new = u_b + s_new - matvec(w_new)
+        return s_new[:, None], u_new[:, None], w_new
+
+    x_specs = ((("data", "model"), ("data", "model")) if sparse
+               else (("data", "model"),))
+    data_specs = x_specs + (("data",), ("data",), ("model",))
+    state_specs = (("data", "model"), ("data", "model"), ("model",))
+    return CellProgram(admm_schedule(), cell, data_specs, state_specs)
+
+
 # ---------------------------------------------------------------------------
 # simulated grid engine
 # ---------------------------------------------------------------------------
-
-def _sparse_Aw(data: SparseDoublyPartitioned, w_blocks):
-    """A_pq w_q for every cell -> (P, Q, n_p), by per-row gathers."""
-    def pq(cols_pq, vals_pq, w_q):
-        return ell_gather(w_q, cols_pq, vals_pq)
-    return jax.vmap(lambda cp, vp: jax.vmap(pq)(cp, vp, w_blocks))(
-        data.cols, data.vals)
-
-
-def _sparse_rhs(data: SparseDoublyPartitioned, b):
-    """sum_p A_pq^T b_pq -> (Q, m_q), by per-cell scatter-adds."""
-    m_q = data.m_q
-
-    def pq(cols_pq, vals_pq, b_pq):
-        return ell_scatter_add(m_q, cols_pq, vals_pq, b_pq)
-    per_cell = jax.vmap(lambda cp, vp, bp: jax.vmap(pq)(cp, vp, bp))(
-        data.cols, data.vals, b)                          # (P, Q, m_q)
-    return per_cell.sum(axis=0)
-
 
 def admm_setup_simulated(data, cfg: ADMMConfig):
     """Cache the per-column-block Cholesky factors (excluded from timing).
@@ -124,46 +159,27 @@ def admm_setup_simulated(data, cfg: ADMMConfig):
 def admm_simulated_program(loss: Loss, data: DoublyPartitioned,
                            cfg: ADMMConfig, *, chol=None,
                            w0=None) -> EngineProgram:
-    """vmap-over-cells engine.  State: (s (P,Q,n_p), u (P,Q,n_p),
+    """Named-vmap grid engine.  State: (s (P,Q,n_p,1), u (P,Q,n_p,1),
     w_blocks (Q, m_q)).  The Cholesky setup runs at build time.
     ``data`` may be dense or sparse (padded-ELL cells)."""
     sparse = isinstance(data, SparseDoublyPartitioned)
-    loss_name = loss.name
     Pn, Qn = data.P, data.Q
-    n = data.n
     if chol is None:
         chol = admm_setup_simulated(data, cfg)
-    c_prox = Qn / (cfg.rho * n)   # f_p carries the global 1/n factor
-
-    def matvec(w):
-        if sparse:
-            return _sparse_Aw(data, w)
-        return jnp.einsum("pqnm,qm->pqn", data.x_blocks, w)
-
-    @jax.jit
-    def step(t, state):
-        s, u, w = state
-        Aw = matvec(w)
-        cmat = Aw - u                                    # c_pq
-        v = cmat.sum(axis=1)                             # (P, n_p)
-        z = prox_loss(loss_name, v, data.y_blocks, c_prox)
-        z = jnp.where(data.mask[:, :] > 0, z, v)         # padded rows: identity
-        s = cmat + ((z - v) / Qn)[:, None, :]
-        b = s + u
-        if sparse:
-            rhs = _sparse_rhs(data, b)
-        else:
-            rhs = jnp.einsum("pqn,pqnm->qm", b, data.x_blocks)
-        w = jax.vmap(lambda Lq, r: cho_solve((Lq, False), r))(chol, rhs)
-        u = u + s - matvec(w)
-        return s, u, w
+    cellprog = admm_cell_program(loss.name, cfg, n=data.n, m_q=data.m_q,
+                                 sparse=sparse)
+    x_parts = (data.cols, data.vals) if sparse else (data.x_blocks,)
+    # blocked layout: one leading block axis per logical axis of the
+    # dim-spec, per-cell extents in place -- chol spec is ("model",)
+    gdata = (*x_parts, data.y_blocks, data.mask, chol[:, None])
+    step = grid_program(cellprog, Pn, Qn)
 
     w_init = (jnp.zeros((Qn, data.m_q)) if w0 is None
               else data.w_to_blocks(jnp.asarray(w0)))
+    zeros_su = jnp.zeros((Pn, Qn, data.n_p, 1))
     return EngineProgram(
-        state=(jnp.zeros((Pn, Qn, data.n_p)), jnp.zeros((Pn, Qn, data.n_p)),
-               w_init),
-        step=step,
+        state=(zeros_su, zeros_su, w_init),
+        step=lambda t, st: step(t, gdata, st),
         w_of=lambda st: data.w_from_blocks(st[2]))
 
 
@@ -175,47 +191,25 @@ def admm_simulated(loss_name: str, data: DoublyPartitioned, cfg: ADMMConfig,
 
 
 # ---------------------------------------------------------------------------
-# shard_map engine
+# mesh engines (shard_map sync + bounded-staleness async)
 # ---------------------------------------------------------------------------
 
 def make_admm_step(loss_name: str, mesh, cfg: ADMMConfig, *, n: int,
                    data_axis: str = "data", model_axis: str = "model"):
-    """Distributed block-splitting ADMM step.
+    """Distributed block-splitting ADMM step (sync reductions).
 
     Layouts: x (n, m) -> (data, model); y/mask (n,) -> (data,);
     s,u (n, Q) -> (data, model) [one column per feature block];
     w (m,) -> (model,); chol (Q, m_q, m_q) -> (model,) on axis 0.
     """
-    Qn = mesh.shape[model_axis]
-    c_prox = Qn / (cfg.rho * n)
+    cellprog = admm_cell_program(loss_name, cfg, n=n, m_q=None)
+    run = mesh_step_fn(cellprog, mesh, data_axis=data_axis,
+                       model_axis=model_axis)
 
     def step(x, y, mask, s, u, w, chol):
-        def cell(x_b, y_b, mask_b, s_b, u_b, w_b, chol_b):
-            y_b = pvary(y_b, (model_axis,))
-            mask_b = pvary(mask_b, (model_axis,))
-            w_b = pvary(w_b, (data_axis,))
-            chol_b = pvary(chol_b, (data_axis,))
-            s_b, u_b = s_b[:, 0], u_b[:, 0]
-            Aw = x_b @ w_b
-            cvec = Aw - u_b
-            v = jax.lax.psum(cvec, model_axis)
-            z = prox_loss(loss_name, v, y_b, c_prox)
-            z = jnp.where(mask_b > 0, z, v)
-            s_new = cvec + (z - v) / Qn
-            b = s_new + u_b
-            rhs = jax.lax.psum(b @ x_b, data_axis)
-            w_new = cho_solve((chol_b[0], False), rhs)
-            u_new = u_b + s_new - x_b @ w_new
-            return s_new[:, None], u_new[:, None], w_new
-
-        return shard_map(
-            cell, mesh,
-            in_specs=(P(data_axis, model_axis), P(data_axis), P(data_axis),
-                      P(data_axis, model_axis), P(data_axis, model_axis),
-                      P(model_axis), P(model_axis)),
-            out_specs=(P(data_axis, model_axis), P(data_axis, model_axis),
-                       P(model_axis)),
-        )(x, y, mask, s, u, w, chol)
+        (s2, u2, w2), _ = run(jnp.int32(0), (x, y, mask, chol),
+                              (s, u, w), {})
+        return s2, u2, w2
 
     return jax.jit(step)
 
@@ -243,37 +237,14 @@ def make_admm_step_sparse(loss_name: str, mesh, cfg: ADMMConfig, *, n: int,
     """Sparse-cell variant of :func:`make_admm_step`: the two products
     with the local block become a per-row gather (A_pq w_q) and a
     scatter-add (A_pq^T b)."""
-    Qn = mesh.shape[model_axis]
-    c_prox = Qn / (cfg.rho * n)
+    cellprog = admm_cell_program(loss_name, cfg, n=n, m_q=m_q, sparse=True)
+    run = mesh_step_fn(cellprog, mesh, data_axis=data_axis,
+                       model_axis=model_axis)
 
     def step(cols, vals, y, mask, s, u, w, chol):
-        def cell(cols_b, vals_b, y_b, mask_b, s_b, u_b, w_b, chol_b):
-            y_b = pvary(y_b, (model_axis,))
-            mask_b = pvary(mask_b, (model_axis,))
-            w_b = pvary(w_b, (data_axis,))
-            chol_b = pvary(chol_b, (data_axis,))
-            s_b, u_b = s_b[:, 0], u_b[:, 0]
-            cvec = ell_gather(w_b, cols_b, vals_b) - u_b
-            v = jax.lax.psum(cvec, model_axis)
-            z = prox_loss(loss_name, v, y_b, c_prox)
-            z = jnp.where(mask_b > 0, z, v)
-            s_new = cvec + (z - v) / Qn
-            b = s_new + u_b
-            rhs = jax.lax.psum(ell_scatter_add(m_q, cols_b, vals_b, b),
-                               data_axis)
-            w_new = cho_solve((chol_b[0], False), rhs)
-            u_new = u_b + s_new - ell_gather(w_new, cols_b, vals_b)
-            return s_new[:, None], u_new[:, None], w_new
-
-        return shard_map(
-            cell, mesh,
-            in_specs=(P(data_axis, model_axis), P(data_axis, model_axis),
-                      P(data_axis), P(data_axis),
-                      P(data_axis, model_axis), P(data_axis, model_axis),
-                      P(model_axis), P(model_axis)),
-            out_specs=(P(data_axis, model_axis), P(data_axis, model_axis),
-                       P(model_axis)),
-        )(cols, vals, y, mask, s, u, w, chol)
+        (s2, u2, w2), _ = run(jnp.int32(0), (cols, vals, y, mask, chol),
+                              (s, u, w), {})
+        return s2, u2, w2
 
     return jax.jit(step)
 
@@ -301,43 +272,42 @@ def admm_setup_distributed_sparse(mesh, cols, vals, m_q: int,
 
 
 def admm_shard_map_program(loss: Loss, sdata, cfg: ADMMConfig,
-                           *, w0=None) -> EngineProgram:
-    """shard_map engine.  State: (s (n_pad, Q), u (n_pad, Q), w (m_pad,)).
+                           *, w0=None, staleness: int = 0) -> EngineProgram:
+    """Mesh engine.  State: ((s (n_pad, Q), u (n_pad, Q), w (m_pad,)),
+    stale_bufs), all sharded.
 
     The cached Cholesky setup runs at build time (excluded from step
     timings, as in the paper).  ``sdata`` is a :class:`ShardMapData` or
-    :class:`SparseShardMapData`."""
+    :class:`SparseShardMapData`; ``staleness=tau > 0`` selects the
+    bounded-staleness async policy."""
     mesh = sdata.mesh
-    if isinstance(sdata, SparseShardMapData):
+    sparse = isinstance(sdata, SparseShardMapData)
+    if sparse:
         chol = admm_setup_distributed_sparse(
             mesh, sdata.cols, sdata.vals, sdata.m_q, cfg,
             data_axis=sdata.data_axis, model_axis=sdata.model_axis)
-        step = make_admm_step_sparse(loss.name, mesh, cfg, n=sdata.n,
-                                     m_q=sdata.m_q,
-                                     data_axis=sdata.data_axis,
-                                     model_axis=sdata.model_axis)
-
-        def run(t, st):
-            return step(sdata.cols, sdata.vals, sdata.y, sdata.mask, *st,
-                        chol)
+        x_parts = (sdata.cols, sdata.vals)
     else:
         chol = admm_setup_distributed(mesh, sdata.x, cfg,
                                       data_axis=sdata.data_axis,
                                       model_axis=sdata.model_axis)
-        step = make_admm_step(loss.name, mesh, cfg, n=sdata.n,
-                              data_axis=sdata.data_axis,
-                              model_axis=sdata.model_axis)
-
-        def run(t, st):
-            return step(sdata.x, sdata.y, sdata.mask, *st, chol)
+        x_parts = (sdata.x,)
+    cellprog = admm_cell_program(loss.name, cfg, n=sdata.n, m_q=sdata.m_q,
+                                 sparse=sparse)
+    mdata = (*x_parts, sdata.y, sdata.mask, chol)
     from jax.sharding import NamedSharding
     su_sharding = NamedSharding(mesh, P(sdata.data_axis, sdata.model_axis))
     zeros_su = jax.device_put(jnp.zeros((sdata.n_pad, sdata.Q)), su_sharding)
     w_init = sdata.zeros_model() if w0 is None else sdata.pad_w(w0)
+    state0 = (zeros_su, zeros_su, w_init)
+    step, bufs0 = mesh_program(
+        cellprog, mesh, mdata, state0,
+        data_axis=sdata.data_axis, model_axis=sdata.model_axis,
+        staleness=staleness)
     return EngineProgram(
-        state=(zeros_su, zeros_su, w_init),
-        step=run,
-        w_of=lambda st: st[2][: sdata.m])
+        state=(state0, bufs0),
+        step=lambda t, st: step(t, mdata, st),
+        w_of=lambda st: st[0][2][: sdata.m])
 
 
 def admm_distributed(loss_name: str, mesh, x, y, mask, cfg: ADMMConfig,

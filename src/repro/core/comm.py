@@ -1,0 +1,269 @@
+"""CommSchedule: communication policy as a first-class solver axis.
+
+The paper's three doubly distributed optimizers are all "local
+sub-problem solves stitched together by cross-node reductions".  Until
+Engine API v2 each engine hard-coded *when* and *how* those reductions
+happened (inline ``jax.lax.psum`` calls in the shard_map cells, einsum
+contractions in the simulated grid), so a new communication policy --
+e.g. the Hogwild-style delayed psum of Fang & Klabjan (2018) -- meant
+forking every solver.
+
+This module makes the reduction points explicit:
+
+  * a solver's program builder *declares* its collectives once::
+
+        sched = (CommSchedule()
+                 .pmean("dalpha", axis="model")   # step 6 dual average
+                 .psum("w_contrib", axis="data")) # step 9 primal-dual map
+
+  * its per-cell step math *executes* them by name through a
+    :class:`Comm` handed in by the engine::
+
+        a_new = a_b + comm("dalpha", dalpha) / Pn
+        w_new = comm("w_contrib", contrib) / (lam * n)
+
+  * the engine picks the executor -- :class:`SyncComm` applies every
+    reduction immediately (today's behavior; works identically inside a
+    named-``vmap`` grid and inside a ``shard_map`` cell, because both
+    execute ``lax.psum`` over named axes), while :class:`StaleComm`
+    applies reductions with bounded staleness tau: the value *returned*
+    at outer step t is the reduction *computed* at step
+    ``max(1, t - tau)``, carried in a fixed-size FIFO buffer that is
+    part of the engine state pytree.  ``tau = 0`` short-circuits to the
+    sync path, so the async engine at zero staleness reproduces the
+    sync engine exactly (same computation, bit-identical iterates).
+
+Axes are *logical* ("data" = observation partitions, "model" = feature
+partitions); the engine maps them to concrete vmap axis names or mesh
+axis names (possibly tuples, e.g. ("pod", "data") on a multi-pod mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .util import axes_index
+
+LOGICAL_AXES = ("data", "model")
+OPS = ("psum", "pmean", "allgather")
+
+
+@dataclasses.dataclass(frozen=True)
+class Collective:
+    """One declared reduction point of a solver program."""
+
+    name: str
+    op: str        # "psum" | "pmean" | "allgather"
+    axis: str      # logical grid axis reduced over: "data" | "model"
+
+    def __post_init__(self):
+        if self.op not in OPS:
+            raise ValueError(f"collective {self.name!r}: op={self.op!r}; "
+                             f"expected one of {OPS}")
+        if self.axis not in LOGICAL_AXES:
+            raise ValueError(f"collective {self.name!r}: axis={self.axis!r}; "
+                             f"expected one of {LOGICAL_AXES}")
+
+    @property
+    def result_axis(self) -> str:
+        """Logical axis the reduction *result* still varies over."""
+        return "model" if self.axis == "data" else "data"
+
+
+class CommSchedule:
+    """Ordered declaration of a solver's named reduction points."""
+
+    def __init__(self):
+        self._points: Dict[str, Collective] = {}
+
+    # -- declaration (chainable) --------------------------------------------
+    def _add(self, name: str, op: str, axis: str) -> "CommSchedule":
+        if name in self._points:
+            raise ValueError(f"collective {name!r} declared twice")
+        self._points[name] = Collective(name, op, axis)
+        return self
+
+    def psum(self, name: str, *, axis: str) -> "CommSchedule":
+        """Declare a sum-reduction over a logical grid axis."""
+        return self._add(name, "psum", axis)
+
+    def pmean(self, name: str, *, axis: str) -> "CommSchedule":
+        """Declare a mean-reduction over a logical grid axis."""
+        return self._add(name, "pmean", axis)
+
+    def allgather(self, name: str, *, axis: str) -> "CommSchedule":
+        """Declare a gather over a logical grid axis: the per-cell value
+        is stacked along a new leading axis of that axis's extent."""
+        return self._add(name, "allgather", axis)
+
+    # -- lookup --------------------------------------------------------------
+    def __getitem__(self, name: str) -> Collective:
+        try:
+            return self._points[name]
+        except KeyError:
+            raise KeyError(
+                f"reduction {name!r} is not declared in this CommSchedule "
+                f"(declared: {sorted(self._points)}); declare it with "
+                ".psum(name, axis=...) / .pmean(name, axis=...) in the "
+                "program builder") from None
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._points
+
+    def __iter__(self):
+        return iter(self._points.values())
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(self._points)
+
+
+class Comm:
+    """Executor handed to a cell: runs the declared collectives.
+
+    ``axis_map`` maps logical axes to the concrete axis names of the
+    execution context (vmap axis names for the simulated grid, mesh axis
+    names -- possibly tuples -- for the shard_map engines); ``sizes``
+    gives the logical grid extents (P, Q) as static ints.
+    """
+
+    def __init__(self, schedule: CommSchedule, axis_map: Dict[str, tuple],
+                 sizes: Dict[str, int]):
+        self.schedule = schedule
+        self.axis_map = {k: (v,) if isinstance(v, str) else tuple(v)
+                         for k, v in axis_map.items()}
+        self.sizes = dict(sizes)
+        self._executed: set = set()
+        #: staleness FIFO slots produced this step (only StaleComm fills it)
+        self.bufs_out: Dict[str, jnp.ndarray] = {}
+
+    # -- cell-facing API -----------------------------------------------------
+    def __call__(self, name: str, value):
+        point = self.schedule[name]
+        if name in self._executed:
+            raise ValueError(f"reduction {name!r} executed twice in one "
+                             "step; declare a second point instead")
+        self._executed.add(name)
+        return self._exec(point, value)
+
+    def axis_index(self, axis: str):
+        """Collapsed linear cell index along a logical axis."""
+        return axes_index(self.axis_map[axis])
+
+    def axis_size(self, axis: str) -> int:
+        """Static extent of a logical grid axis (P or Q)."""
+        return self.sizes[axis]
+
+    def finalize(self):
+        """Check the schedule contract: every declared point ran once."""
+        missing = set(self.schedule.names) - self._executed
+        if missing:
+            raise ValueError(
+                f"declared reductions never executed: {sorted(missing)}; "
+                "the cell must run every point of its CommSchedule exactly "
+                "once per outer step")
+
+    # -- engine-facing -------------------------------------------------------
+    def _exec(self, point: Collective, value):
+        raise NotImplementedError
+
+
+class SyncComm(Comm):
+    """Apply every reduction immediately (the paper's synchronous outer
+    loop).  Works unchanged inside a named-``vmap`` grid and inside a
+    ``shard_map`` cell -- both execute collectives over named axes."""
+
+    def _exec(self, point: Collective, value):
+        axes = self.axis_map[point.axis]
+        if point.op == "psum":
+            return jax.lax.psum(value, axes)
+        if point.op == "pmean":
+            return jax.lax.pmean(value, axes)
+        return jax.lax.all_gather(value, axes)
+
+
+class ShapeProbeComm(Comm):
+    """Collective-free executor that records each point's per-cell result
+    aval.  Used once at build time (under ``jax.eval_shape``, OUTSIDE any
+    mesh/vmap axis context) so the async engine can allocate its
+    staleness buffers before the first step.  psum/pmean preserve the
+    per-cell shape; allgather prepends the axis extent.
+    """
+
+    def __init__(self, schedule, axis_map, sizes, record: dict):
+        super().__init__(schedule, axis_map, sizes)
+        self._record = record
+
+    def axis_index(self, axis: str):
+        # no axis context under eval_shape; any in-range index has the
+        # right aval (indices only feed PRNG folds / slice starts)
+        return jnp.zeros((), jnp.int32)
+
+    def _exec(self, point, value):
+        value = jnp.asarray(value)
+        if point.op == "allgather":
+            out = jnp.broadcast_to(
+                value[None], (self.sizes[point.axis],) + value.shape)
+        else:
+            out = value
+        self._record[point.name] = jax.ShapeDtypeStruct(out.shape, out.dtype)
+        return out
+
+
+class StaleComm(SyncComm):
+    """Bounded-staleness executor (the async engine's policy).
+
+    The reduction result *applied* at outer step t is the one *computed*
+    at step ``max(1, t - tau)``.  Each point carries a ``(tau, ...)``
+    FIFO ring in the engine state: slot ``(t-1) % tau`` holds the
+    reduction of step ``t - tau``, which is read just before the fresh
+    value overwrites it.  At t = 1 every slot is seeded with the first
+    reduction, so stale reads never see zeros from initialization.
+
+    The fresh collective still executes every step -- on real hardware
+    the reduction would be launched asynchronously and *consumed* tau
+    steps later; semantically (and for convergence studies, which is
+    what this engine is for) only the consumption delay matters.
+
+    ``tau = 0`` never touches a buffer and returns the fresh value, so
+    the async engine at zero staleness is the sync engine, bit for bit.
+    """
+
+    def __init__(self, schedule, axis_map, sizes, *, tau: int, t,
+                 bufs: Optional[dict] = None):
+        super().__init__(schedule, axis_map, sizes)
+        if tau < 0:
+            raise ValueError(f"staleness tau={tau} must be >= 0")
+        self.tau = int(tau)
+        self.t = t                         # traced outer-iteration counter
+        self.bufs_in = bufs or {}
+
+    def _exec(self, point, value):
+        fresh = super()._exec(point, value)
+        if self.tau == 0:
+            return fresh
+        try:
+            buf = self.bufs_in[point.name]   # (tau, *cell result shape)
+        except KeyError:
+            raise KeyError(
+                f"no staleness buffer for reduction {point.name!r}; the "
+                "async engine allocates one per declared point at build "
+                "time -- was the schedule changed after program "
+                "construction?") from None
+        slot = (self.t - 1) % self.tau
+        stale = jax.lax.dynamic_index_in_dim(buf, slot, 0, keepdims=False)
+        first = self.t == 1
+        stale = jnp.where(first, fresh, stale)
+        updated = jax.lax.dynamic_update_index_in_dim(
+            buf, fresh.astype(buf.dtype), slot, 0)
+        seeded = jnp.broadcast_to(fresh, buf.shape).astype(buf.dtype)
+        self.bufs_out[point.name] = jnp.where(first, seeded, updated)
+        return stale
+
+    def finalize(self):
+        super().finalize()
+        if self.tau and set(self.bufs_out) != set(self.schedule.names):
+            raise ValueError("staleness buffers out of sync with schedule")

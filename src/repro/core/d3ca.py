@@ -1,40 +1,44 @@
 """D3CA -- Doubly Distributed Dual Coordinate Ascent (Algorithm 1).
 
 The cell-local solver is ``local.local_sdca`` (pure jnp or the Pallas
-SDCA kernel, selected by ``local_backend``).  The two engines are exposed
-as :class:`~repro.core.engines.EngineProgram` builders consumed by the
-unified solver framework (``repro.core.solver``):
+SDCA kernel, selected by ``local_backend``).  Since Engine API v2 the
+algorithm contributes ONE :class:`~repro.core.engines.CellProgram` --
+the per-cell step math plus a CommSchedule declaring its two
+reductions::
 
-  * ``d3ca_simulated_program``  -- the P x Q grid as leading array axes,
-    cells under ``vmap``; one device.
+    CommSchedule().pmean("dalpha", axis="model")   # step 6 dual average
+                  .psum("w_contrib", axis="data")  # step 9 primal-dual map
+
+The generic executors in ``repro.core.engines`` run that single program
+under every engine:
+
+  * ``d3ca_simulated_program``  -- named-vmap grid on one device;
   * ``d3ca_shard_map_program``  -- a ``shard_map`` step over a
-    (data=P, model=Q) mesh: each device owns one (n_p, m_q) block; the
-    dual average of step 6 is a ``pmean`` over the "model" axis and the
-    primal-dual map of step 9 is a ``psum`` over the "data" axis.  This
-    is the production path and what the multi-pod dry-run lowers.
+    (data=P, model=Q) mesh; ``staleness=tau`` turns the same program
+    into the bounded-staleness async engine (tau = 0 is bit-identical
+    to the sync path).
 
-``d3ca_simulated`` / ``d3ca_distributed`` are thin compatibility wrappers
-over the programs; the outer loop lives once in ``engines.drive`` /
+``d3ca_simulated`` / ``d3ca_distributed`` are thin compatibility
+wrappers; the outer loop lives once in ``engines.drive`` /
 ``solver.Solver.solve``.  The engines are tested to agree to float
 tolerance (tests/test_distributed.py, tests/test_solver.py).
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
-from .engines import (EngineProgram, SparseShardMapData,
-                      drive_with_callback)
+from .comm import CommSchedule
+from .engines import (CellProgram, EngineProgram, SparseShardMapData,
+                      drive_with_callback, grid_program, mesh_program,
+                      mesh_step_fn)
 from .local import local_sdca, local_sdca_sparse
 from .losses import Loss, get_loss
 from .partition import (DoublyPartitioned, SparseDoublyPartitioned,
                         ell_scatter_add)
-from .util import pvary, shard_map
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +50,63 @@ class D3CAConfig:
     seed: int = 0
 
 
+def d3ca_schedule() -> CommSchedule:
+    """D3CA's two reduction points, as named in the paper."""
+    return (CommSchedule()
+            .pmean("dalpha", axis="model")
+            .psum("w_contrib", axis="data"))
+
+
+def d3ca_cell_program(loss: Loss, cfg: D3CAConfig, *, n: int, n_p: int,
+                      m_q: Optional[int] = None, sparse: bool = False,
+                      local_backend: str = "ref") -> CellProgram:
+    """The ONE D3CA program every engine executes.
+
+    Per-cell data: ``(key0, x_b[, vals_b], y_b, mask_b)`` -- an
+    (n_p, m_q) dense block or an (n_p, k) padded-ELL cols/vals pair.
+    Per-cell state: ``(alpha_b (n_p,), w_b (m_q,))``.
+    """
+    lam = cfg.lam
+    steps = cfg.local_steps or n_p
+    if sparse and m_q is None:
+        raise ValueError("sparse D3CA cells need m_q for the scatter-add")
+
+    def cell(comm, t, data, state):
+        if sparse:
+            key0, cols_b, vals_b, y_b, mask_b = data
+            x_parts = (cols_b, vals_b)
+            local = local_sdca_sparse
+        else:
+            key0, x_b, y_b, mask_b = data
+            x_parts = (x_b,)
+            local = local_sdca
+        a_b, w_b = state
+        Pn = comm.axis_size("data")
+        Qn = comm.axis_size("model")
+        beta = lam / t
+        key_t = jax.random.fold_in(key0, t)
+        p = comm.axis_index("data")
+        key_p = jax.random.fold_in(key_t, p)   # coordinate order per p
+        dalpha = local(loss, *x_parts, y_b, mask_b, a_b, w_b,
+                       lam=lam, n=n, Q=Qn, steps=steps, key=key_p,
+                       step_mode=cfg.step_mode, beta=beta,
+                       backend=local_backend)
+        # step 6: alpha_[p,.] += (1/P) mean_q dalpha[p, q]
+        a_new = a_b + comm("dalpha", dalpha) / Pn
+        # step 9: w_[., q] = (1/(lam n)) sum_p alpha_[p,q]^T x_[p,q]
+        am = a_new * mask_b
+        contrib = (ell_scatter_add(m_q, cols_b, vals_b, am) if sparse
+                   else am @ x_b)
+        w_new = comm("w_contrib", contrib) / (lam * n)
+        return a_new, w_new
+
+    x_specs = ((("data", "model"), ("data", "model")) if sparse
+               else (("data", "model"),))
+    data_specs = ((),) + x_specs + (("data",), ("data",))
+    state_specs = (("data",), ("model",))
+    return CellProgram(d3ca_schedule(), cell, data_specs, state_specs)
+
+
 # ----------------------------------------------------------------------------
 # simulated grid engine
 # ----------------------------------------------------------------------------
@@ -53,57 +114,20 @@ class D3CAConfig:
 def d3ca_simulated_program(loss: Loss, data: DoublyPartitioned,
                            cfg: D3CAConfig, *, local_backend: str = "ref",
                            w0=None, alpha0=None) -> EngineProgram:
-    """vmap-over-cells engine.  State: (alpha (P, n_p), w_blocks (Q, m_q)).
+    """Named-vmap grid engine.  State: (alpha (P, n_p), w_blocks (Q, m_q)).
 
     ``data`` may be a dense :class:`DoublyPartitioned` or a sparse
-    :class:`SparseDoublyPartitioned` (padded-ELL cells); the update rules
-    are identical, only the cell-local solver and the primal-dual map
-    switch between dense einsum and gather/scatter forms."""
+    :class:`SparseDoublyPartitioned` (padded-ELL cells); the cell
+    program is the same one the mesh engines run."""
     sparse = isinstance(data, SparseDoublyPartitioned)
     Pn, Qn = data.P, data.Q
-    n, m_q, lam = data.n, data.m_q, cfg.lam
-    steps = cfg.local_steps or data.n_p
+    cellprog = d3ca_cell_program(loss, cfg, n=data.n, n_p=data.n_p,
+                                 m_q=data.m_q, sparse=sparse,
+                                 local_backend=local_backend)
     key0 = jax.random.PRNGKey(cfg.seed)
-
-    if sparse:
-        local = partial(local_sdca_sparse, loss, lam=lam, n=n, Q=Qn,
-                        steps=steps, backend=local_backend)
-    else:
-        local = partial(local_sdca, loss, lam=lam, n=n, Q=Qn, steps=steps,
-                        backend=local_backend)
-
-    @jax.jit
-    def outer(t, state):
-        alpha, w_blocks = state
-        beta = lam / t
-        key_t = jax.random.fold_in(key0, t)
-
-        def cell(p, q):
-            key_p = jax.random.fold_in(key_t, p)  # coordinate order per p
-            x_cell = ((data.cols[p, q], data.vals[p, q]) if sparse
-                      else (data.x_blocks[p, q],))
-            return local(*x_cell, data.y_blocks[p], data.mask[p],
-                         alpha[p], w_blocks[q], key=key_p,
-                         step_mode=cfg.step_mode, beta=beta)
-
-        dalpha = jax.vmap(lambda p: jax.vmap(lambda q: cell(p, q))(
-            jnp.arange(Qn)))(jnp.arange(Pn))     # (P, Q, n_p)
-
-        # step 6: alpha_[p,.] += (1/(P*Q)) sum_q dalpha[p, q]
-        alpha = alpha + dalpha.sum(axis=1) / (Pn * Qn)
-        # step 9: w_[., q] = (1/(lam n)) sum_p alpha_[p,q]^T x_[p,q]
-        am = alpha * data.mask
-        if sparse:
-            def col_block(cols_q, vals_q):   # (P, n_p, k) each
-                def one(cols_pq, vals_pq, a_p):
-                    return ell_scatter_add(m_q, cols_pq, vals_pq, a_p)
-                return jax.vmap(one)(cols_q, vals_q, am).sum(axis=0)
-            w_blocks = jax.vmap(col_block, in_axes=(1, 1))(
-                data.cols, data.vals) / (lam * n)
-        else:
-            w_blocks = jnp.einsum("pn,pqnm->qm", am,
-                                  data.x_blocks) / (lam * n)
-        return alpha, w_blocks
+    x_parts = (data.cols, data.vals) if sparse else (data.x_blocks,)
+    gdata = (key0, *x_parts, data.y_blocks, data.mask)
+    step = grid_program(cellprog, Pn, Qn)
 
     alpha_init = (jnp.zeros((Pn, data.n_p)) if alpha0 is None
                   else data.alpha_to_blocks(jnp.asarray(alpha0)))
@@ -111,7 +135,7 @@ def d3ca_simulated_program(loss: Loss, data: DoublyPartitioned,
               else data.w_to_blocks(jnp.asarray(w0)))
     return EngineProgram(
         state=(alpha_init, w_init),
-        step=outer,
+        step=lambda t, s: step(t, gdata, s),
         w_of=lambda s: data.w_from_blocks(s[1]),
         alpha_of=lambda s: data.alpha_from_blocks(s[0] * data.mask))
 
@@ -127,13 +151,13 @@ def d3ca_simulated(loss_name: str, data: DoublyPartitioned, cfg: D3CAConfig,
 
 
 # ----------------------------------------------------------------------------
-# shard_map engine (production): one cell per device on a (data, model) mesh
+# mesh engines (shard_map sync + bounded-staleness async)
 # ----------------------------------------------------------------------------
 
 def make_d3ca_step(loss: Loss, mesh, cfg: D3CAConfig, *, n: int, n_p: int,
                    data_axis: str = "data", model_axis: str = "model",
                    local_backend: str = "ref"):
-    """Build the jitted distributed D3CA outer step.
+    """Build the jitted distributed D3CA outer step (sync reductions).
 
     Array layouts (global shapes; sharding in parens):
       x:      (n, m)    (data, model)   -- block x_[p,q] per device
@@ -141,41 +165,14 @@ def make_d3ca_step(loss: Loss, mesh, cfg: D3CAConfig, *, n: int, n_p: int,
       alpha:  (n,)      (data,)         -- replicated over model
       w:      (m,)      (model,)        -- replicated over data
     """
-    from .util import as_axes, axes_index, axes_size
-    lam = cfg.lam
-    daxes = as_axes(data_axis)
-    Qn = axes_size(mesh, model_axis)
-    Pn = axes_size(mesh, data_axis)
-    steps = cfg.local_steps or n_p
+    cellprog = d3ca_cell_program(loss, cfg, n=n, n_p=n_p,
+                                 local_backend=local_backend)
+    run = mesh_step_fn(cellprog, mesh, data_axis=data_axis,
+                       model_axis=model_axis)
 
     def step(t, key0, x, y, mask, alpha, w):
-        beta = lam / t
-        key_t = jax.random.fold_in(key0, t)
-
-        def cell(x_b, y_b, mask_b, a_b, w_b):
-            # promote partially-replicated operands to fully varying
-            y_b = pvary(y_b, (model_axis,))
-            mask_b = pvary(mask_b, (model_axis,))
-            a_b = pvary(a_b, (model_axis,))
-            w_b = pvary(w_b, daxes)
-            p = axes_index(data_axis)
-            key_p = jax.random.fold_in(key_t, p)
-            dalpha = local_sdca(loss, x_b, y_b, mask_b, a_b, w_b,
-                                lam=lam, n=n, Q=Qn, steps=steps, key=key_p,
-                                step_mode=cfg.step_mode, beta=beta,
-                                backend=local_backend)
-            # step 6: average the dual deltas of the Q feature blocks
-            a_new = a_b + jax.lax.pmean(dalpha, model_axis) / Pn
-            # step 9: primal-dual map, reduced over observation partitions
-            w_new = jax.lax.psum((a_new * mask_b) @ x_b, data_axis) / (lam * n)
-            return a_new, w_new
-
-        return shard_map(
-            cell, mesh,
-            in_specs=(P(data_axis, model_axis), P(data_axis), P(data_axis),
-                      P(data_axis), P(model_axis)),
-            out_specs=(P(data_axis), P(model_axis)),
-        )(x, y, mask, alpha, w)
+        (a_new, w_new), _ = run(t, (key0, x, y, mask), (alpha, w), {})
+        return a_new, w_new
 
     return jax.jit(step, static_argnums=())
 
@@ -190,78 +187,47 @@ def make_d3ca_step_sparse(loss: Loss, mesh, cfg: D3CAConfig, *, n: int,
     (n_p, k) with block-local column ids; the primal-dual map of step 9
     becomes a scatter-add into the local w block before the psum.
     """
-    from .util import as_axes, axes_index, axes_size
-    lam = cfg.lam
-    daxes = as_axes(data_axis)
-    Qn = axes_size(mesh, model_axis)
-    Pn = axes_size(mesh, data_axis)
-    steps = cfg.local_steps or n_p
+    cellprog = d3ca_cell_program(loss, cfg, n=n, n_p=n_p, m_q=m_q,
+                                 sparse=True, local_backend=local_backend)
+    run = mesh_step_fn(cellprog, mesh, data_axis=data_axis,
+                       model_axis=model_axis)
 
     def step(t, key0, cols, vals, y, mask, alpha, w):
-        beta = lam / t
-        key_t = jax.random.fold_in(key0, t)
-
-        def cell(cols_b, vals_b, y_b, mask_b, a_b, w_b):
-            y_b = pvary(y_b, (model_axis,))
-            mask_b = pvary(mask_b, (model_axis,))
-            a_b = pvary(a_b, (model_axis,))
-            w_b = pvary(w_b, daxes)
-            p = axes_index(data_axis)
-            key_p = jax.random.fold_in(key_t, p)
-            dalpha = local_sdca_sparse(
-                loss, cols_b, vals_b, y_b, mask_b, a_b, w_b,
-                lam=lam, n=n, Q=Qn, steps=steps, key=key_p,
-                step_mode=cfg.step_mode, beta=beta, backend=local_backend)
-            # step 6: average the dual deltas of the Q feature blocks
-            a_new = a_b + jax.lax.pmean(dalpha, model_axis) / Pn
-            # step 9: primal-dual map -- scatter-add the cell's
-            # contribution, then reduce over observation partitions
-            contrib = ell_scatter_add(m_q, cols_b, vals_b, a_new * mask_b)
-            w_new = jax.lax.psum(contrib, data_axis) / (lam * n)
-            return a_new, w_new
-
-        return shard_map(
-            cell, mesh,
-            in_specs=(P(data_axis, model_axis), P(data_axis, model_axis),
-                      P(data_axis), P(data_axis), P(data_axis),
-                      P(model_axis)),
-            out_specs=(P(data_axis), P(model_axis)),
-        )(cols, vals, y, mask, alpha, w)
+        (a_new, w_new), _ = run(t, (key0, cols, vals, y, mask),
+                                (alpha, w), {})
+        return a_new, w_new
 
     return jax.jit(step, static_argnums=())
 
 
 def d3ca_shard_map_program(loss: Loss, sdata, cfg: D3CAConfig,
                            *, local_backend: str = "ref",
-                           w0=None, alpha0=None) -> EngineProgram:
-    """shard_map engine.  State: (alpha (n_pad,), w (m_pad,)) sharded.
-    ``sdata`` is a :class:`ShardMapData` or :class:`SparseShardMapData`."""
+                           w0=None, alpha0=None,
+                           staleness: int = 0) -> EngineProgram:
+    """Mesh engine.  State: ((alpha (n_pad,), w (m_pad,)), stale_bufs),
+    all sharded.  ``sdata`` is a :class:`ShardMapData` or
+    :class:`SparseShardMapData`; ``staleness=tau > 0`` selects the
+    bounded-staleness async policy (tau = 0 is the sync engine)."""
+    sparse = isinstance(sdata, SparseShardMapData)
+    cellprog = d3ca_cell_program(
+        loss, cfg, n=sdata.n, n_p=sdata.n_p,
+        m_q=sdata.m_q if sparse else None, sparse=sparse,
+        local_backend=local_backend)
     key0 = jax.random.PRNGKey(cfg.seed)
-    if isinstance(sdata, SparseShardMapData):
-        step = make_d3ca_step_sparse(
-            loss, sdata.mesh, cfg, n=sdata.n, n_p=sdata.n_p, m_q=sdata.m_q,
-            data_axis=sdata.data_axis, model_axis=sdata.model_axis,
-            local_backend=local_backend)
-
-        def run(t, s):
-            return step(t, key0, sdata.cols, sdata.vals, sdata.y,
-                        sdata.mask, *s)
-    else:
-        step = make_d3ca_step(loss, sdata.mesh, cfg, n=sdata.n,
-                              n_p=sdata.n_p, data_axis=sdata.data_axis,
-                              model_axis=sdata.model_axis,
-                              local_backend=local_backend)
-
-        def run(t, s):
-            return step(t, key0, sdata.x, sdata.y, sdata.mask, *s)
+    x_parts = (sdata.cols, sdata.vals) if sparse else (sdata.x,)
+    mdata = (key0, *x_parts, sdata.y, sdata.mask)
     alpha_init = (sdata.zeros_data() if alpha0 is None
                   else sdata.pad_alpha(alpha0))
     w_init = sdata.zeros_model() if w0 is None else sdata.pad_w(w0)
+    step, bufs0 = mesh_program(
+        cellprog, sdata.mesh, mdata, (alpha_init, w_init),
+        data_axis=sdata.data_axis, model_axis=sdata.model_axis,
+        staleness=staleness)
     return EngineProgram(
-        state=(alpha_init, w_init),
-        step=run,
-        w_of=lambda s: s[1][: sdata.m],
-        alpha_of=lambda s: s[0][: sdata.n])
+        state=((alpha_init, w_init), bufs0),
+        step=lambda t, s: step(t, mdata, s),
+        w_of=lambda s: s[0][1][: sdata.m],
+        alpha_of=lambda s: s[0][0][: sdata.n])
 
 
 def d3ca_distributed(loss_name: str, mesh, x, y, mask, cfg: D3CAConfig,

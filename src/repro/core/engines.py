@@ -1,28 +1,39 @@
-"""Engine adapters for the unified solver framework (``repro.core.solver``).
+"""Engine executors for the unified solver framework (``repro.core.solver``).
 
-An *engine* is how the P x Q block grid of the paper is executed:
+An *engine* is how the P x Q block grid of the paper is executed.  Since
+Engine API v2 each solver contributes ONE :class:`CellProgram` -- its
+per-cell step math plus a :class:`~repro.core.comm.CommSchedule`
+declaring every cross-cell reduction as a named collective -- and the
+engines here execute that single program three ways:
 
-  * ``"simulated"``  -- the grid is materialized as leading array axes of a
-    :class:`~repro.core.partition.DoublyPartitioned` and cells run under
-    ``vmap`` on one device (correctness tests, paper-figure benchmarks);
-  * ``"shard_map"``  -- a (data=P, model=Q) device mesh where each device
-    owns one (n_p, m_q) block in HBM and the paper's reductions are mesh
-    collectives (the production path).
+  * ``"simulated"``  -- :func:`grid_program`: the grid is the leading
+    axes of blocked arrays and cells run under nested *named* ``vmap``
+    on one device; the declared collectives become vmap-axis reductions
+    (correctness tests, paper-figure benchmarks);
+  * ``"shard_map"``  -- :func:`mesh_program`: a (data=P, model=Q) device
+    mesh where each device owns one (n_p, m_q) block in HBM and the
+    collectives are mesh reductions, applied synchronously (the
+    production path);
+  * ``"async"``      -- :func:`mesh_program` with ``staleness=tau``: the
+    same mesh execution under a :class:`~repro.core.comm.StaleComm`,
+    which applies every declared reduction with bounded staleness tau
+    via FIFO buffers carried in the engine state.  ``tau = 0``
+    reproduces ``"shard_map"`` exactly (same jaxpr).
 
-Each algorithm contributes one :class:`EngineProgram` per engine -- the
-initial state, a jitted outer step, and extractors for the global primal
-(and dual) iterates.  Everything else (the outer loop, history, early
-stopping, warm starts) lives once in the shared driver.
+The executors produce an :class:`EngineProgram` -- initial state, jitted
+outer step, extractors for the global primal (and dual) iterates.
+Everything else (the outer loop, history, early stopping, warm starts)
+lives once in the shared driver.
 
-Both engines pad the feature dimension to a multiple of P*Q (columns of
+All engines pad the feature dimension to a multiple of P*Q (columns of
 zeros are inert under every update rule), so a cell sees bit-identical
-blocks regardless of engine and the two executions agree to float
+blocks regardless of engine and the executions agree to float
 tolerance.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,8 +41,9 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from .comm import CommSchedule, ShapeProbeComm, StaleComm, SyncComm
 from .partition import _ceil_to
-from .util import as_axes, axes_size
+from .util import as_axes, axes_size, pvary, shard_map
 
 
 @dataclasses.dataclass
@@ -234,6 +246,246 @@ def _putter(mesh):
     def put(a, spec):
         return jax.device_put(a, NamedSharding(mesh, spec))
     return put
+
+
+# ---------------------------------------------------------------------------
+# Engine API v2: one CellProgram per solver, executed by generic engines
+# ---------------------------------------------------------------------------
+
+#: a *dim-spec* annotates one operand: a tuple over its leading array
+#: dims naming the logical grid axis each dim is split over ("data",
+#: "model", or None for unsplit dims); trailing dims are unsplit.  The
+#: same spec drives the shard_map PartitionSpec, the grid engine's vmap
+#: in_axes, and which axes an input must be pvary-promoted over.
+DimSpec = Tuple[Optional[str], ...]
+
+
+def _is_dimspec(x) -> bool:
+    return isinstance(x, tuple) and all(
+        e is None or isinstance(e, str) for e in x)
+
+
+def _spec_leaves(specs):
+    return jax.tree_util.tree_leaves(specs, is_leaf=_is_dimspec)
+
+
+@dataclasses.dataclass(frozen=True)
+class CellProgram:
+    """One solver's per-cell step math plus its communication contract.
+
+    ``cell(comm, t, data, state) -> state`` operates on PER-CELL arrays
+    (the (n_p, m_q) block a device owns) and performs every cross-cell
+    reduction through the :class:`~repro.core.comm.Comm` it is handed --
+    never via inline ``lax.psum``.  ``data_specs`` / ``state_specs`` are
+    pytrees matching ``data`` / ``state`` whose leaves are dim-specs
+    (see :data:`DimSpec`).  One CellProgram serves every engine.
+    """
+
+    schedule: CommSchedule
+    cell: Callable[..., Any]
+    data_specs: Any
+    state_specs: Any
+
+
+# -- grid engine (named vmap on one device) ---------------------------------
+
+_GRID_DATA, _GRID_MODEL = "grid_data", "grid_model"
+
+
+def grid_program(cellprog: CellProgram, Pn: int, Qn: int):
+    """Named-``vmap`` executor: the P x Q grid is the leading block axes
+    of the operands and the declared collectives run as vmap-axis
+    reductions.  Returns a jitted ``step(t, data, state) -> state``
+    where ``data``/``state`` are BLOCKED pytrees: each leaf carries one
+    leading block axis per logical axis in its dim-spec, in
+    (data, model) order, with the per-cell extent left in place (so a
+    cell sees exactly the array a shard_map device would own).
+    """
+    axis_map = {"data": (_GRID_DATA,), "model": (_GRID_MODEL,)}
+    sizes = {"data": Pn, "model": Qn}
+    sched = cellprog.schedule
+
+    def one_cell(t, d, s):
+        comm = SyncComm(sched, axis_map, sizes)
+        out = cellprog.cell(comm, t, d, s)
+        comm.finalize()
+        return out
+
+    def in_axes(specs, axis):
+        return jax.tree_util.tree_map(
+            lambda ds: 0 if axis in ds else None, specs,
+            is_leaf=_is_dimspec)
+
+    inner = jax.vmap(one_cell,
+                     in_axes=(None, in_axes(cellprog.data_specs, "model"),
+                              in_axes(cellprog.state_specs, "model")),
+                     axis_name=_GRID_MODEL)
+    outer = jax.vmap(inner,
+                     in_axes=(None, in_axes(cellprog.data_specs, "data"),
+                              in_axes(cellprog.state_specs, "data")),
+                     axis_name=_GRID_DATA)
+
+    def step(t, data, state):
+        out = outer(t, data, state)         # every leaf gains (P, Q) leading
+        leaves, treedef = jax.tree_util.tree_flatten(out)
+        spec_leaves = _spec_leaves(cellprog.state_specs)
+        # collectives replicate results along the reduced axis exactly
+        # (every cell sees the same psum), so dropping replicas is exact
+        kept = []
+        for leaf, ds in zip(leaves, spec_leaves):
+            if "data" not in ds:
+                leaf = leaf[0]
+                if "model" not in ds:
+                    leaf = leaf[0]
+            elif "model" not in ds:
+                leaf = leaf[:, 0]
+            kept.append(leaf)
+        return jax.tree_util.tree_unflatten(treedef, kept)
+
+    return jax.jit(step)
+
+
+# -- mesh engines (shard_map; sync and bounded-staleness) -------------------
+
+def _mesh_pspec(ds: DimSpec, daxes, model_axis):
+    entries = []
+    for a in ds:
+        if a == "data":
+            entries.append(daxes if len(daxes) > 1 else daxes[0])
+        elif a == "model":
+            entries.append(model_axis)
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+def _pvary_missing(tree_vals, specs, axis_map):
+    """Promote operands to fully varying over the mesh axes their
+    dim-spec does not split them over (replicated inputs must be
+    promoted before mixing with varying values on recent JAX)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree_vals)
+    out = []
+    for v, ds in zip(leaves, _spec_leaves(specs)):
+        missing = ()
+        if "data" not in ds:
+            missing += axis_map["data"]
+        if "model" not in ds:
+            missing += axis_map["model"]
+        out.append(pvary(v, missing))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def mesh_step_fn(cellprog: CellProgram, mesh, *, data_axis="data",
+                 model_axis: str = "model", staleness: int = 0):
+    """Raw (unjitted) mesh executor.
+
+    Returns ``step(t, data, state, bufs) -> (state, bufs)`` running the
+    cell once per device of the (data=P, model=Q) mesh under shard_map.
+    With ``staleness == 0`` the declared collectives apply synchronously
+    (:class:`SyncComm`); with ``staleness = tau > 0`` they apply through
+    :class:`StaleComm` FIFO buffers -- ``bufs`` maps each collective
+    name to a ``(P, Q, tau, *cell_result_shape)`` array sharded over
+    (data, model), i.e. one private ring per cell.
+    """
+    daxes = as_axes(data_axis)
+    axis_map = {"data": daxes, "model": (model_axis,)}
+    sizes = {"data": axes_size(mesh, data_axis),
+             "model": axes_size(mesh, model_axis)}
+    sched = cellprog.schedule
+    dspec = daxes if len(daxes) > 1 else daxes[0]
+
+    def pspecs(specs):
+        return jax.tree_util.tree_map(
+            lambda ds: _mesh_pspec(ds, daxes, model_axis), specs,
+            is_leaf=_is_dimspec)
+
+    data_pspecs = pspecs(cellprog.data_specs)
+    state_pspecs = pspecs(cellprog.state_specs)
+    buf_pspecs = ({name: P(dspec, model_axis) for name in sched.names}
+                  if staleness else {})
+
+    def kernel(t, data, state, bufs):
+        data = _pvary_missing(data, cellprog.data_specs, axis_map)
+        state = _pvary_missing(state, cellprog.state_specs, axis_map)
+        t = pvary(t, daxes + (model_axis,))
+        if staleness:
+            comm = StaleComm(sched, axis_map, sizes, tau=staleness, t=t,
+                             bufs={k: b[0, 0] for k, b in bufs.items()})
+        else:
+            comm = SyncComm(sched, axis_map, sizes)
+        out = cellprog.cell(comm, t, data, state)
+        comm.finalize()
+        return out, {k: b[None, None] for k, b in comm.bufs_out.items()}
+
+    return shard_map(
+        kernel, mesh,
+        in_specs=(P(), data_pspecs, state_pspecs, buf_pspecs),
+        out_specs=(state_pspecs, buf_pspecs))
+
+
+def probe_collective_shapes(cellprog: CellProgram, data, state, *,
+                            sizes) -> dict:
+    """Per-cell result aval of every declared collective, via one
+    ``eval_shape`` trace of the cell under a ShapeProbeComm (no mesh or
+    devices needed)."""
+    def cell_aval(arr, ds):
+        arr = jnp.asarray(arr) if not hasattr(arr, "shape") else arr
+        shape = list(arr.shape)
+        for i, a in enumerate(ds):
+            if a:
+                shape[i] //= sizes[a]
+        return jax.ShapeDtypeStruct(tuple(shape), arr.dtype)
+
+    def avals(tree_vals, specs):
+        leaves, treedef = jax.tree_util.tree_flatten(tree_vals)
+        out = [cell_aval(v, ds)
+               for v, ds in zip(leaves, _spec_leaves(specs))]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    record: dict = {}
+    probe = ShapeProbeComm(cellprog.schedule,
+                           {"data": ("data",), "model": ("model",)}, sizes,
+                           record)
+
+    def run(t, d, s):
+        out = cellprog.cell(probe, t, d, s)
+        probe.finalize()
+        return out
+
+    jax.eval_shape(run, jax.ShapeDtypeStruct((), jnp.int32),
+                   avals(data, cellprog.data_specs),
+                   avals(state, cellprog.state_specs))
+    return record
+
+
+def mesh_program(cellprog: CellProgram, mesh, data, state0, *,
+                 data_axis="data", model_axis: str = "model",
+                 staleness: int = 0):
+    """Bind a CellProgram to a mesh: returns ``(step, bufs0)`` where
+    ``step(t, data, (state, bufs))`` is jitted and ``bufs0`` holds the
+    zero-initialized staleness rings ({} when ``staleness == 0``, in
+    which case the jaxpr is exactly the sync engine's)."""
+    daxes = as_axes(data_axis)
+    sizes = {"data": axes_size(mesh, data_axis),
+             "model": axes_size(mesh, model_axis)}
+    raw = mesh_step_fn(cellprog, mesh, data_axis=data_axis,
+                       model_axis=model_axis, staleness=staleness)
+    bufs0 = {}
+    if staleness > 0:
+        record = probe_collective_shapes(cellprog, data, state0, sizes=sizes)
+        dspec = daxes if len(daxes) > 1 else daxes[0]
+        put = _putter(mesh)
+        for name, aval in record.items():
+            shape = (sizes["data"], sizes["model"], staleness) + aval.shape
+            bufs0[name] = put(jnp.zeros(shape, aval.dtype),
+                              P(dspec, model_axis))
+
+    @jax.jit
+    def step(t, data, full_state):
+        state, bufs = full_state
+        return raw(t, data, state, bufs)
+
+    return step, bufs0
 
 
 def prepare_shard_map(mesh, X, y, *, data_axis="data", model_axis="model",

@@ -261,19 +261,6 @@ def partition_sparse(X, y, P: int, Q: int, *, m_multiple: int | None = None,
         n=n, m=m, m_q=m_pad // Q, P=P, Q=Q)
 
 
-def subblock_slices(m_q: int, P: int):
-    """RADiSA pre-splits every feature block [., q] into P sub-blocks.
-
-    Returns the sub-block width (padded so P | m_q is not required at call
-    sites -- callers should pass an m_q that P divides; ``partition`` +
-    config code arranges this).
-    """
-    if m_q % P != 0:
-        raise ValueError(f"m_q={m_q} must be divisible by P={P} for RADiSA; "
-                         "repartition with padding first")
-    return m_q // P
-
-
 def numpy_partition_indices(n: int, P: int):
     """Host-side helper: index ranges of each observation partition."""
     n_pad = _ceil_to(n, P)

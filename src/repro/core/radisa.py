@@ -2,27 +2,31 @@
 
 Primal SGD x CD hybrid with SVRG variance reduction in the doubly
 distributed setting.  The cell-local inner loop is ``local.local_svrg``
-(pure jnp or the Pallas SVRG kernel, selected by ``local_backend``); the
-engines mirror ``d3ca.py`` and are exposed as ``EngineProgram`` builders
-for the unified solver framework.
+(pure jnp or the Pallas SVRG kernel, selected by ``local_backend``).
+Since Engine API v2 the algorithm is ONE
+:class:`~repro.core.engines.CellProgram` whose CommSchedule names the
+paper's communication pattern (per outer iteration)::
 
-Communication pattern (per outer iteration):
-  1. anchor pass: z = X w_tilde        -> psum over "model" (row inner
-     products need every feature block)
-  2. full gradient mu_tilde            -> psum over "data" (column blocks
-     need every observation partition)
-  3. L local SVRG steps on the assigned sub-block -- NO communication
-  4. concatenate sub-blocks            -> psum of disjoint deltas over "data"
+    CommSchedule().psum("z", axis="model")     # 1. anchor pass: row inner
+                                               #    products need every
+                                               #    feature block
+                  .psum("grad", axis="data")   # 2. full gradient: column
+                                               #    blocks need every
+                                               #    observation partition
+                  # 3. L local SVRG steps -- NO communication
+                  .psum("dw", axis="data")     # 4. concatenate disjoint
+                                               #    sub-block deltas
+                  # (variant="avg" declares pmean("w_avg") instead of "dw")
 
 ``variant="avg"`` implements RADiSA-avg: sub-blocks fully overlap (every
 cell updates the whole local feature block) and solutions are averaged.
 
 RADiSA pre-splits each feature block into P sub-blocks, so P must divide
-m_q.  The simulated engine repartitions with inert zero-column padding
-when it does not; ``make_radisa_step`` fails loudly instead (the data is
-already laid out across devices -- see the ValueError below).  The
-unified ``Solver`` API pads the feature dimension to a multiple of P*Q
-up front for BOTH engines, so the constraint never binds there.
+m_q.  The builders fail loudly instead of silently truncating feature
+columns; the unified ``Solver`` API pads the feature dimension to a
+multiple of P*Q up front for every engine, so the constraint never binds
+there.  ``radisa_simulated`` repartitions with inert zero-column padding
+when handed a non-dividing grid directly.
 """
 from __future__ import annotations
 
@@ -31,15 +35,15 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
-from .engines import (EngineProgram, SparseShardMapData,
-                      drive_with_callback)
+from .comm import CommSchedule
+from .engines import (CellProgram, EngineProgram, SparseShardMapData,
+                      drive_with_callback, grid_program, mesh_program,
+                      mesh_step_fn)
 from .local import local_svrg, local_svrg_sparse
 from .losses import Loss, get_loss
 from .partition import (DoublyPartitioned, SparseDoublyPartitioned,
-                        ell_gather, ell_scatter_add, subblock_slices)
-from .util import pvary, shard_map
+                        ell_gather, ell_scatter_add)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,34 +60,100 @@ class RADiSAConfig:
         return self.gamma / (1.0 + jnp.sqrt(jnp.maximum(t - 1.0, 0.0)))
 
 
-def _anchor_quantities(loss: Loss, data: DoublyPartitioned, w_blocks, lam):
-    """z = X w_tilde (P, n_p) and mu = grad F(w_tilde) (Q, m_q), simulated."""
-    z = jnp.einsum("pqnm,qm->pn", data.x_blocks, w_blocks)
-    gz = loss.grad(z, data.y_blocks) * data.mask          # (P, n_p)
-    mu = jnp.einsum("pn,pqnm->qm", gz, data.x_blocks) / data.n \
-        + lam * w_blocks
-    return z, mu
+def radisa_schedule(variant: str = "block") -> CommSchedule:
+    """RADiSA's reduction points; the recombine op depends on the
+    variant (disjoint sub-block deltas vs full-block average)."""
+    sched = (CommSchedule()
+             .psum("z", axis="model")
+             .psum("grad", axis="data"))
+    if variant == "avg":
+        return sched.pmean("w_avg", axis="data")
+    return sched.psum("dw", axis="data")
 
 
-def _anchor_quantities_sparse(loss: Loss, data: SparseDoublyPartitioned,
-                              w_blocks, lam):
-    """Sparse-cell anchor pass: the row inner products become per-row
-    gathers of w and the column gradient a scatter-add over rows."""
-    m_q = data.m_q
+def _check_subblocks(m_q: int, Pn: int, avg: bool):
+    if not avg and m_q % Pn:
+        raise ValueError(
+            f"RADiSA pre-splits each feature block into P={Pn} sub-blocks, "
+            f"but P does not divide m_q={m_q}; truncating would silently "
+            f"drop the trailing {m_q % Pn} feature columns of every block. "
+            "Pad the feature dimension to a multiple of P*Q first -- the "
+            "unified Solver API does this via "
+            "partition(..., m_multiple=P*Q) / prepare_shard_map(..., "
+            "m_multiple=P*Q) -- or use variant='avg'.")
 
-    def z_block(cols_q, vals_q, w_q):    # (P, n_p, k), (P, n_p, k), (m_q,)
-        return ell_gather(w_q, cols_q, vals_q)            # (P, n_p)
-    z = jax.vmap(z_block, in_axes=(1, 1, 0))(
-        data.cols, data.vals, w_blocks).sum(axis=0)       # (P, n_p)
-    gz = loss.grad(z, data.y_blocks) * data.mask          # (P, n_p)
 
-    def mu_block(cols_q, vals_q):
-        def one(cols_pq, vals_pq, g_p):
-            return ell_scatter_add(m_q, cols_pq, vals_pq, g_p)
-        return jax.vmap(one)(cols_q, vals_q, gz).sum(axis=0)
-    mu = jax.vmap(mu_block, in_axes=(1, 1))(data.cols, data.vals) / data.n \
-        + lam * w_blocks
-    return z, mu
+def radisa_cell_program(loss: Loss, cfg: RADiSAConfig, *, n: int, n_p: int,
+                        m_q: int, sparse: bool = False,
+                        local_backend: str = "ref") -> CellProgram:
+    """The ONE RADiSA program every engine executes.
+
+    Per-cell data: ``(key0, x_b[, vals_b], y_b, mask_b)``; per-cell
+    state: ``w_b (m_q,)``.  The sub-block window of the sparse cell is
+    selected inside the local solver by masking entry columns (an ELL
+    row cannot be column-sliced)."""
+    lam = cfg.lam
+    L = cfg.L or n_p
+    avg = cfg.variant == "avg"
+
+    def cell(comm, t, data, state):
+        if sparse:
+            key0, cols_b, vals_b, y_b, mask_b = data
+            x_parts = (cols_b, vals_b)
+            local = local_svrg_sparse
+        else:
+            key0, x_b, y_b, mask_b = data
+            x_parts = (x_b,)
+            local = local_svrg
+        w_b = state
+        Pn = comm.axis_size("data")
+        Qn = comm.axis_size("model")
+        m_sub = m_q if avg else m_q // Pn
+        eta = cfg.eta(t)
+        key_t = jax.random.fold_in(key0, t)
+        # (1) anchor inner products, reduced across feature blocks
+        z_local = (ell_gather(w_b, cols_b, vals_b) if sparse
+                   else x_b @ w_b)
+        z = comm("z", z_local)                               # (n_p,)
+        # (2) full gradient of F at the anchor, reduced across rows
+        gz = loss.grad(z, y_b) * mask_b
+        gcol = (ell_scatter_add(m_q, cols_b, vals_b, gz) if sparse
+                else gz @ x_b)
+        mu = comm("grad", gcol) / n + lam * w_b              # (m_q,)
+        # (3) sub-block assignment (shared permutation) + local SVRG
+        perm = jax.random.permutation(jax.random.fold_in(key_t, 0), Pn)
+        p = comm.axis_index("data")
+        q = comm.axis_index("model")
+        key_pq = jax.random.fold_in(jax.random.fold_in(key_t, 1),
+                                    p * Qn + q)
+        s = perm[p]                                   # assigned sub-block
+        lo = s * m_sub
+        if avg:
+            lo_arg, w_anchor, mu_sub = None, w_b, mu
+        else:
+            # NOTE: the sub-block columns are sliced per sampled ROW
+            # inside local_svrg (lo=...), never as a (n_p, m_sub)
+            # block -- see local_svrg's docstring for why.
+            lo_arg = lo
+            w_anchor = jax.lax.dynamic_slice(w_b, (lo,), (m_sub,))
+            mu_sub = jax.lax.dynamic_slice(mu, (lo,), (m_sub,))
+        w_new = local(loss, *x_parts, y_b, mask_b, z, w_anchor, mu_sub,
+                      lam=lam, L=L, eta=eta, key=key_pq, lo=lo_arg,
+                      backend=local_backend)
+        # (4) recombine
+        if avg:
+            # RADiSA-avg: average the P overlapping solutions per block
+            return comm("w_avg", w_new)
+        delta = jnp.zeros_like(w_b)
+        delta = jax.lax.dynamic_update_slice(delta, w_new - w_anchor, (lo,))
+        return w_b + comm("dw", delta)
+
+    x_specs = ((("data", "model"), ("data", "model")) if sparse
+               else (("data", "model"),))
+    data_specs = ((),) + x_specs + (("data",), ("data",))
+    state_specs = ("model",)
+    return CellProgram(radisa_schedule(cfg.variant), cell, data_specs,
+                       state_specs)
 
 
 # ----------------------------------------------------------------------------
@@ -94,70 +164,27 @@ def radisa_simulated_program(loss: Loss, data: DoublyPartitioned,
                              cfg: RADiSAConfig, *,
                              local_backend: str = "ref",
                              w0=None) -> EngineProgram:
-    """vmap-over-cells engine.  State: w_blocks (Q, m_q).
+    """Named-vmap grid engine.  State: w_blocks (Q, m_q).
 
     Requires P | m_q (pre-pad with ``partition(..., m_multiple=P*Q)``).
     ``data`` may be dense (:class:`DoublyPartitioned`) or sparse
     (:class:`SparseDoublyPartitioned`, padded-ELL cells)."""
     sparse = isinstance(data, SparseDoublyPartitioned)
     Pn, Qn = data.P, data.Q
-    lam = cfg.lam
-    L = cfg.L or data.n_p
-    m_sub = subblock_slices(data.m_q, Pn)
+    _check_subblocks(data.m_q, Pn, cfg.variant == "avg")
+    cellprog = radisa_cell_program(loss, cfg, n=data.n, n_p=data.n_p,
+                                   m_q=data.m_q, sparse=sparse,
+                                   local_backend=local_backend)
     key0 = jax.random.PRNGKey(cfg.seed)
-    local = local_svrg_sparse if sparse else local_svrg
-
-    @jax.jit
-    def outer(t, w_blocks):
-        eta = cfg.eta(t)
-        key_t = jax.random.fold_in(key0, t)
-        if sparse:
-            z, mu = _anchor_quantities_sparse(loss, data, w_blocks, lam)
-        else:
-            z, mu = _anchor_quantities(loss, data, w_blocks, lam)
-        # step 5: non-overlapping random sub-block exchange, shared perm
-        perm = jax.random.permutation(jax.random.fold_in(key_t, 0), Pn)
-        key_cells = jax.random.fold_in(key_t, 1)
-
-        def cell(p, q):
-            key_pq = jax.random.fold_in(key_cells, p * Qn + q)
-            s = perm[p]                                   # assigned sub-block
-            lo = s * m_sub
-            w_anchor = jax.lax.dynamic_slice(w_blocks[q], (lo,), (m_sub,))
-            mu_sub = jax.lax.dynamic_slice(mu[q], (lo,), (m_sub,))
-            lo_arg = lo
-            if cfg.variant == "avg":
-                lo_arg, w_anchor, mu_sub = None, w_blocks[q], mu[q]
-            x_cell = ((data.cols[p, q], data.vals[p, q]) if sparse
-                      else (data.x_blocks[p, q],))
-            w_new = local(loss, *x_cell, data.y_blocks[p],
-                          data.mask[p], z[p], w_anchor, mu_sub,
-                          lam=lam, L=L, eta=eta, key=key_pq, lo=lo_arg,
-                          backend=local_backend)
-            return w_new
-
-        w_cells = jax.vmap(lambda p: jax.vmap(lambda q: cell(p, q))(
-            jnp.arange(Qn)))(jnp.arange(Pn))              # (P, Q, m_sub|m_q)
-
-        if cfg.variant == "avg":
-            # RADiSA-avg: average the P overlapping solutions per block
-            return w_cells.mean(axis=0)                   # (Q, m_q)
-
-        # step 12: concatenate -- scatter each cell's sub-block back
-        def place(q):
-            blk = jnp.zeros((data.m_q,))
-            def body(blk, p):
-                lo = perm[p] * m_sub
-                return jax.lax.dynamic_update_slice(blk, w_cells[p, q], (lo,)), None
-            blk, _ = jax.lax.scan(body, blk, jnp.arange(Pn))
-            return blk
-        return jax.vmap(place)(jnp.arange(Qn))
+    x_parts = (data.cols, data.vals) if sparse else (data.x_blocks,)
+    gdata = (key0, *x_parts, data.y_blocks, data.mask)
+    step = grid_program(cellprog, Pn, Qn)
 
     w_init = (jnp.zeros((Qn, data.m_q)) if w0 is None
               else data.w_to_blocks(jnp.asarray(w0)))
     return EngineProgram(
         state=w_init,
-        step=outer,
+        step=lambda t, s: step(t, gdata, s),
         w_of=data.w_from_blocks)
 
 
@@ -166,7 +193,7 @@ def radisa_simulated(loss_name: str, data: DoublyPartitioned,
                      local_backend: str = "ref"):
     loss = get_loss(loss_name)
     Pn, Qn = data.P, data.Q
-    if data.m_q % Pn:
+    if data.m_q % Pn and cfg.variant != "avg":
         # RADiSA pre-splits each feature block into P sub-blocks; repartition
         # with extra (inert, all-zero) column padding so that P | m_q.
         from .partition import partition as _partition
@@ -190,80 +217,29 @@ def radisa_simulated(loss_name: str, data: DoublyPartitioned,
 
 
 # ----------------------------------------------------------------------------
-# shard_map engine (production)
+# mesh engines (shard_map sync + bounded-staleness async)
 # ----------------------------------------------------------------------------
 
 def make_radisa_step(loss: Loss, mesh, cfg: RADiSAConfig, *, n: int, n_p: int,
                      m_q: int, data_axis: str = "data",
                      model_axis: str = "model",
                      local_backend: str = "ref"):
-    """Distributed RADiSA outer step.
+    """Distributed RADiSA outer step (sync reductions).
 
     Layouts: x (n, m) sharded (data, model); y/mask (n,) (data,);
     w (m,) (model,) replicated over data.
     """
-    from .util import as_axes, axes_index, axes_size
-    lam = cfg.lam
-    daxes = as_axes(data_axis)
-    Pn, Qn = axes_size(mesh, data_axis), axes_size(mesh, model_axis)
-    L = cfg.L or n_p
-    avg = cfg.variant == "avg"
-    if not avg and m_q % Pn:
-        raise ValueError(
-            f"RADiSA pre-splits each feature block into P={Pn} sub-blocks, "
-            f"but P does not divide m_q={m_q}; truncating would silently "
-            f"drop the trailing {m_q % Pn} feature columns of every block. "
-            "Pad the feature dimension to a multiple of P*Q first (the "
-            "unified Solver API and radisa_simulated do this), or use "
-            "variant='avg'.")
-    m_sub = m_q // Pn
+    from .util import axes_size
+    Pn = axes_size(mesh, data_axis)
+    _check_subblocks(m_q, Pn, cfg.variant == "avg")
+    cellprog = radisa_cell_program(loss, cfg, n=n, n_p=n_p, m_q=m_q,
+                                   local_backend=local_backend)
+    run = mesh_step_fn(cellprog, mesh, data_axis=data_axis,
+                       model_axis=model_axis)
 
     def step(t, key0, x, y, mask, w):
-        eta = cfg.eta(t)
-        key_t = jax.random.fold_in(key0, t)
-
-        def cell(x_b, y_b, mask_b, w_b):
-            y_b = pvary(y_b, (model_axis,))
-            mask_b = pvary(mask_b, (model_axis,))
-            w_b = pvary(w_b, daxes)
-            p = axes_index(data_axis)
-            q = axes_index(model_axis)
-            # (1) anchor inner products, reduced across feature blocks
-            z = jax.lax.psum(x_b @ w_b, model_axis)            # (n_p,)
-            # (2) full gradient of F at the anchor, reduced across rows
-            gz = loss.grad(z, y_b) * mask_b
-            mu = jax.lax.psum(gz @ x_b, data_axis) / n + lam * w_b
-            # (3) sub-block assignment (shared permutation) + local SVRG
-            perm = jax.random.permutation(jax.random.fold_in(key_t, 0), Pn)
-            key_pq = jax.random.fold_in(jax.random.fold_in(key_t, 1),
-                                        p * Qn + q)
-            s = perm[p]
-            lo = s * m_sub
-            if avg:
-                lo_arg, w_anchor, mu_sub = None, w_b, mu
-            else:
-                # NOTE: the sub-block columns are sliced per sampled ROW
-                # inside local_svrg (lo=...), never as a (n_p, m_sub)
-                # block -- see local_svrg's docstring for why.
-                lo_arg = lo
-                w_anchor = jax.lax.dynamic_slice(w_b, (lo,), (m_sub,))
-                mu_sub = jax.lax.dynamic_slice(mu, (lo,), (m_sub,))
-            w_new = local_svrg(loss, x_b, y_b, mask_b, z, w_anchor, mu_sub,
-                               lam=lam, L=L, eta=eta, key=key_pq, lo=lo_arg,
-                               backend=local_backend)
-            # (4) recombine
-            if avg:
-                return jax.lax.pmean(w_new, data_axis)
-            delta = jnp.zeros_like(w_b)
-            delta = jax.lax.dynamic_update_slice(delta, w_new - w_anchor, (lo,))
-            return w_b + jax.lax.psum(delta, data_axis)
-
-        return shard_map(
-            cell, mesh,
-            in_specs=(P(data_axis, model_axis), P(data_axis), P(data_axis),
-                      P(model_axis)),
-            out_specs=P(model_axis),
-        )(x, y, mask, w)
+        w_new, _ = run(t, (key0, x, y, mask), w, {})
+        return w_new
 
     return jax.jit(step)
 
@@ -272,110 +248,48 @@ def make_radisa_step_sparse(loss: Loss, mesh, cfg: RADiSAConfig, *, n: int,
                             n_p: int, m_q: int, data_axis: str = "data",
                             model_axis: str = "model",
                             local_backend: str = "ref"):
-    """Sparse-cell variant of :func:`make_radisa_step`.
-
-    The device-local block is the padded-ELL pair cols/vals (n_p, k)
-    with block-local column ids; the anchor pass becomes a gather-matvec
-    (rows) and a scatter-add (columns), and the sub-block window is
-    selected inside the local solver by masking entry columns (the ELL
-    row cannot be column-sliced).
-    """
-    from .util import as_axes, axes_index, axes_size
-    lam = cfg.lam
-    daxes = as_axes(data_axis)
-    Pn, Qn = axes_size(mesh, data_axis), axes_size(mesh, model_axis)
-    L = cfg.L or n_p
-    avg = cfg.variant == "avg"
-    if not avg and m_q % Pn:
-        raise ValueError(
-            f"RADiSA pre-splits each feature block into P={Pn} sub-blocks, "
-            f"but P does not divide m_q={m_q}; truncating would silently "
-            f"drop the trailing {m_q % Pn} feature columns of every block. "
-            "Pad the feature dimension to a multiple of P*Q first (the "
-            "unified Solver API does this), or use variant='avg'.")
-    m_sub = m_q // Pn
+    """Sparse-cell variant of :func:`make_radisa_step`: the anchor pass
+    becomes a gather-matvec (rows) and a scatter-add (columns)."""
+    from .util import axes_size
+    Pn = axes_size(mesh, data_axis)
+    _check_subblocks(m_q, Pn, cfg.variant == "avg")
+    cellprog = radisa_cell_program(loss, cfg, n=n, n_p=n_p, m_q=m_q,
+                                   sparse=True, local_backend=local_backend)
+    run = mesh_step_fn(cellprog, mesh, data_axis=data_axis,
+                       model_axis=model_axis)
 
     def step(t, key0, cols, vals, y, mask, w):
-        eta = cfg.eta(t)
-        key_t = jax.random.fold_in(key0, t)
-
-        def cell(cols_b, vals_b, y_b, mask_b, w_b):
-            y_b = pvary(y_b, (model_axis,))
-            mask_b = pvary(mask_b, (model_axis,))
-            w_b = pvary(w_b, daxes)
-            p = axes_index(data_axis)
-            q = axes_index(model_axis)
-            # (1) anchor inner products: per-row gather of the local w
-            # block, reduced across feature blocks
-            z = jax.lax.psum(ell_gather(w_b, cols_b, vals_b), model_axis)
-            # (2) full anchor gradient: scatter-add over the cell's
-            # entries, reduced across observation partitions
-            gz = loss.grad(z, y_b) * mask_b
-            mu = jax.lax.psum(ell_scatter_add(m_q, cols_b, vals_b, gz),
-                              data_axis) / n + lam * w_b
-            # (3) sub-block assignment (shared permutation) + local SVRG
-            perm = jax.random.permutation(jax.random.fold_in(key_t, 0), Pn)
-            key_pq = jax.random.fold_in(jax.random.fold_in(key_t, 1),
-                                        p * Qn + q)
-            s = perm[p]
-            lo = s * m_sub
-            if avg:
-                lo_arg, w_anchor, mu_sub = None, w_b, mu
-            else:
-                lo_arg = lo
-                w_anchor = jax.lax.dynamic_slice(w_b, (lo,), (m_sub,))
-                mu_sub = jax.lax.dynamic_slice(mu, (lo,), (m_sub,))
-            w_new = local_svrg_sparse(
-                loss, cols_b, vals_b, y_b, mask_b, z, w_anchor, mu_sub,
-                lam=lam, L=L, eta=eta, key=key_pq, lo=lo_arg,
-                backend=local_backend)
-            # (4) recombine
-            if avg:
-                return jax.lax.pmean(w_new, data_axis)
-            delta = jnp.zeros_like(w_b)
-            delta = jax.lax.dynamic_update_slice(delta, w_new - w_anchor,
-                                                 (lo,))
-            return w_b + jax.lax.psum(delta, data_axis)
-
-        return shard_map(
-            cell, mesh,
-            in_specs=(P(data_axis, model_axis), P(data_axis, model_axis),
-                      P(data_axis), P(data_axis), P(model_axis)),
-            out_specs=P(model_axis),
-        )(cols, vals, y, mask, w)
+        w_new, _ = run(t, (key0, cols, vals, y, mask), w, {})
+        return w_new
 
     return jax.jit(step)
 
 
 def radisa_shard_map_program(loss: Loss, sdata, cfg: RADiSAConfig, *,
                              local_backend: str = "ref",
-                             w0=None) -> EngineProgram:
-    """shard_map engine.  State: w (m_pad,) sharded over the model axis.
-    ``sdata`` is a :class:`ShardMapData` or :class:`SparseShardMapData`."""
+                             w0=None, staleness: int = 0) -> EngineProgram:
+    """Mesh engine.  State: (w (m_pad,) sharded over model, stale_bufs).
+    ``sdata`` is a :class:`ShardMapData` or :class:`SparseShardMapData`;
+    ``staleness=tau > 0`` selects the bounded-staleness async policy."""
+    from .util import axes_size
+    sparse = isinstance(sdata, SparseShardMapData)
+    Pn = axes_size(sdata.mesh, sdata.data_axis)
+    _check_subblocks(sdata.m_q, Pn, cfg.variant == "avg")
+    cellprog = radisa_cell_program(
+        loss, cfg, n=sdata.n, n_p=sdata.n_p, m_q=sdata.m_q, sparse=sparse,
+        local_backend=local_backend)
     key0 = jax.random.PRNGKey(cfg.seed)
-    if isinstance(sdata, SparseShardMapData):
-        step = make_radisa_step_sparse(
-            loss, sdata.mesh, cfg, n=sdata.n, n_p=sdata.n_p, m_q=sdata.m_q,
-            data_axis=sdata.data_axis, model_axis=sdata.model_axis,
-            local_backend=local_backend)
-
-        def run(t, w):
-            return step(t, key0, sdata.cols, sdata.vals, sdata.y,
-                        sdata.mask, w)
-    else:
-        step = make_radisa_step(loss, sdata.mesh, cfg, n=sdata.n,
-                                n_p=sdata.n_p, m_q=sdata.m_q,
-                                data_axis=sdata.data_axis,
-                                model_axis=sdata.model_axis,
-                                local_backend=local_backend)
-
-        def run(t, w):
-            return step(t, key0, sdata.x, sdata.y, sdata.mask, w)
+    x_parts = (sdata.cols, sdata.vals) if sparse else (sdata.x,)
+    mdata = (key0, *x_parts, sdata.y, sdata.mask)
     w_init = sdata.zeros_model() if w0 is None else sdata.pad_w(w0)
+    step, bufs0 = mesh_program(
+        cellprog, sdata.mesh, mdata, w_init,
+        data_axis=sdata.data_axis, model_axis=sdata.model_axis,
+        staleness=staleness)
     return EngineProgram(
-        state=w_init,
-        step=run,
-        w_of=lambda w: w[: sdata.m])
+        state=(w_init, bufs0),
+        step=lambda t, s: step(t, mdata, s),
+        w_of=lambda s: s[0][: sdata.m])
 
 
 def radisa_distributed(loss_name: str, mesh, x, y, mask, cfg: RADiSAConfig,

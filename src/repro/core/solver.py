@@ -7,9 +7,15 @@ This module provides that story once:
 
   * a :class:`Solver` protocol with a registry --
     ``get_solver("d3ca" | "radisa" | "admm")`` returns the solver class;
-  * three orthogonal knobs threaded end-to-end:
-      - ``engine="simulated" | "shard_map"``  -- vmap grid on one device
-        vs one block per device on a (data=P, model=Q) mesh;
+  * four orthogonal knobs threaded end-to-end:
+      - ``engine="simulated" | "shard_map" | "async"``  -- vmap grid on
+        one device, one block per device on a (data=P, model=Q) mesh
+        with synchronous reductions, or the same mesh execution with
+        bounded-staleness reductions (``"sync"`` is accepted as an
+        alias for ``"shard_map"``);
+      - ``staleness=tau``  -- async engine only: every collective the
+        solver's CommSchedule declares is applied with delay tau
+        (tau = 0 reproduces the sync engine bit for bit);
       - ``local_backend="ref" | "pallas"``    -- pure-jnp cell-local
         solver vs the Pallas TPU kernels (interpret mode on CPU), used
         inside the vmap grid and inside each shard_map cell alike;
@@ -24,7 +30,8 @@ Example::
 
     from repro.core.solver import get_solver
 
-    solver = get_solver("d3ca")(engine="shard_map", local_backend="pallas",
+    solver = get_solver("d3ca")(engine="async", staleness=2,
+                                local_backend="pallas",
                                 block_format="sparse")
     res = solver.solve("hinge", X, y, P=4, Q=2,
                        cfg=D3CAConfig(lam=1e-2, outer_iters=20),
@@ -52,7 +59,10 @@ from .radisa import (RADiSAConfig, make_radisa_step,
 from .reference import rel_opt
 from .util import axes_size
 
-ENGINES = ("simulated", "shard_map")
+ENGINES = ("simulated", "shard_map", "async")
+#: "sync" names today's synchronous mesh policy explicitly (the
+#: CommSchedule terminology); it is the same engine as "shard_map".
+ENGINE_ALIASES = {"sync": "shard_map"}
 LOCAL_BACKENDS = ("ref", "pallas")
 BLOCK_FORMATS = ("dense", "sparse")
 
@@ -71,6 +81,7 @@ class SolveResult:
     engine: str
     local_backend: str
     block_format: str = "dense"
+    staleness: int = 0
 
 
 def _unpack_warm_start(warm_start):
@@ -102,7 +113,8 @@ class Solver:
     uses_local_backend: bool = True
 
     def __init__(self, engine: str = "simulated", local_backend: str = "ref",
-                 block_format: str = "dense"):
+                 block_format: str = "dense", staleness: int = 0):
+        engine = ENGINE_ALIASES.get(engine, engine)
         if engine not in ENGINES:
             raise ValueError(f"engine={engine!r}; expected one of {ENGINES}")
         if local_backend not in LOCAL_BACKENDS:
@@ -111,15 +123,27 @@ class Solver:
         if block_format not in BLOCK_FORMATS:
             raise ValueError(f"block_format={block_format!r}; expected one "
                              f"of {BLOCK_FORMATS}")
+        staleness = int(staleness)
+        if staleness < 0:
+            raise ValueError(f"staleness={staleness} must be >= 0 (the "
+                             "reduction delay tau of the async engine)")
+        if staleness > 0 and engine != "async":
+            raise ValueError(
+                f"staleness={staleness} needs engine='async'; the "
+                f"{engine!r} engine applies every reduction synchronously. "
+                "Pass engine='async' (staleness=0 there reproduces "
+                "'shard_map' exactly).")
         self.engine = engine
         self.local_backend = local_backend
         self.block_format = block_format
+        self.staleness = staleness
 
     # ---- subclass hooks ---------------------------------------------------
     def _simulated_program(self, loss, data, cfg, w0, alpha0) -> EngineProgram:
         raise NotImplementedError
 
-    def _shard_map_program(self, loss, sdata, cfg, w0, alpha0) -> EngineProgram:
+    def _shard_map_program(self, loss, sdata, cfg, w0, alpha0,
+                           staleness: int = 0) -> EngineProgram:
         raise NotImplementedError
 
     # ---- program construction --------------------------------------------
@@ -152,7 +176,8 @@ class Solver:
             return self._simulated_program(loss, data, cfg, w0, alpha0)
         if mesh is None:
             if P is None or Q is None:
-                raise ValueError("engine='shard_map' needs a mesh or P and Q")
+                raise ValueError(f"engine={self.engine!r} needs a mesh "
+                                 "or P and Q")
             from repro.launch.mesh import make_grid_mesh
             mesh = make_grid_mesh(P, Q)
         Pn = axes_size(mesh, data_axis)
@@ -162,7 +187,8 @@ class Solver:
         prep = prepare_shard_map_sparse if sparse else prepare_shard_map
         sdata = prep(mesh, X, y, data_axis=data_axis,
                      model_axis=model_axis, m_multiple=Pn * Qn)
-        return self._shard_map_program(loss, sdata, cfg, w0, alpha0)
+        return self._shard_map_program(loss, sdata, cfg, w0, alpha0,
+                                       staleness=self.staleness)
 
     # ---- the shared outer driver ------------------------------------------
     def solve(self, loss_name: str, X, y, *, P: int = None, Q: int = None,
@@ -220,7 +246,8 @@ class Solver:
             history=history, iters=iters, converged=stopped,
             solver=self.name, engine=self.engine,
             local_backend=self.local_backend,
-            block_format=self.block_format)
+            block_format=self.block_format,
+            staleness=self.staleness)
 
 
 # ---------------------------------------------------------------------------
@@ -261,10 +288,12 @@ class D3CASolver(Solver):
                                       local_backend=self.local_backend,
                                       w0=w0, alpha0=alpha0)
 
-    def _shard_map_program(self, loss, sdata, cfg, w0, alpha0):
+    def _shard_map_program(self, loss, sdata, cfg, w0, alpha0,
+                           staleness: int = 0):
         return d3ca_shard_map_program(loss, sdata, cfg,
                                       local_backend=self.local_backend,
-                                      w0=w0, alpha0=alpha0)
+                                      w0=w0, alpha0=alpha0,
+                                      staleness=staleness)
 
 
 @register_solver
@@ -278,10 +307,11 @@ class RADiSASolver(Solver):
                                         local_backend=self.local_backend,
                                         w0=w0)
 
-    def _shard_map_program(self, loss, sdata, cfg, w0, alpha0):
+    def _shard_map_program(self, loss, sdata, cfg, w0, alpha0,
+                           staleness: int = 0):
         return radisa_shard_map_program(loss, sdata, cfg,
                                         local_backend=self.local_backend,
-                                        w0=w0)
+                                        w0=w0, staleness=staleness)
 
 
 @register_solver
@@ -294,5 +324,7 @@ class ADMMSolver(Solver):
     def _simulated_program(self, loss, data, cfg, w0, alpha0):
         return admm_simulated_program(loss, data, cfg, w0=w0)
 
-    def _shard_map_program(self, loss, sdata, cfg, w0, alpha0):
-        return admm_shard_map_program(loss, sdata, cfg, w0=w0)
+    def _shard_map_program(self, loss, sdata, cfg, w0, alpha0,
+                           staleness: int = 0):
+        return admm_shard_map_program(loss, sdata, cfg, w0=w0,
+                                      staleness=staleness)

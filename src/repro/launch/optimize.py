@@ -19,6 +19,13 @@ dataset under any (engine, local_backend) pair:
       --solver d3ca --dataset sparse --density 0.01 --n 20000 --m 50000 \\
       --block-format sparse
 
+  # bounded-staleness reductions (Hogwild-style delayed psum): the async
+  # engine applies every CommSchedule collective with delay tau;
+  # --staleness 0 reproduces --engine shard_map bit for bit
+  PYTHONPATH=src python -m repro.launch.optimize \\
+      --solver d3ca --mesh 4x2 --engine async --staleness 2 \\
+      --force-host-devices 8
+
 Prints one line per outer iteration (objective, duality gap when the
 solver has a dual, relative optimality when --ref-epochs > 0) and a
 final JSON summary.
@@ -46,7 +53,15 @@ def build_parser():
     ap.add_argument("--solver", default="d3ca",
                     help="d3ca | radisa | admm (see get_solver)")
     ap.add_argument("--engine", default="simulated",
-                    choices=["simulated", "shard_map"])
+                    choices=["simulated", "shard_map", "sync", "async"],
+                    help="simulated = vmap grid on one device; shard_map "
+                         "(alias: sync) = one block per device, synchronous "
+                         "reductions; async = same mesh with "
+                         "bounded-staleness reductions (--staleness)")
+    ap.add_argument("--staleness", type=int, default=0, metavar="TAU",
+                    help="async engine only: apply every declared "
+                         "reduction with delay TAU outer iterations "
+                         "(0 = synchronous, identical to shard_map)")
     ap.add_argument("--backend", default="ref", choices=["ref", "pallas"],
                     help="cell-local solver backend")
     ap.add_argument("--block-format", default="dense",
@@ -83,7 +98,17 @@ def build_parser():
 
 def main(argv=None):
     argv = sys.argv[1:] if argv is None else argv
-    args = build_parser().parse_args(argv)
+    ap = build_parser()
+    args = ap.parse_args(argv)
+
+    if args.staleness < 0:
+        ap.error(f"--staleness {args.staleness} is negative; the reduction "
+                 "delay tau must be >= 0 (0 = synchronous)")
+    if args.staleness > 0 and args.engine != "async":
+        ap.error(f"--staleness {args.staleness} only works with "
+                 f"--engine async; --engine {args.engine} applies every "
+                 "reduction synchronously (pass --engine async, or drop "
+                 "--staleness)")
 
     if args.force_host_devices:
         if "jax" in sys.modules:
@@ -133,13 +158,14 @@ def main(argv=None):
 
     cls = get_solver(args.solver)
     solver = cls(engine=args.engine, local_backend=args.backend,
-                 block_format=args.block_format)
+                 block_format=args.block_format, staleness=args.staleness)
     cfg_kw = {"lam": args.lam, "outer_iters": args.iters}
     if args.solver == "admm":
         cfg_kw["rho"] = args.lam
     cfg = cls.config_cls(**cfg_kw)
 
-    print(f"[optimize] {args.solver} engine={args.engine} "
+    stale = f" staleness={args.staleness}" if args.engine == "async" else ""
+    print(f"[optimize] {args.solver} engine={args.engine}{stale} "
           f"backend={args.backend} block_format={args.block_format} "
           f"grid={P}x{Q} "
           f"{args.dataset}({X.shape[0]}x{X.shape[1]}) loss={args.loss} "
@@ -157,6 +183,7 @@ def main(argv=None):
 
     summary = {
         "solver": res.solver, "engine": res.engine,
+        "staleness": res.staleness,
         "local_backend": res.local_backend,
         "block_format": res.block_format, "P": P, "Q": Q,
         "n": int(X.shape[0]), "m": int(X.shape[1]), "loss": args.loss,

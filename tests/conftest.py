@@ -7,11 +7,18 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
 def pytest_configure(config):
-    # CI splits tier1 into a matrix over the two engines:
-    #   -m "not shard_map"  -> everything single-device (simulated split)
+    # CI splits tier1 into a matrix over the three engines:
+    #   -m "not shard_map and not async_engine"  -> everything
+    #                          single-device (simulated split)
     #   -m shard_map        -> the subprocess suites that force a device
     #                          grid (shard_map split)
+    #   -m async_engine     -> the bounded-staleness engine's subprocess
+    #                          suites (async split)
     config.addinivalue_line(
         "markers",
         "shard_map: exercises the shard_map engine in a subprocess with a "
         "forced multi-device grid (CI runs these in their own matrix leg)")
+    config.addinivalue_line(
+        "markers",
+        "async_engine: exercises the bounded-staleness async engine in a "
+        "subprocess with a forced multi-device grid (own CI matrix leg)")

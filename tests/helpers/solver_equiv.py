@@ -1,26 +1,101 @@
-"""Unified solver API on 8 forced host devices: every solver must produce
-the same iterates under (engine="shard_map", local_backend="pallas") as
-under (engine="simulated", local_backend="ref"), including when P*Q does
-not divide m (both engines pad identically).  Also the regression check
-that ``make_radisa_step`` fails loudly instead of silently truncating
-feature columns when P does not divide m_q.
+"""Unified solver API on 8 forced host devices.
+
+Two modes, selected by argv[1] (default "sync"):
+
+  * ``sync``  -- every solver must produce the same iterates under
+    (engine="shard_map", local_backend="pallas") as under
+    (engine="simulated", local_backend="ref"), including when P*Q does
+    not divide m (both engines pad identically).  Also the regression
+    check that ``make_radisa_step`` fails loudly instead of silently
+    truncating feature columns when P does not divide m_q.
+  * ``async`` -- the Engine API v2 staleness contract: for all three
+    solvers x both block formats, engine="async" with staleness=0 must
+    match engine="shard_map" to 1e-8 (it is the same program), and a
+    staleness=2 run must still converge (duality gap / objective under
+    a loose threshold).
 
 Executed as a subprocess by tests/test_solver.py (the device count must
 be fixed before jax initializes).  Prints max-abs diffs; exits nonzero
 on failure.
 """
 import os
+import sys
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax
 import jax.numpy as jnp
 
 from repro.core import (ADMMConfig, D3CAConfig, RADiSAConfig, get_loss,
-                        get_solver, make_radisa_step)
+                        get_solver, make_radisa_step, objective)
 from repro.data import make_svm_data
+
+Pn, Qn = 4, 2
+
+
+def main_async():
+    """async engine: tau=0 == shard_map at 1e-8; tau>0 still converges."""
+    lam = 1.0
+    X, y = make_svm_data(120, 42, seed=1)
+
+    fails = 0
+
+    def check(name, a, b, tol=1e-8):
+        nonlocal fails
+        d = float(jnp.abs(a - b).max())
+        print(f"{name} {d:.3e}")
+        if not d <= tol:
+            fails += 1
+
+    cases = [
+        ("d3ca", D3CAConfig(lam=lam, outer_iters=3, local_steps=12)),
+        ("radisa", RADiSAConfig(lam=lam, gamma=0.03, outer_iters=3, L=12)),
+        ("admm", ADMMConfig(lam=lam, rho=lam, outer_iters=4)),
+    ]
+    for block_format in ("dense", "sparse"):
+        for name, cfg in cases:
+            sync = get_solver(name)(engine="shard_map",
+                                    block_format=block_format)
+            asn = get_solver(name)(engine="async", staleness=0,
+                                   block_format=block_format)
+            rs = sync.solve("hinge", X, y, P=Pn, Q=Qn, cfg=cfg,
+                            record_history=False)
+            ra = asn.solve("hinge", X, y, P=Pn, Q=Qn, cfg=cfg,
+                           record_history=False)
+            check(f"{name}_{block_format}_tau0_w", rs.w, ra.w)
+            if rs.alpha is not None:
+                check(f"{name}_{block_format}_tau0_alpha", rs.alpha, ra.alpha)
+
+    # the pallas local backend runs inside the async cells unchanged
+    cfg = D3CAConfig(lam=lam, outer_iters=3, local_steps=12)
+    rs = get_solver("d3ca")(engine="shard_map",
+                            local_backend="pallas").solve(
+        "hinge", X, y, P=Pn, Q=Qn, cfg=cfg, record_history=False)
+    ra = get_solver("d3ca")(engine="async", staleness=0,
+                            local_backend="pallas").solve(
+        "hinge", X, y, P=Pn, Q=Qn, cfg=cfg, record_history=False)
+    check("d3ca_pallas_tau0_w", rs.w, ra.w)
+
+    # tau > 0 convergence smoke: stale reductions still close the
+    # duality gap (d3ca) / reduce the objective (radisa)
+    res = get_solver("d3ca")(engine="async", staleness=2).solve(
+        "hinge", X, y, P=Pn, Q=Qn,
+        cfg=D3CAConfig(lam=lam, outer_iters=12))
+    gap = res.history[-1]["duality_gap"]
+    print(f"d3ca_tau2_gap {gap:.3e}")
+    if not gap < 0.5:
+        fails += 1
+    # stale gradients need a smaller step size than the sync smoke
+    res = get_solver("radisa")(engine="async", staleness=2).solve(
+        "hinge", X, y, P=Pn, Q=Qn,
+        cfg=RADiSAConfig(lam=lam, gamma=0.01, outer_iters=12))
+    f0 = float(objective("hinge", X, y, jnp.zeros(X.shape[1]), lam))
+    f_end = res.history[-1]["objective"]
+    print(f"radisa_tau2_objective {f_end:.4f} (zero-w {f0:.4f})")
+    if not f_end < f0:
+        fails += 1
+    raise SystemExit(fails)
 
 
 def main():
-    Pn, Qn = 4, 2
     lam = 1.0
     # m = 42: P*Q = 8 does not divide it -> exercises the shared padding
     X, y = make_svm_data(120, 42, seed=1)
@@ -83,4 +158,8 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    mode = sys.argv[1] if len(sys.argv) > 1 else "sync"
+    if mode == "async":
+        main_async()
+    else:
+        main()

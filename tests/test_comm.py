@@ -1,0 +1,201 @@
+"""Engine API v2: CommSchedule declaration contract, collective
+execution under named-vmap grids, and the StaleComm FIFO semantics
+(value applied at t is the reduction computed at max(1, t - tau)).
+
+Everything here runs on ONE device: the grid engine uses named vmap
+axes, and the mesh/staleness tests use a 1x1 mesh (collectives become
+identities there, which isolates the delay semantics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.comm import Collective, CommSchedule, StaleComm, SyncComm
+from repro.core.engines import CellProgram, grid_program, mesh_program
+
+
+# ---------------------------------------------------------------------------
+# schedule declaration contract
+# ---------------------------------------------------------------------------
+
+def test_schedule_declaration():
+    sched = (CommSchedule()
+             .psum("rhs", axis="data")
+             .pmean("dalpha", axis="model")
+             .allgather("alpha", axis="data"))
+    assert sched.names == ("rhs", "dalpha", "alpha")
+    assert "rhs" in sched and "nope" not in sched
+    assert sched["rhs"].op == "psum"
+    assert sched["dalpha"].result_axis == "data"
+    assert sched["rhs"].result_axis == "model"
+
+
+def test_schedule_rejects_duplicates_and_bad_axes():
+    with pytest.raises(ValueError, match="declared twice"):
+        CommSchedule().psum("x", axis="data").pmean("x", axis="model")
+    with pytest.raises(ValueError, match="axis"):
+        CommSchedule().psum("x", axis="rows")
+    with pytest.raises(ValueError, match="op"):
+        Collective("x", "allreduce", "data")
+
+
+def test_schedule_unknown_lookup_message():
+    sched = CommSchedule().psum("declared", axis="data")
+    with pytest.raises(KeyError, match="not declared in this CommSchedule"):
+        sched["other"]
+
+
+def test_comm_contract_checks():
+    sched = CommSchedule().psum("a", axis="data").psum("b", axis="model")
+    axis_map = {"data": ("d",), "model": ("m",)}
+
+    def cell_twice(x):
+        comm = SyncComm(sched, axis_map, {"data": 2, "model": 1})
+        comm("a", x)
+        return comm("a", x)                 # same point twice -> error
+
+    with pytest.raises(ValueError, match="executed twice"):
+        jax.vmap(jax.vmap(cell_twice, axis_name="m"), axis_name="d")(
+            jnp.ones((2, 1)))
+
+    def cell_partial(x):
+        comm = SyncComm(sched, axis_map, {"data": 2, "model": 1})
+        out = comm("a", x)
+        comm.finalize()                     # "b" never executed -> error
+        return out
+
+    with pytest.raises(ValueError, match="never executed"):
+        jax.vmap(jax.vmap(cell_partial, axis_name="m"), axis_name="d")(
+            jnp.ones((2, 1)))
+
+
+# ---------------------------------------------------------------------------
+# collective execution under named vmap (the grid engine's substrate)
+# ---------------------------------------------------------------------------
+
+def test_sync_comm_under_named_vmap():
+    sched = (CommSchedule()
+             .psum("s", axis="data")
+             .pmean("m", axis="model")
+             .allgather("g", axis="data"))
+    axis_map = {"data": ("d",), "model": ("m",)}
+    vals = jnp.arange(6.0).reshape(3, 2)        # grid P=3, Q=2
+
+    def cell(x):
+        comm = SyncComm(sched, axis_map, {"data": 3, "model": 2})
+        out = (comm("s", x), comm("m", x), comm("g", x),
+               comm.axis_index("data"), comm.axis_index("model"))
+        comm.finalize()
+        assert comm.axis_size("data") == 3
+        return out
+
+    s, m, g, p, q = jax.vmap(jax.vmap(cell, axis_name="m"),
+                             axis_name="d")(vals)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(
+        vals.sum(axis=0, keepdims=True).repeat(3, 0)))
+    np.testing.assert_allclose(np.asarray(m), np.asarray(
+        vals.mean(axis=1, keepdims=True).repeat(2, 1)))
+    assert g.shape == (3, 2, 3)                  # per-cell gather over data
+    np.testing.assert_allclose(np.asarray(g[0, 1]), np.asarray(vals[:, 1]))
+    np.testing.assert_array_equal(np.asarray(p), [[0, 0], [1, 1], [2, 2]])
+    np.testing.assert_array_equal(np.asarray(q), [[0, 1], [0, 1], [0, 1]])
+
+
+# ---------------------------------------------------------------------------
+# StaleComm FIFO semantics via the mesh executor on a 1x1 mesh
+# ---------------------------------------------------------------------------
+
+def _delay_program():
+    """A cell whose single collective carries f(t) = t as payload; the
+    state records what the comm handed back, so the returned sequence
+    exposes the delay directly."""
+    sched = CommSchedule().psum("probe", axis="data")
+
+    def cell(comm, t, data, state):
+        seen = comm("probe", jnp.float32(t) * data)
+        return seen
+    # data: a scalar-per-cell array; state: the last value seen
+    return CellProgram(sched, cell, data_specs=(None,), state_specs=(None,))
+
+
+@pytest.mark.parametrize("tau", [1, 2, 3])
+def test_stale_comm_bounded_delay(tau):
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cellprog = _delay_program()
+    data = jnp.ones((1,))
+    state0 = jnp.zeros((1,))
+    step, bufs0 = mesh_program(cellprog, mesh, data, state0, staleness=tau)
+    assert set(bufs0) == {"probe"} and bufs0["probe"].shape == (1, 1, tau, 1)
+    state = (state0, bufs0)
+    seen = []
+    for t in range(1, 9):
+        state = step(t, data, state)
+        seen.append(float(state[0][0]))
+    # contract: value applied at t is the reduction computed at
+    # max(1, t - tau)
+    expect = [float(max(1, t - tau)) for t in range(1, 9)]
+    assert seen == expect, (tau, seen, expect)
+
+
+def test_stale_tau0_is_sync():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cellprog = _delay_program()
+    data = jnp.ones((1,))
+    state0 = jnp.zeros((1,))
+    step, bufs0 = mesh_program(cellprog, mesh, data, state0, staleness=0)
+    assert bufs0 == {}
+    state = (state0, bufs0)
+    for t in range(1, 5):
+        state = step(t, data, state)
+        assert float(state[0][0]) == float(t)    # no delay at tau = 0
+
+
+def test_stale_comm_rejects_negative_tau():
+    with pytest.raises(ValueError, match="must be >= 0"):
+        StaleComm(CommSchedule(), {"data": ("d",), "model": ("m",)},
+                  {"data": 1, "model": 1}, tau=-1, t=1)
+
+
+# ---------------------------------------------------------------------------
+# grid executor: dim-specs drive replication/unreplication
+# ---------------------------------------------------------------------------
+
+def test_grid_program_specs_roundtrip():
+    sched = CommSchedule().psum("col", axis="data").pmean("row", axis="model")
+
+    def cell(comm, t, data, state):
+        x_b, = data                      # (n_p, m_q) cell of the grid
+        a_b, w_b = state
+        a_new = a_b + comm("row", x_b.sum(axis=1))    # varies over data
+        w_new = comm("col", x_b.sum(axis=0)) + w_b    # varies over model
+        return a_new, w_new
+
+    cellprog = CellProgram(sched, cell,
+                           data_specs=((("data", "model"),)),
+                           state_specs=((("data",), ("model",))))
+    Pn, Qn, n_p, m_q = 3, 2, 4, 5
+    x = jnp.arange(float(Pn * Qn * n_p * m_q)).reshape(Pn, Qn, n_p, m_q)
+    step = grid_program(cellprog, Pn, Qn)
+    a, w = step(1, (x,), (jnp.zeros((Pn, n_p)), jnp.zeros((Qn, m_q))))
+    assert a.shape == (Pn, n_p) and w.shape == (Qn, m_q)
+    np.testing.assert_allclose(
+        np.asarray(a), np.asarray(x.sum(axis=3).mean(axis=1)))
+    np.testing.assert_allclose(
+        np.asarray(w), np.asarray(x.sum(axis=2).sum(axis=0)))
+
+
+# ---------------------------------------------------------------------------
+# solver-level knob validation (single device; no solve is run)
+# ---------------------------------------------------------------------------
+
+def test_solver_staleness_validation():
+    from repro.core import get_solver
+    cls = get_solver("d3ca")
+    assert cls(engine="async", staleness=3).staleness == 3
+    assert cls(engine="sync").engine == "shard_map"     # alias
+    with pytest.raises(ValueError, match="must be >= 0"):
+        cls(engine="async", staleness=-1)
+    with pytest.raises(ValueError, match="needs engine='async'"):
+        cls(engine="shard_map", staleness=2)
+    with pytest.raises(ValueError, match="needs engine='async'"):
+        cls(engine="simulated", staleness=1)

@@ -48,6 +48,11 @@ def test_registry():
         get_solver("d3ca")(engine="mpi")
     with pytest.raises(ValueError, match="local_backend"):
         get_solver("d3ca")(local_backend="triton")
+    # the async engine is a first-class registry knob
+    s = get_solver("d3ca")(engine="async", staleness=2)
+    assert (s.engine, s.staleness) == ("async", 2)
+    with pytest.raises(ValueError, match="needs engine='async'"):
+        get_solver("d3ca")(staleness=1)
 
 
 def test_simulated_needs_grid(problem):
@@ -227,6 +232,18 @@ def test_local_pallas_rejects_logistic():
 def test_shard_map_pallas_matches_simulated_ref():
     r = subprocess.run(
         [sys.executable, os.path.join(ROOT, "tests", "helpers",
-                                      "solver_equiv.py")],
+                                      "solver_equiv.py"), "sync"],
+        env=ENV, timeout=600, capture_output=True, text=True, cwd=ROOT)
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+@pytest.mark.async_engine
+def test_async_tau0_matches_shard_map_and_tau2_converges():
+    """Engine API v2 staleness contract: async(staleness=0) == shard_map
+    to 1e-8 for all solvers x block formats; staleness=2 still
+    converges (see helpers/solver_equiv.py, mode 'async')."""
+    r = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "helpers",
+                                      "solver_equiv.py"), "async"],
         env=ENV, timeout=600, capture_output=True, text=True, cwd=ROOT)
     assert r.returncode == 0, r.stdout + r.stderr
