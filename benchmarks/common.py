@@ -39,8 +39,8 @@ def ensure_host_devices(argv, count: int = 32):
 
 
 def add_engine_args(ap):
-    """--engine / --backend / --block-format / --staleness knobs shared
-    by the fig benchmarks."""
+    """--engine / --backend / --block-format / --staleness /
+    --compression knobs shared by the fig benchmarks."""
     ap.add_argument("--engine", default="simulated",
                     choices=["simulated", "shard_map", "sync", "async"])
     ap.add_argument("--backend", default="ref", choices=["ref", "pallas"],
@@ -51,6 +51,10 @@ def add_engine_args(ap):
     ap.add_argument("--staleness", type=int, default=0, metavar="TAU",
                     help="async engine only: reduction delay tau "
                          "(0 = synchronous)")
+    ap.add_argument("--compression", default=None, metavar="SPEC",
+                    help="codec spec for the declared collectives "
+                         "('int8', 'fp8', 'topk:0.1', or per-collective "
+                         "'dw=int8,z=identity'); default: none")
     return ap
 
 

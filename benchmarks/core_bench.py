@@ -44,9 +44,10 @@ except ImportError:                       # `python benchmarks/core_bench.py`
 
 
 def bench_combo(name, cfg, X, y, P, Q, engine, backend, f_star, reps,
-                block_format="dense"):
+                block_format="dense", compression=None):
     solver = get_solver(name)(engine=engine, local_backend=backend,
-                              block_format=block_format)
+                              block_format=block_format,
+                              compression=compression)
     prog = solver.program("hinge", X, y, P=P, Q=Q, cfg=cfg)
     state = prog.step(1, prog.state)          # compile + warm
     t = timed(lambda: prog.step(2, state), reps=reps, warmup=0)
@@ -54,7 +55,8 @@ def bench_combo(name, cfg, X, y, P, Q, engine, backend, f_star, reps,
     res = solver.solve("hinge", X, y, P=P, Q=Q, cfg=cfg, f_star=f_star,
                        record_history=True)
     return {"s_per_iter": t, "rel_opt": res.history[-1]["rel_opt"],
-            "iters": res.iters}
+            "iters": res.iters,
+            "comm_bytes_per_step": res.comm_bytes["bytes_per_step"]}
 
 
 def main(argv=None):

@@ -29,7 +29,7 @@ from repro.data import make_svm_data                        # noqa: E402
 
 
 def run_instance(exp, lam, scale, iters, engine, backend, seed=0,
-                 staleness=0):
+                 staleness=0, compression=None):
     bn, bm = int(exp.block_n * scale), int(exp.block_m * scale)
     n, m = exp.P * bn, exp.Q * bm
     X, y = make_svm_data(n, m, seed=seed)
@@ -42,7 +42,8 @@ def run_instance(exp, lam, scale, iters, engine, backend, seed=0,
 
     def trace(name, cfg, label):
         solver = get_solver(name)(engine=engine, local_backend=backend,
-                                  staleness=staleness)
+                                  staleness=staleness,
+                                  compression=compression)
         res = solver.solve("hinge", X, y, P=exp.P, Q=exp.Q, cfg=cfg,
                            f_star=f_star)
         hist = [{"iter": h["iter"], "time_s": h["time_s"],
@@ -77,9 +78,12 @@ def main(argv=None):
         for lam in (1e-1, 1e-2):
             results.append(run_instance(exp, lam, scale, args.iters,
                                         args.engine, args.backend,
-                                        staleness=args.staleness))
+                                        staleness=args.staleness,
+                                        compression=args.compression))
     save_result("fig3_time", {"scale": scale, "engine": args.engine,
-                              "backend": args.backend, "results": results})
+                              "backend": args.backend,
+                              "compression": args.compression,
+                              "results": results})
 
 
 if __name__ == "__main__":

@@ -36,7 +36,8 @@ def main(argv=None):
     def run(name, cfg, label):
         solver = get_solver(name)(engine=args.engine,
                                   local_backend=args.backend,
-                                  staleness=args.staleness)
+                                  staleness=args.staleness,
+                                  compression=args.compression)
         res = solver.solve("hinge", X, y, P=exp.P, Q=exp.Q, cfg=cfg,
                            f_star=f_star)
         curves[label] = [h["rel_opt"] for h in res.history]

@@ -64,7 +64,8 @@ def main(argv=None):
             f_star = float(objective("hinge", X, y, w_ref, lam))
             solver = get_solver(method)(engine=args.engine,
                                         local_backend=args.backend,
-                                        staleness=args.staleness)
+                                        staleness=args.staleness,
+                                        compression=args.compression)
             for (P, Q) in STRONG_CONFIGS:
                 n_p = -(-n // P)
                 if method == "radisa":

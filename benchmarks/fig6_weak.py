@@ -65,7 +65,8 @@ def run_grid(args, make_data, sparsities, out):
                     solver = get_solver(method)(
                         engine=args.engine, local_backend=args.backend,
                         block_format=args.block_format,
-                        staleness=args.staleness)
+                        staleness=args.staleness,
+                        compression=args.compression)
                     if method == "radisa":
                         cfg = RADiSAConfig(lam=lam, gamma=0.05 / P,
                                            outer_iters=args.iters)

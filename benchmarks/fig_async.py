@@ -65,6 +65,15 @@ def sweep_solver(name, cfg, X, y, P, Q, taus, backend, f_star, reps):
         entry = {"s_per_iter": t,
                  "rel_opt": res.history[-1]["rel_opt"],
                  "iters": res.iters, "staleness": tau}
+        # per-collective bytes-on-wire counters (the staleness model
+        # launches every collective every step, so tau does not change
+        # the wire cost -- which is exactly what makes async and
+        # compressed runs comparable on the same axis)
+        acct = res.comm_bytes
+        entry["comm_bytes_per_step"] = acct["bytes_per_step"]
+        entry["comm_bytes_by_collective"] = {
+            cname: c["bytes_per_step"]
+            for cname, c in acct["collectives"].items()}
         if "duality_gap" in res.history[-1]:
             entry["duality_gap"] = res.history[-1]["duality_gap"]
         if tau == 0:

@@ -31,8 +31,8 @@ def main(argv=None) -> None:
     ap.add_argument("--quick", action="store_true",
                     help="smaller instances (CI-sized)")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig3,fig4,fig5,fig6,core,kernels,"
-                         "roofline")
+                    help="comma list: fig3,fig4,fig5,fig6,core,compress,"
+                         "kernels,roofline")
     ap.add_argument("--engine", default="simulated",
                     choices=["simulated", "shard_map"])
     ap.add_argument("--backend", default="ref", choices=["ref", "pallas"])
@@ -63,10 +63,13 @@ def main(argv=None) -> None:
         fig6_weak.main(["--scale", "0.005" if args.quick else "0.01",
                         "--iters", "6" if args.quick else "12",
                         "--max-p", "3" if args.quick else "4"] + eb)
-    if want("core"):
-        # subprocess: core_bench forces its own host device count, which
-        # only takes effect before jax initializes
-        cmd = [sys.executable, "-m", "benchmarks.core_bench"]
+    # these force their own host device count, which only takes effect
+    # before jax initializes -> subprocess
+    for bench, module in (("core", "benchmarks.core_bench"),
+                          ("compress", "benchmarks.fig_compress")):
+        if not want(bench):
+            continue
+        cmd = [sys.executable, "-m", module]
         if args.quick:
             cmd.append("--quick")
         env = dict(os.environ,
@@ -76,7 +79,7 @@ def main(argv=None) -> None:
             os.path.dirname(os.path.abspath(__file__))))
         if r.returncode:
             # fail the harness like every other benchmark would
-            print(f"core,0.0,failed(rc={r.returncode})")
+            print(f"{bench},0.0,failed(rc={r.returncode})")
             raise SystemExit(r.returncode)
     if want("kernels"):
         from . import kernels_bench

@@ -2,10 +2,12 @@
 from .admm import (ADMMConfig, admm_distributed,
                    admm_setup_simulated, admm_simulated)
 from .comm import Comm, CommSchedule, StaleComm, SyncComm
+from .compress import (CompressedComm, CompressionPolicy, as_policy,
+                       available_codecs, get_codec, wire_accounting)
 from .d3ca import (D3CAConfig, d3ca_distributed, d3ca_simulated,
                    make_d3ca_step, make_d3ca_step_sparse)
-from .engines import (CellProgram, EngineProgram, drive, grid_program,
-                      mesh_program, prepare_shard_map,
+from .engines import (CellProgram, EngineProgram, comm_accounting, drive,
+                      grid_program, mesh_program, prepare_shard_map,
                       prepare_shard_map_sparse)
 from .losses import LOSSES, get_loss
 from .partition import (DoublyPartitioned, SparseDoublyPartitioned,
@@ -20,9 +22,12 @@ __all__ = [
     "ADMMConfig", "admm_distributed", "admm_setup_simulated",
     "admm_simulated",
     "Comm", "CommSchedule", "StaleComm", "SyncComm",
+    "CompressedComm", "CompressionPolicy", "as_policy", "available_codecs",
+    "get_codec", "wire_accounting",
     "D3CAConfig", "d3ca_distributed", "d3ca_simulated", "make_d3ca_step",
     "make_d3ca_step_sparse",
-    "CellProgram", "EngineProgram", "drive", "grid_program", "mesh_program",
+    "CellProgram", "EngineProgram", "comm_accounting", "drive",
+    "grid_program", "mesh_program",
     "prepare_shard_map", "prepare_shard_map_sparse",
     "LOSSES", "get_loss",
     "DoublyPartitioned", "SparseDoublyPartitioned", "partition",

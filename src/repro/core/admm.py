@@ -45,8 +45,8 @@ from jax.sharding import PartitionSpec as P
 
 from .comm import CommSchedule
 from .engines import (CellProgram, EngineProgram, SparseShardMapData,
-                      drive_with_callback, grid_program, mesh_program,
-                      mesh_step_fn)
+                      drive_with_callback, grid_bind_state, grid_program,
+                      mesh_program, mesh_step_fn)
 from .losses import Loss, get_loss
 from .partition import (DoublyPartitioned, SparseDoublyPartitioned,
                         ell_gather, ell_scatter_add)
@@ -158,10 +158,11 @@ def admm_setup_simulated(data, cfg: ADMMConfig):
 
 def admm_simulated_program(loss: Loss, data: DoublyPartitioned,
                            cfg: ADMMConfig, *, chol=None,
-                           w0=None) -> EngineProgram:
+                           w0=None, compression=None) -> EngineProgram:
     """Named-vmap grid engine.  State: (s (P,Q,n_p,1), u (P,Q,n_p,1),
     w_blocks (Q, m_q)).  The Cholesky setup runs at build time.
-    ``data`` may be dense or sparse (padded-ELL cells)."""
+    ``data`` may be dense or sparse (padded-ELL cells); ``compression``
+    routes the exchange/rhs collectives through their policy codecs."""
     sparse = isinstance(data, SparseDoublyPartitioned)
     Pn, Qn = data.P, data.Q
     if chol is None:
@@ -172,15 +173,20 @@ def admm_simulated_program(loss: Loss, data: DoublyPartitioned,
     # blocked layout: one leading block axis per logical axis of the
     # dim-spec, per-cell extents in place -- chol spec is ("model",)
     gdata = (*x_parts, data.y_blocks, data.mask, chol[:, None])
-    step = grid_program(cellprog, Pn, Qn)
+    step = grid_program(cellprog, Pn, Qn, compression=compression)
 
     w_init = (jnp.zeros((Qn, data.m_q)) if w0 is None
               else data.w_to_blocks(jnp.asarray(w0)))
     zeros_su = jnp.zeros((Pn, Qn, data.n_p, 1))
+    state0 = (zeros_su, zeros_su, w_init)
+    full0, unwrap, acct = grid_bind_state(cellprog, gdata, state0,
+                                          Pn=Pn, Qn=Qn,
+                                          compression=compression)
     return EngineProgram(
-        state=(zeros_su, zeros_su, w_init),
+        state=full0,
         step=lambda t, st: step(t, gdata, st),
-        w_of=lambda st: data.w_from_blocks(st[2]))
+        w_of=lambda st: data.w_from_blocks(unwrap(st)[2]),
+        comm_bytes=acct)
 
 
 def admm_simulated(loss_name: str, data: DoublyPartitioned, cfg: ADMMConfig,
@@ -272,14 +278,16 @@ def admm_setup_distributed_sparse(mesh, cols, vals, m_q: int,
 
 
 def admm_shard_map_program(loss: Loss, sdata, cfg: ADMMConfig,
-                           *, w0=None, staleness: int = 0) -> EngineProgram:
+                           *, w0=None, staleness: int = 0,
+                           compression=None) -> EngineProgram:
     """Mesh engine.  State: ((s (n_pad, Q), u (n_pad, Q), w (m_pad,)),
-    stale_bufs), all sharded.
+    comm_state), all sharded.
 
     The cached Cholesky setup runs at build time (excluded from step
     timings, as in the paper).  ``sdata`` is a :class:`ShardMapData` or
     :class:`SparseShardMapData`; ``staleness=tau > 0`` selects the
-    bounded-staleness async policy."""
+    bounded-staleness async policy; ``compression`` routes the
+    exchange/rhs collectives through their policy codecs."""
     mesh = sdata.mesh
     sparse = isinstance(sdata, SparseShardMapData)
     if sparse:
@@ -300,14 +308,15 @@ def admm_shard_map_program(loss: Loss, sdata, cfg: ADMMConfig,
     zeros_su = jax.device_put(jnp.zeros((sdata.n_pad, sdata.Q)), su_sharding)
     w_init = sdata.zeros_model() if w0 is None else sdata.pad_w(w0)
     state0 = (zeros_su, zeros_su, w_init)
-    step, bufs0 = mesh_program(
+    step, comm0, acct = mesh_program(
         cellprog, mesh, mdata, state0,
         data_axis=sdata.data_axis, model_axis=sdata.model_axis,
-        staleness=staleness)
+        staleness=staleness, compression=compression)
     return EngineProgram(
-        state=(state0, bufs0),
+        state=(state0, comm0),
         step=lambda t, st: step(t, mdata, st),
-        w_of=lambda st: st[0][2][: sdata.m])
+        w_of=lambda st: st[0][2][: sdata.m],
+        comm_bytes=acct)
 
 
 def admm_distributed(loss_name: str, mesh, x, y, mask, cfg: ADMMConfig,

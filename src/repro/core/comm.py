@@ -40,6 +40,7 @@ axis names (possibly tuples, e.g. ("pod", "data") on a multi-pod mesh).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -139,6 +140,11 @@ class Comm:
         self._executed: set = set()
         #: staleness FIFO slots produced this step (only StaleComm fills it)
         self.bufs_out: Dict[str, jnp.ndarray] = {}
+        #: exact payload bytes this cell put on the wire, per collective
+        #: (executors that shrink the payload -- CompressedComm --
+        #: record their own number; everyone else reports the
+        #: uncompressed size)
+        self.wire_bytes: Dict[str, int] = {}
 
     # -- cell-facing API -----------------------------------------------------
     def __call__(self, name: str, value):
@@ -147,7 +153,12 @@ class Comm:
             raise ValueError(f"reduction {name!r} executed twice in one "
                              "step; declare a second point instead")
         self._executed.add(name)
-        return self._exec(point, value)
+        out = self._exec(point, value)
+        if name not in self.wire_bytes:
+            v = jnp.asarray(value)
+            self.wire_bytes[name] = (math.prod(v.shape)
+                                     * jnp.dtype(v.dtype).itemsize)
+        return out
 
     def axis_index(self, axis: str):
         """Collapsed linear cell index along a logical axis."""
@@ -187,15 +198,20 @@ class SyncComm(Comm):
 
 class ShapeProbeComm(Comm):
     """Collective-free executor that records each point's per-cell result
-    aval.  Used once at build time (under ``jax.eval_shape``, OUTSIDE any
-    mesh/vmap axis context) so the async engine can allocate its
-    staleness buffers before the first step.  psum/pmean preserve the
-    per-cell shape; allgather prepends the axis extent.
+    aval (and, optionally, its per-cell *payload* aval -- the input the
+    cell hands to ``comm``, which is what travels the wire and what an
+    error-feedback residual must match).  Used once at build time (under
+    ``jax.eval_shape``, OUTSIDE any mesh/vmap axis context) so the
+    engines can allocate staleness rings / EF buffers and price the
+    wire before the first step.  psum/pmean preserve the per-cell
+    shape; allgather prepends the axis extent.
     """
 
-    def __init__(self, schedule, axis_map, sizes, record: dict):
+    def __init__(self, schedule, axis_map, sizes, record: dict,
+                 payloads: Optional[dict] = None):
         super().__init__(schedule, axis_map, sizes)
         self._record = record
+        self._payloads = payloads if payloads is not None else {}
 
     def axis_index(self, axis: str):
         # no axis context under eval_shape; any in-range index has the
@@ -204,6 +220,8 @@ class ShapeProbeComm(Comm):
 
     def _exec(self, point, value):
         value = jnp.asarray(value)
+        self._payloads[point.name] = jax.ShapeDtypeStruct(
+            value.shape, value.dtype)
         if point.op == "allgather":
             out = jnp.broadcast_to(
                 value[None], (self.sizes[point.axis],) + value.shape)

@@ -1,0 +1,31 @@
+"""Compressed-communication subsystem for the doubly distributed solvers.
+
+Three pieces, composable with every engine:
+
+  * :mod:`~repro.core.compress.codecs` -- identity / int8 / simulated
+    fp8 / top-k payload codecs with error feedback;
+  * :mod:`~repro.core.compress.policy` -- ``CompressionPolicy`` mapping
+    CommSchedule collective *names* to codecs (validated against each
+    solver's declared schedule at build time);
+  * :mod:`~repro.core.compress.executor` -- the ``CompressedComm``
+    executor (wraps ``SyncComm``/``StaleComm``) plus exact
+    bytes-on-wire accounting (``wire_accounting``).
+
+End to end: ``get_solver("d3ca")(compression="int8")`` -- see the README
+section "Compressed reductions".  This package absorbs the old
+``repro.optim.compression`` module (now a deprecation shim over the
+tree-level helpers re-exported here).
+"""
+from .codecs import (Codec, Fp8Codec, IdentityCodec, Int8Codec, TopKCodec,
+                     available_codecs, compress, decompress, get_codec,
+                     init_error)
+from .executor import CompressedComm, wire_accounting
+from .policy import CompressionPolicy, as_policy, identity_policy
+
+__all__ = [
+    "Codec", "Fp8Codec", "IdentityCodec", "Int8Codec", "TopKCodec",
+    "available_codecs", "get_codec",
+    "compress", "decompress", "init_error",
+    "CompressedComm", "wire_accounting",
+    "CompressionPolicy", "as_policy", "identity_policy",
+]

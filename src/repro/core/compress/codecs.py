@@ -1,0 +1,272 @@
+"""Compression codecs for cross-cell reductions.
+
+A *codec* turns the per-cell payload of one declared collective (see
+``repro.core.comm.CommSchedule``) into a smaller wire representation and
+back.  The solvers never see the codec: the
+:class:`~repro.core.compress.executor.CompressedComm` executor encodes
+the cell's contribution, immediately decodes it, and hands the (lossy)
+result to the underlying ``SyncComm``/``StaleComm`` -- which is exactly
+what a bandwidth-saving all-reduce does semantically, since the
+reduction itself operates on dequantized values.
+
+Lossy codecs carry **error feedback** (Seide et al. 2014, Karimireddy et
+al. 2019): the quantization residual of step t is added to the payload
+of step t+1, so the *accumulated* communicated signal tracks the true
+accumulated signal and convergence is preserved.  The residual is one
+float32 buffer per (cell, collective), carried in the engine state
+pytree next to the async engine's staleness rings.
+
+Codecs:
+
+  * ``identity``  -- no-op; ``apply`` returns the input array object
+    unchanged, so an identity-codec run is bit-identical to an
+    uncompressed one (this is tested, and is what makes the subsystem a
+    safe refactor);
+  * ``int8``      -- per-collective symmetric quantization to int8 with
+    one float32 scale (max-abs / 127), ~4x fewer wire bytes than f32;
+  * ``fp8``       -- simulated float8 (e4m3) cast with one float32
+    scale; same 1-byte payload as int8, different error profile;
+  * ``topk:FRAC`` -- magnitude top-k sparsification: the largest
+    ``ceil(FRAC * size)`` entries travel as (value, index) pairs.
+
+``payload_nbytes`` is exact arithmetic over the payload layout (no
+tracing), so the wire accounting of
+:func:`~repro.core.compress.executor.wire_accounting` is exact: the
+identity codec reports precisely the uncompressed payload bytes.
+
+This module also absorbs the tree-level int8 helpers that used to live
+in ``repro.optim.compression`` (now a deprecation shim):
+:func:`init_error` / :func:`compress` / :func:`decompress` keep their
+exact legacy numerics, reimplemented over :class:`Int8Codec`.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+FP8_E4M3_MAX = 448.0
+_FP8_DTYPE = getattr(jnp, "float8_e4m3fn", None)
+
+
+class Codec:
+    """One compression scheme for a collective's per-cell payload.
+
+    ``encode(value) -> payload`` (tuple of arrays, the wire format),
+    ``decode(payload, shape) -> value``-shaped dequantized array, and
+    ``apply(value, err)`` fuses encode/decode with error feedback:
+    returns ``(dequantized, new_err)`` where ``new_err`` is ``None`` for
+    stateless codecs.  ``payload_nbytes(shape, dtype)`` is the exact
+    wire size of one cell's payload, computed arithmetically.
+    """
+
+    name: str = "?"
+    #: True when the codec is lossy and carries an error-feedback
+    #: residual (one f32 buffer per cell per collective)
+    stateful: bool = False
+
+    def encode(self, value):
+        raise NotImplementedError
+
+    def decode(self, payload, shape):
+        raise NotImplementedError
+
+    def payload_nbytes(self, shape, dtype) -> int:
+        raise NotImplementedError
+
+    def init_state(self, shape):
+        """Zero error-feedback residual for one cell's payload."""
+        return jnp.zeros(shape, jnp.float32)
+
+    def apply(self, value, err=None):
+        if not self.stateful:
+            return self.decode(self.encode(value), value.shape), None
+        t = value.astype(jnp.float32) + (0.0 if err is None else err)
+        deq = self.decode(self.encode(t), value.shape)
+        return deq, t - deq
+
+    def __repr__(self):
+        return f"<codec {self.name}>"
+
+
+class IdentityCodec(Codec):
+    """Exact passthrough; reports the uncompressed payload bytes."""
+
+    name = "identity"
+    stateful = False
+
+    def encode(self, value):
+        return (value,)
+
+    def decode(self, payload, shape):
+        return payload[0]
+
+    def apply(self, value, err=None):
+        # return the input array OBJECT: an identity-codec run produces
+        # the same jaxpr as an uncompressed run (bit-identical iterates)
+        return value, None
+
+    def payload_nbytes(self, shape, dtype) -> int:
+        return math.prod(shape) * jnp.dtype(dtype).itemsize
+
+
+class Int8Codec(Codec):
+    """Symmetric per-collective int8 quantization with one f32 scale.
+
+    ``scale = max|t| / 127 + 1e-12`` (the exact formula of the legacy
+    ``repro.optim.compression`` module, kept so the shim round-trips
+    bit-for-bit); wire payload is ``size`` int8 values + 4 scale bytes.
+    """
+
+    name = "int8"
+    stateful = True
+
+    def encode(self, value):
+        t = value.astype(jnp.float32)
+        scale = jnp.max(jnp.abs(t)) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(t / scale), -127, 127).astype(jnp.int8)
+        return q, scale.astype(jnp.float32)
+
+    def decode(self, payload, shape):
+        q, scale = payload
+        return q.astype(jnp.float32) * scale
+
+    def payload_nbytes(self, shape, dtype) -> int:
+        return math.prod(shape) * 1 + 4          # int8 payload + f32 scale
+
+
+class Fp8Codec(Codec):
+    """Simulated fp8 (e4m3) quantization with one f32 scale.
+
+    Values are scaled into the e4m3 dynamic range, cast to
+    ``jnp.float8_e4m3fn`` and back -- the cast is the quantizer, so the
+    error profile is fp8's (relative, not absolute like int8's).  Wire
+    payload is ``size`` fp8 bytes + 4 scale bytes.
+    """
+
+    name = "fp8"
+    stateful = True
+
+    def __init__(self):
+        if _FP8_DTYPE is None:
+            raise NotImplementedError(
+                "codec 'fp8' needs jnp.float8_e4m3fn, which this jax "
+                "build does not provide; use 'int8' instead")
+
+    def encode(self, value):
+        t = value.astype(jnp.float32)
+        scale = jnp.max(jnp.abs(t)) / FP8_E4M3_MAX + 1e-12
+        return (t / scale).astype(_FP8_DTYPE), scale.astype(jnp.float32)
+
+    def decode(self, payload, shape):
+        q, scale = payload
+        return q.astype(jnp.float32) * scale
+
+    def payload_nbytes(self, shape, dtype) -> int:
+        return math.prod(shape) * 1 + 4          # fp8 payload + f32 scale
+
+
+class TopKCodec(Codec):
+    """Magnitude top-k sparsification: keep the ``ceil(frac * size)``
+    largest-|.| entries, zero the rest.  Wire payload is k (value,
+    int32 index) pairs; everything dropped lands in the error-feedback
+    residual and travels on a later step."""
+
+    stateful = True
+
+    def __init__(self, frac: float = 0.1):
+        if not 0.0 < frac <= 1.0:
+            raise ValueError(f"topk fraction must be in (0, 1], got {frac}")
+        self.frac = float(frac)
+
+    @property
+    def name(self) -> str:
+        return f"topk:{self.frac:g}"
+
+    def k_of(self, size: int) -> int:
+        return max(1, min(size, int(math.ceil(self.frac * size))))
+
+    def encode(self, value):
+        flat = value.astype(jnp.float32).ravel()
+        k = self.k_of(flat.shape[0])
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        return flat[idx], idx.astype(jnp.int32)
+
+    def decode(self, payload, shape):
+        vals, idx = payload
+        size = math.prod(shape)
+        return jnp.zeros((size,), jnp.float32).at[idx].set(vals).reshape(shape)
+
+    def payload_nbytes(self, shape, dtype) -> int:
+        # encode always emits f32 values (+ int32 indices), whatever the
+        # input dtype, so the wire cost is 8 bytes per kept entry
+        k = self.k_of(math.prod(shape))
+        return k * (4 + 4)
+
+
+# ---------------------------------------------------------------------------
+# codec registry
+# ---------------------------------------------------------------------------
+
+_FACTORIES = {
+    "identity": IdentityCodec,
+    "none": IdentityCodec,       # accepted spelling in policy specs
+    "int8": Int8Codec,
+    "fp8": Fp8Codec,
+}
+
+
+def available_codecs():
+    return sorted(_FACTORIES) + ["topk:FRAC"]
+
+
+def get_codec(spec) -> Codec:
+    """Codec instance from a spec string: ``identity`` / ``none`` /
+    ``int8`` / ``fp8`` / ``topk`` / ``topk:0.25``."""
+    if isinstance(spec, Codec):
+        return spec
+    s = str(spec).strip().lower()
+    if s.startswith("topk"):
+        rest = s[len("topk"):]
+        if rest in ("", ":"):
+            return TopKCodec()
+        return TopKCodec(float(rest.lstrip(":")))
+    try:
+        return _FACTORIES[s]()
+    except KeyError:
+        raise ValueError(f"unknown codec {spec!r}; available: "
+                         f"{available_codecs()}") from None
+
+
+# ---------------------------------------------------------------------------
+# legacy tree-level helpers (ex repro.optim.compression)
+# ---------------------------------------------------------------------------
+
+_INT8 = Int8Codec()
+
+
+def init_error(params):
+    """Zero error-feedback residual tree matching ``params``."""
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def compress(grads, error):
+    """Int8-with-error-feedback over a pytree.
+    Returns ``(int8 tree, scale tree, new error tree)``."""
+    def one(g, e):
+        t = g.astype(jnp.float32) + e
+        q, s = _INT8.encode(t)
+        return q, s, t - _INT8.decode((q, s), t.shape)
+
+    out = jax.tree.map(one, grads, error)
+    is_rec = lambda x: isinstance(x, tuple)  # noqa: E731
+    qs = jax.tree.map(lambda t: t[0], out, is_leaf=is_rec)
+    ss = jax.tree.map(lambda t: t[1], out, is_leaf=is_rec)
+    es = jax.tree.map(lambda t: t[2], out, is_leaf=is_rec)
+    return qs, ss, es
+
+
+def decompress(qs, ss):
+    """Inverse of :func:`compress` (without the residual)."""
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s, qs, ss)

@@ -1,0 +1,127 @@
+"""CompressionPolicy: which codec runs on which named collective.
+
+A policy maps the *names* a solver's
+:class:`~repro.core.comm.CommSchedule` declares to
+:class:`~repro.core.compress.codecs.Codec` instances, with a default
+codec for every name not mentioned.  Because collectives are named, a
+policy can compress the big vector reductions while leaving the
+numerically delicate ones exact::
+
+    # compress D3CA's primal-dual map, keep the dual average exact
+    CompressionPolicy.from_spec("w_contrib=int8,dalpha=identity")
+
+    # one codec for every declared collective
+    CompressionPolicy.from_spec("int8")
+
+    # mixed: default int8, but ADMM's ridge rhs stays exact
+    CompressionPolicy.from_spec("int8,rhs=identity")
+
+Policies are validated against each solver's declared schedule at
+program-build time (:meth:`CompressionPolicy.validate`): naming a
+collective the solver never declares is a loud error listing what IS
+declared, so a typo cannot silently leave a reduction uncompressed.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from .codecs import Codec, IdentityCodec, get_codec
+
+
+class CompressionPolicy:
+    """Per-collective codec assignment with a default."""
+
+    def __init__(self, default="identity",
+                 per_collective: Optional[Dict[str, object]] = None):
+        self.default: Codec = get_codec(default)
+        self.per_collective: Dict[str, Codec] = {
+            name: get_codec(c) for name, c in (per_collective or {}).items()}
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def from_spec(cls, spec: str) -> "CompressionPolicy":
+        """Parse ``"int8"`` / ``"topk:0.1"`` / ``"dw=int8,z=identity"`` /
+        ``"int8,rhs=identity"`` (bare entry = default codec)."""
+        default = "identity"
+        per: Dict[str, str] = {}
+        seen_default = False
+        for part in str(spec).split(","):
+            part = part.strip()
+            if not part:
+                continue
+            if "=" in part:
+                name, codec = part.split("=", 1)
+                name, codec = name.strip(), codec.strip()
+                if not name or not codec:
+                    raise ValueError(f"malformed policy entry {part!r} in "
+                                     f"spec {spec!r}")
+                if name in per:
+                    raise ValueError(f"collective {name!r} assigned twice "
+                                     f"in spec {spec!r}")
+                per[name] = codec
+            else:
+                if seen_default:
+                    raise ValueError(f"two default codecs in spec {spec!r}")
+                default, seen_default = part, True
+        return cls(default=default, per_collective=per)
+
+    # -- lookup --------------------------------------------------------------
+    def codec_for(self, name: str) -> Codec:
+        return self.per_collective.get(name, self.default)
+
+    def stateful_names(self, schedule) -> tuple:
+        """Names of the schedule's collectives whose codec carries an
+        error-feedback residual."""
+        return tuple(p.name for p in schedule
+                     if self.codec_for(p.name).stateful)
+
+    @property
+    def spec(self) -> str:
+        """Canonical round-trippable spec string."""
+        parts = [self.default.name]
+        parts += [f"{n}={c.name}"
+                  for n, c in sorted(self.per_collective.items())]
+        return ",".join(parts)
+
+    # -- build-time contract -------------------------------------------------
+    def validate(self, schedule) -> "CompressionPolicy":
+        """Every explicitly named collective must be declared by the
+        solver's CommSchedule."""
+        unknown = sorted(set(self.per_collective) - set(schedule.names))
+        if unknown:
+            raise ValueError(
+                f"compression policy names collectives {unknown} that this "
+                f"solver's CommSchedule never declares "
+                f"(declared: {sorted(schedule.names)}); fix the policy spec "
+                "or drop the entry")
+        return self
+
+    def __repr__(self):
+        return f"CompressionPolicy({self.spec!r})"
+
+
+def as_policy(compression) -> Optional[CompressionPolicy]:
+    """Normalize the user-facing ``compression=`` knob.
+
+    ``None`` means *no compression machinery at all* (the engines build
+    the exact PR-4 program); a policy whose codecs are all identity
+    still routes through :class:`CompressedComm` but is bit-identical by
+    construction.  Accepts a policy, a spec string, a codec name, or a
+    ``{collective: codec}`` dict (dict entries may include a
+    ``"default"`` key).
+    """
+    if compression is None:
+        return None
+    if isinstance(compression, CompressionPolicy):
+        return compression
+    if isinstance(compression, dict):
+        per = dict(compression)
+        default = per.pop("default", "identity")
+        return CompressionPolicy(default=default, per_collective=per)
+    if isinstance(compression, Codec):
+        return CompressionPolicy(default=compression)
+    return CompressionPolicy.from_spec(str(compression))
+
+
+def identity_policy() -> CompressionPolicy:
+    return CompressionPolicy(default=IdentityCodec())

@@ -33,8 +33,8 @@ import jax.numpy as jnp
 
 from .comm import CommSchedule
 from .engines import (CellProgram, EngineProgram, SparseShardMapData,
-                      drive_with_callback, grid_program, mesh_program,
-                      mesh_step_fn)
+                      drive_with_callback, grid_bind_state, grid_program,
+                      mesh_program, mesh_step_fn)
 from .local import local_sdca, local_sdca_sparse
 from .losses import Loss, get_loss
 from .partition import (DoublyPartitioned, SparseDoublyPartitioned,
@@ -113,12 +113,15 @@ def d3ca_cell_program(loss: Loss, cfg: D3CAConfig, *, n: int, n_p: int,
 
 def d3ca_simulated_program(loss: Loss, data: DoublyPartitioned,
                            cfg: D3CAConfig, *, local_backend: str = "ref",
-                           w0=None, alpha0=None) -> EngineProgram:
+                           w0=None, alpha0=None,
+                           compression=None) -> EngineProgram:
     """Named-vmap grid engine.  State: (alpha (P, n_p), w_blocks (Q, m_q)).
 
     ``data`` may be a dense :class:`DoublyPartitioned` or a sparse
     :class:`SparseDoublyPartitioned` (padded-ELL cells); the cell
-    program is the same one the mesh engines run."""
+    program is the same one the mesh engines run.  ``compression`` (a
+    CompressionPolicy) routes both collectives through their codecs and
+    adds the error-feedback residuals to the engine state."""
     sparse = isinstance(data, SparseDoublyPartitioned)
     Pn, Qn = data.P, data.Q
     cellprog = d3ca_cell_program(loss, cfg, n=data.n, n_p=data.n_p,
@@ -127,17 +130,22 @@ def d3ca_simulated_program(loss: Loss, data: DoublyPartitioned,
     key0 = jax.random.PRNGKey(cfg.seed)
     x_parts = (data.cols, data.vals) if sparse else (data.x_blocks,)
     gdata = (key0, *x_parts, data.y_blocks, data.mask)
-    step = grid_program(cellprog, Pn, Qn)
+    step = grid_program(cellprog, Pn, Qn, compression=compression)
 
     alpha_init = (jnp.zeros((Pn, data.n_p)) if alpha0 is None
                   else data.alpha_to_blocks(jnp.asarray(alpha0)))
     w_init = (jnp.zeros((Qn, data.m_q)) if w0 is None
               else data.w_to_blocks(jnp.asarray(w0)))
+    state0 = (alpha_init, w_init)
+    full0, unwrap, acct = grid_bind_state(cellprog, gdata, state0,
+                                          Pn=Pn, Qn=Qn,
+                                          compression=compression)
     return EngineProgram(
-        state=(alpha_init, w_init),
+        state=full0,
         step=lambda t, s: step(t, gdata, s),
-        w_of=lambda s: data.w_from_blocks(s[1]),
-        alpha_of=lambda s: data.alpha_from_blocks(s[0] * data.mask))
+        w_of=lambda s: data.w_from_blocks(unwrap(s)[1]),
+        alpha_of=lambda s: data.alpha_from_blocks(unwrap(s)[0] * data.mask),
+        comm_bytes=acct)
 
 
 def d3ca_simulated(loss_name: str, data: DoublyPartitioned, cfg: D3CAConfig,
@@ -202,12 +210,14 @@ def make_d3ca_step_sparse(loss: Loss, mesh, cfg: D3CAConfig, *, n: int,
 
 def d3ca_shard_map_program(loss: Loss, sdata, cfg: D3CAConfig,
                            *, local_backend: str = "ref",
-                           w0=None, alpha0=None,
-                           staleness: int = 0) -> EngineProgram:
-    """Mesh engine.  State: ((alpha (n_pad,), w (m_pad,)), stale_bufs),
-    all sharded.  ``sdata`` is a :class:`ShardMapData` or
+                           w0=None, alpha0=None, staleness: int = 0,
+                           compression=None) -> EngineProgram:
+    """Mesh engine.  State: ((alpha (n_pad,), w (m_pad,)), comm_state),
+    all sharded (comm_state carries staleness rings and/or EF
+    residuals).  ``sdata`` is a :class:`ShardMapData` or
     :class:`SparseShardMapData`; ``staleness=tau > 0`` selects the
-    bounded-staleness async policy (tau = 0 is the sync engine)."""
+    bounded-staleness async policy (tau = 0 is the sync engine);
+    ``compression`` routes both collectives through their codecs."""
     sparse = isinstance(sdata, SparseShardMapData)
     cellprog = d3ca_cell_program(
         loss, cfg, n=sdata.n, n_p=sdata.n_p,
@@ -219,15 +229,16 @@ def d3ca_shard_map_program(loss: Loss, sdata, cfg: D3CAConfig,
     alpha_init = (sdata.zeros_data() if alpha0 is None
                   else sdata.pad_alpha(alpha0))
     w_init = sdata.zeros_model() if w0 is None else sdata.pad_w(w0)
-    step, bufs0 = mesh_program(
+    step, comm0, acct = mesh_program(
         cellprog, sdata.mesh, mdata, (alpha_init, w_init),
         data_axis=sdata.data_axis, model_axis=sdata.model_axis,
-        staleness=staleness)
+        staleness=staleness, compression=compression)
     return EngineProgram(
-        state=((alpha_init, w_init), bufs0),
+        state=((alpha_init, w_init), comm0),
         step=lambda t, s: step(t, mdata, s),
         w_of=lambda s: s[0][1][: sdata.m],
-        alpha_of=lambda s: s[0][0][: sdata.n])
+        alpha_of=lambda s: s[0][0][: sdata.n],
+        comm_bytes=acct)
 
 
 def d3ca_distributed(loss_name: str, mesh, x, y, mask, cfg: D3CAConfig,

@@ -20,6 +20,13 @@ engines here execute that single program three ways:
     via FIFO buffers carried in the engine state.  ``tau = 0``
     reproduces ``"shard_map"`` exactly (same jaxpr).
 
+Orthogonally to the engine choice, a
+:class:`~repro.core.compress.CompressionPolicy` (``compression=``)
+routes every declared collective's payload through a codec with error
+feedback (:class:`~repro.core.compress.CompressedComm` wraps the
+sync/stale executor), and every binding reports exact bytes-on-wire
+via :func:`comm_accounting` (``EngineProgram.comm_bytes``).
+
 The executors produce an :class:`EngineProgram` -- initial state, jitted
 outer step, extractors for the global primal (and dual) iterates.
 Everything else (the outer loop, history, early stopping, warm starts)
@@ -42,6 +49,7 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from .comm import CommSchedule, ShapeProbeComm, StaleComm, SyncComm
+from .compress import CompressedComm, wire_accounting
 from .partition import _ceil_to
 from .util import as_axes, axes_size, pvary, shard_map
 
@@ -54,6 +62,10 @@ class EngineProgram:
     step: Callable[[int, Any], Any]               # (t, state) -> state
     w_of: Callable[[Any], jnp.ndarray]            # state -> global w (m,)
     alpha_of: Optional[Callable[[Any], jnp.ndarray]] = None  # -> alpha (n,)
+    #: exact per-step wire accounting of the program's declared
+    #: collectives (see ``repro.core.compress.wire_accounting``); None
+    #: for programs built outside the generic executors
+    comm_bytes: Optional[dict] = None
 
 
 def drive(prog: EngineProgram, outer_iters: int, observe=None):
@@ -292,7 +304,25 @@ class CellProgram:
 _GRID_DATA, _GRID_MODEL = "grid_data", "grid_model"
 
 
-def grid_program(cellprog: CellProgram, Pn: int, Qn: int):
+def _drop_replicas(out, state_specs):
+    """Collectives replicate results along the reduced axis exactly
+    (every cell sees the same psum), so dropping replicas is exact."""
+    leaves, treedef = jax.tree_util.tree_flatten(out)
+    spec_leaves = _spec_leaves(state_specs)
+    kept = []
+    for leaf, ds in zip(leaves, spec_leaves):
+        if "data" not in ds:
+            leaf = leaf[0]
+            if "model" not in ds:
+                leaf = leaf[0]
+        elif "model" not in ds:
+            leaf = leaf[:, 0]
+        kept.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, kept)
+
+
+def grid_program(cellprog: CellProgram, Pn: int, Qn: int, *,
+                 compression=None):
     """Named-``vmap`` executor: the P x Q grid is the leading block axes
     of the operands and the declared collectives run as vmap-axis
     reductions.  Returns a jitted ``step(t, data, state) -> state``
@@ -300,49 +330,73 @@ def grid_program(cellprog: CellProgram, Pn: int, Qn: int):
     leading block axis per logical axis in its dim-spec, in
     (data, model) order, with the per-cell extent left in place (so a
     cell sees exactly the array a shard_map device would own).
+
+    With ``compression`` (a validated
+    :class:`~repro.core.compress.CompressionPolicy`) the step signature
+    becomes ``step(t, data, (state, ef)) -> (state, ef)``: every
+    collective payload runs through its codec under a
+    :class:`~repro.core.compress.CompressedComm`, and ``ef`` maps each
+    compressed collective to its (P, Q, *payload) error-feedback
+    residuals (allocate with :func:`grid_comm_state`).  ``None`` builds
+    the exact uncompressed program.
     """
     axis_map = {"data": (_GRID_DATA,), "model": (_GRID_MODEL,)}
     sizes = {"data": Pn, "model": Qn}
     sched = cellprog.schedule
-
-    def one_cell(t, d, s):
-        comm = SyncComm(sched, axis_map, sizes)
-        out = cellprog.cell(comm, t, d, s)
-        comm.finalize()
-        return out
+    policy = compression
+    if policy is not None:
+        policy.validate(sched)
 
     def in_axes(specs, axis):
         return jax.tree_util.tree_map(
             lambda ds: 0 if axis in ds else None, specs,
             is_leaf=_is_dimspec)
 
-    inner = jax.vmap(one_cell,
+    if policy is None:
+        def one_cell(t, d, s):
+            comm = SyncComm(sched, axis_map, sizes)
+            out = cellprog.cell(comm, t, d, s)
+            comm.finalize()
+            return out
+
+        inner = jax.vmap(one_cell,
+                         in_axes=(None, in_axes(cellprog.data_specs, "model"),
+                                  in_axes(cellprog.state_specs, "model")),
+                         axis_name=_GRID_MODEL)
+        outer = jax.vmap(inner,
+                         in_axes=(None, in_axes(cellprog.data_specs, "data"),
+                                  in_axes(cellprog.state_specs, "data")),
+                         axis_name=_GRID_DATA)
+
+        def step(t, data, state):
+            out = outer(t, data, state)     # every leaf gains (P, Q) leading
+            return _drop_replicas(out, cellprog.state_specs)
+
+        return jax.jit(step)
+
+    def one_cell_c(t, d, s, ef):
+        comm = CompressedComm(SyncComm(sched, axis_map, sizes), policy,
+                              ef=ef)
+        out = cellprog.cell(comm, t, d, s)
+        comm.finalize()
+        return out, comm.ef_out
+
+    # EF residuals are private per cell: blocked over both grid axes
+    inner = jax.vmap(one_cell_c,
                      in_axes=(None, in_axes(cellprog.data_specs, "model"),
-                              in_axes(cellprog.state_specs, "model")),
+                              in_axes(cellprog.state_specs, "model"), 0),
                      axis_name=_GRID_MODEL)
     outer = jax.vmap(inner,
                      in_axes=(None, in_axes(cellprog.data_specs, "data"),
-                              in_axes(cellprog.state_specs, "data")),
+                              in_axes(cellprog.state_specs, "data"), 0),
                      axis_name=_GRID_DATA)
 
-    def step(t, data, state):
-        out = outer(t, data, state)         # every leaf gains (P, Q) leading
-        leaves, treedef = jax.tree_util.tree_flatten(out)
-        spec_leaves = _spec_leaves(cellprog.state_specs)
-        # collectives replicate results along the reduced axis exactly
-        # (every cell sees the same psum), so dropping replicas is exact
-        kept = []
-        for leaf, ds in zip(leaves, spec_leaves):
-            if "data" not in ds:
-                leaf = leaf[0]
-                if "model" not in ds:
-                    leaf = leaf[0]
-            elif "model" not in ds:
-                leaf = leaf[:, 0]
-            kept.append(leaf)
-        return jax.tree_util.tree_unflatten(treedef, kept)
+    def step_c(t, data, full_state):
+        state, ef = full_state
+        out, ef_out = outer(t, data, state, ef)
+        return _drop_replicas(out, cellprog.state_specs), ef_out
 
-    return jax.jit(step)
+    return jax.jit(step_c)
 
 
 # -- mesh engines (shard_map; sync and bounded-staleness) -------------------
@@ -376,22 +430,34 @@ def _pvary_missing(tree_vals, specs, axis_map):
 
 
 def mesh_step_fn(cellprog: CellProgram, mesh, *, data_axis="data",
-                 model_axis: str = "model", staleness: int = 0):
+                 model_axis: str = "model", staleness: int = 0,
+                 compression=None):
     """Raw (unjitted) mesh executor.
 
-    Returns ``step(t, data, state, bufs) -> (state, bufs)`` running the
-    cell once per device of the (data=P, model=Q) mesh under shard_map.
-    With ``staleness == 0`` the declared collectives apply synchronously
-    (:class:`SyncComm`); with ``staleness = tau > 0`` they apply through
-    :class:`StaleComm` FIFO buffers -- ``bufs`` maps each collective
-    name to a ``(P, Q, tau, *cell_result_shape)`` array sharded over
-    (data, model), i.e. one private ring per cell.
+    Returns ``step(t, data, state, cbufs) -> (state, cbufs)`` running
+    the cell once per device of the (data=P, model=Q) mesh under
+    shard_map.  ``cbufs`` is the communication-state pytree -- ``{}``
+    when no policy needs state, otherwise up to two sub-dicts of
+    per-cell buffers sharded over (data, model):
+
+      * ``cbufs["stale"]`` (``staleness = tau > 0``): one
+        ``(P, Q, tau, *cell_result_shape)`` FIFO ring per collective
+        (:class:`StaleComm`; tau = 0 applies every reduction
+        synchronously via :class:`SyncComm`);
+      * ``cbufs["ef"]`` (``compression`` with lossy codecs): one
+        ``(P, Q, *payload_shape)`` f32 error-feedback residual per
+        compressed collective (:class:`CompressedComm` wrapping the
+        sync/stale executor, so compression composes with staleness).
     """
     daxes = as_axes(data_axis)
     axis_map = {"data": daxes, "model": (model_axis,)}
     sizes = {"data": axes_size(mesh, data_axis),
              "model": axes_size(mesh, model_axis)}
     sched = cellprog.schedule
+    policy = compression
+    if policy is not None:
+        policy.validate(sched)
+    ef_names = policy.stateful_names(sched) if policy is not None else ()
     dspec = daxes if len(daxes) > 1 else daxes[0]
 
     def pspecs(specs):
@@ -401,21 +467,40 @@ def mesh_step_fn(cellprog: CellProgram, mesh, *, data_axis="data",
 
     data_pspecs = pspecs(cellprog.data_specs)
     state_pspecs = pspecs(cellprog.state_specs)
-    buf_pspecs = ({name: P(dspec, model_axis) for name in sched.names}
-                  if staleness else {})
+    buf_pspecs = {}
+    if staleness:
+        buf_pspecs["stale"] = {name: P(dspec, model_axis)
+                               for name in sched.names}
+    if ef_names:
+        buf_pspecs["ef"] = {name: P(dspec, model_axis) for name in ef_names}
 
-    def kernel(t, data, state, bufs):
+    def kernel(t, data, state, cbufs):
         data = _pvary_missing(data, cellprog.data_specs, axis_map)
         state = _pvary_missing(state, cellprog.state_specs, axis_map)
         t = pvary(t, daxes + (model_axis,))
         if staleness:
-            comm = StaleComm(sched, axis_map, sizes, tau=staleness, t=t,
-                             bufs={k: b[0, 0] for k, b in bufs.items()})
+            inner = StaleComm(sched, axis_map, sizes, tau=staleness, t=t,
+                              bufs={k: b[0, 0]
+                                    for k, b in cbufs["stale"].items()})
         else:
-            comm = SyncComm(sched, axis_map, sizes)
+            inner = SyncComm(sched, axis_map, sizes)
+        if policy is not None:
+            comm = CompressedComm(inner, policy,
+                                  ef={k: b[0, 0]
+                                      for k, b in cbufs.get("ef",
+                                                            {}).items()})
+        else:
+            comm = inner
         out = cellprog.cell(comm, t, data, state)
         comm.finalize()
-        return out, {k: b[None, None] for k, b in comm.bufs_out.items()}
+        cb_out = {}
+        if staleness:
+            cb_out["stale"] = {k: b[None, None]
+                               for k, b in comm.bufs_out.items()}
+        if ef_names:
+            cb_out["ef"] = {k: e[None, None]
+                            for k, e in comm.ef_out.items()}
+        return out, cb_out
 
     return shard_map(
         kernel, mesh,
@@ -424,12 +509,28 @@ def mesh_step_fn(cellprog: CellProgram, mesh, *, data_axis="data",
 
 
 def probe_collective_shapes(cellprog: CellProgram, data, state, *,
-                            sizes) -> dict:
-    """Per-cell result aval of every declared collective, via one
+                            sizes, layout: str = "global"):
+    """Per-cell avals of every declared collective, via one
     ``eval_shape`` trace of the cell under a ShapeProbeComm (no mesh or
-    devices needed)."""
+    devices needed).  Returns ``(results, payloads)``: the *result* aval
+    sizes the async engine's staleness rings; the *payload* aval (the
+    value the cell hands to ``comm``, i.e. what travels the wire) sizes
+    error-feedback residuals and the wire accounting.
+
+    ``layout`` names how ``data``/``state`` leaves relate to one cell's
+    array: ``"global"`` (mesh layout -- each dim named in the dim-spec
+    is divided by its grid extent) or ``"blocked"`` (grid-engine layout
+    -- one extra leading block axis per named dim, dropped).
+    """
+    if layout not in ("global", "blocked"):
+        raise ValueError(f"layout={layout!r}; expected 'global' or "
+                         "'blocked'")
+
     def cell_aval(arr, ds):
         arr = jnp.asarray(arr) if not hasattr(arr, "shape") else arr
+        if layout == "blocked":
+            k = sum(1 for a in ds if a)
+            return jax.ShapeDtypeStruct(tuple(arr.shape[k:]), arr.dtype)
         shape = list(arr.shape)
         for i, a in enumerate(ds):
             if a:
@@ -443,9 +544,10 @@ def probe_collective_shapes(cellprog: CellProgram, data, state, *,
         return jax.tree_util.tree_unflatten(treedef, out)
 
     record: dict = {}
+    payloads: dict = {}
     probe = ShapeProbeComm(cellprog.schedule,
                            {"data": ("data",), "model": ("model",)}, sizes,
-                           record)
+                           record, payloads)
 
     def run(t, d, s):
         out = cellprog.cell(probe, t, d, s)
@@ -455,37 +557,86 @@ def probe_collective_shapes(cellprog: CellProgram, data, state, *,
     jax.eval_shape(run, jax.ShapeDtypeStruct((), jnp.int32),
                    avals(data, cellprog.data_specs),
                    avals(state, cellprog.state_specs))
-    return record
+    return record, payloads
+
+
+def comm_accounting(cellprog: CellProgram, data, state, *, sizes,
+                    layout: str = "global", compression=None) -> dict:
+    """Exact per-step bytes-on-wire of a CellProgram's schedule under a
+    compression policy (None = uncompressed), for
+    ``EngineProgram.comm_bytes``.  One eval_shape probe, no devices."""
+    _, payloads = probe_collective_shapes(cellprog, data, state,
+                                          sizes=sizes, layout=layout)
+    return wire_accounting(cellprog.schedule, payloads, sizes, compression)
+
+
+def grid_bind_state(cellprog: CellProgram, data, state0, *, Pn: int, Qn: int,
+                    compression=None):
+    """Engine-state plumbing shared by the grid-engine program builders.
+
+    One build-time probe yields both the wire accounting and (when the
+    policy carries error feedback) the zero EF residuals -- one
+    ``(P, Q, *payload_shape)`` f32 buffer per stateful-codec collective,
+    blocked layout, matching :func:`grid_program`'s ``ef`` operand.
+    Returns ``(full_state0, unwrap, acct)`` where ``unwrap`` recovers
+    the solver state from the full engine state (identity when
+    ``compression`` is None, so the uncompressed state layout is
+    untouched)."""
+    sizes = {"data": Pn, "model": Qn}
+    _, payloads = probe_collective_shapes(cellprog, data, state0,
+                                          sizes=sizes, layout="blocked")
+    acct = wire_accounting(cellprog.schedule, payloads, sizes, compression)
+    if compression is None:
+        return state0, (lambda s: s), acct
+    ef0 = {name: jnp.zeros((Pn, Qn) + payloads[name].shape, jnp.float32)
+           for name in compression.stateful_names(cellprog.schedule)}
+    return (state0, ef0), (lambda s: s[0]), acct
 
 
 def mesh_program(cellprog: CellProgram, mesh, data, state0, *,
                  data_axis="data", model_axis: str = "model",
-                 staleness: int = 0):
-    """Bind a CellProgram to a mesh: returns ``(step, bufs0)`` where
-    ``step(t, data, (state, bufs))`` is jitted and ``bufs0`` holds the
-    zero-initialized staleness rings ({} when ``staleness == 0``, in
-    which case the jaxpr is exactly the sync engine's)."""
+                 staleness: int = 0, compression=None):
+    """Bind a CellProgram to a mesh: returns ``(step, comm0, acct)``
+    where ``step(t, data, (state, comm_state))`` is jitted, ``comm0``
+    holds the zero-initialized communication state (staleness rings
+    under ``"stale"``, error-feedback residuals under ``"ef"``; ``{}``
+    when ``staleness == 0`` and no lossy codec runs, in which case the
+    jaxpr is exactly the sync engine's), and ``acct`` is the program's
+    exact per-step wire accounting (:func:`comm_accounting`)."""
     daxes = as_axes(data_axis)
     sizes = {"data": axes_size(mesh, data_axis),
              "model": axes_size(mesh, model_axis)}
+    policy = compression
     raw = mesh_step_fn(cellprog, mesh, data_axis=data_axis,
-                       model_axis=model_axis, staleness=staleness)
-    bufs0 = {}
+                       model_axis=model_axis, staleness=staleness,
+                       compression=policy)
+    results, payloads = probe_collective_shapes(cellprog, data, state0,
+                                                sizes=sizes)
+    acct = wire_accounting(cellprog.schedule, payloads, sizes, policy)
+    comm0 = {}
+    dspec = daxes if len(daxes) > 1 else daxes[0]
+    put = _putter(mesh)
     if staleness > 0:
-        record = probe_collective_shapes(cellprog, data, state0, sizes=sizes)
-        dspec = daxes if len(daxes) > 1 else daxes[0]
-        put = _putter(mesh)
-        for name, aval in record.items():
+        comm0["stale"] = {}
+        for name, aval in results.items():
             shape = (sizes["data"], sizes["model"], staleness) + aval.shape
-            bufs0[name] = put(jnp.zeros(shape, aval.dtype),
-                              P(dspec, model_axis))
+            comm0["stale"][name] = put(jnp.zeros(shape, aval.dtype),
+                                       P(dspec, model_axis))
+    ef_names = policy.stateful_names(cellprog.schedule) \
+        if policy is not None else ()
+    if ef_names:
+        comm0["ef"] = {
+            name: put(jnp.zeros((sizes["data"], sizes["model"])
+                                + payloads[name].shape, jnp.float32),
+                      P(dspec, model_axis))
+            for name in ef_names}
 
     @jax.jit
     def step(t, data, full_state):
-        state, bufs = full_state
-        return raw(t, data, state, bufs)
+        state, cbufs = full_state
+        return raw(t, data, state, cbufs)
 
-    return step, bufs0
+    return step, comm0, acct
 
 
 def prepare_shard_map(mesh, X, y, *, data_axis="data", model_axis="model",

@@ -38,8 +38,8 @@ import jax.numpy as jnp
 
 from .comm import CommSchedule
 from .engines import (CellProgram, EngineProgram, SparseShardMapData,
-                      drive_with_callback, grid_program, mesh_program,
-                      mesh_step_fn)
+                      drive_with_callback, grid_bind_state, grid_program,
+                      mesh_program, mesh_step_fn)
 from .local import local_svrg, local_svrg_sparse
 from .losses import Loss, get_loss
 from .partition import (DoublyPartitioned, SparseDoublyPartitioned,
@@ -163,12 +163,14 @@ def radisa_cell_program(loss: Loss, cfg: RADiSAConfig, *, n: int, n_p: int,
 def radisa_simulated_program(loss: Loss, data: DoublyPartitioned,
                              cfg: RADiSAConfig, *,
                              local_backend: str = "ref",
-                             w0=None) -> EngineProgram:
+                             w0=None, compression=None) -> EngineProgram:
     """Named-vmap grid engine.  State: w_blocks (Q, m_q).
 
     Requires P | m_q (pre-pad with ``partition(..., m_multiple=P*Q)``).
     ``data`` may be dense (:class:`DoublyPartitioned`) or sparse
-    (:class:`SparseDoublyPartitioned`, padded-ELL cells)."""
+    (:class:`SparseDoublyPartitioned`, padded-ELL cells);
+    ``compression`` routes the anchor/grad/recombine collectives
+    through their policy codecs."""
     sparse = isinstance(data, SparseDoublyPartitioned)
     Pn, Qn = data.P, data.Q
     _check_subblocks(data.m_q, Pn, cfg.variant == "avg")
@@ -178,14 +180,18 @@ def radisa_simulated_program(loss: Loss, data: DoublyPartitioned,
     key0 = jax.random.PRNGKey(cfg.seed)
     x_parts = (data.cols, data.vals) if sparse else (data.x_blocks,)
     gdata = (key0, *x_parts, data.y_blocks, data.mask)
-    step = grid_program(cellprog, Pn, Qn)
+    step = grid_program(cellprog, Pn, Qn, compression=compression)
 
     w_init = (jnp.zeros((Qn, data.m_q)) if w0 is None
               else data.w_to_blocks(jnp.asarray(w0)))
+    full0, unwrap, acct = grid_bind_state(cellprog, gdata, w_init,
+                                          Pn=Pn, Qn=Qn,
+                                          compression=compression)
     return EngineProgram(
-        state=w_init,
+        state=full0,
         step=lambda t, s: step(t, gdata, s),
-        w_of=data.w_from_blocks)
+        w_of=lambda s: data.w_from_blocks(unwrap(s)),
+        comm_bytes=acct)
 
 
 def radisa_simulated(loss_name: str, data: DoublyPartitioned,
@@ -267,10 +273,12 @@ def make_radisa_step_sparse(loss: Loss, mesh, cfg: RADiSAConfig, *, n: int,
 
 def radisa_shard_map_program(loss: Loss, sdata, cfg: RADiSAConfig, *,
                              local_backend: str = "ref",
-                             w0=None, staleness: int = 0) -> EngineProgram:
-    """Mesh engine.  State: (w (m_pad,) sharded over model, stale_bufs).
+                             w0=None, staleness: int = 0,
+                             compression=None) -> EngineProgram:
+    """Mesh engine.  State: (w (m_pad,) sharded over model, comm_state).
     ``sdata`` is a :class:`ShardMapData` or :class:`SparseShardMapData`;
-    ``staleness=tau > 0`` selects the bounded-staleness async policy."""
+    ``staleness=tau > 0`` selects the bounded-staleness async policy;
+    ``compression`` routes the declared collectives through codecs."""
     from .util import axes_size
     sparse = isinstance(sdata, SparseShardMapData)
     Pn = axes_size(sdata.mesh, sdata.data_axis)
@@ -282,14 +290,15 @@ def radisa_shard_map_program(loss: Loss, sdata, cfg: RADiSAConfig, *,
     x_parts = (sdata.cols, sdata.vals) if sparse else (sdata.x,)
     mdata = (key0, *x_parts, sdata.y, sdata.mask)
     w_init = sdata.zeros_model() if w0 is None else sdata.pad_w(w0)
-    step, bufs0 = mesh_program(
+    step, comm0, acct = mesh_program(
         cellprog, sdata.mesh, mdata, w_init,
         data_axis=sdata.data_axis, model_axis=sdata.model_axis,
-        staleness=staleness)
+        staleness=staleness, compression=compression)
     return EngineProgram(
-        state=(w_init, bufs0),
+        state=(w_init, comm0),
         step=lambda t, s: step(t, mdata, s),
-        w_of=lambda s: s[0][: sdata.m])
+        w_of=lambda s: s[0][: sdata.m],
+        comm_bytes=acct)
 
 
 def radisa_distributed(loss_name: str, mesh, x, y, mask, cfg: RADiSAConfig,

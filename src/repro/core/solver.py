@@ -23,6 +23,14 @@ This module provides that story once:
         dense tiles vs padded-ELL sparse cells whose memory scales with
         the nonzero count (news20-scale instances; accepts a
         :class:`~repro.data.sparse.CSRMatrix` without ever densifying);
+      - ``compression=...``  -- a codec spec / CompressionPolicy mapping
+        the solver's declared collectives to compression codecs
+        (``"int8"``, ``"fp8"``, ``"topk:0.1"``, or per-collective
+        ``"w_contrib=int8,dalpha=identity"``) with error feedback;
+        ``None`` builds the exact uncompressed program, and the
+        identity codec is bit-identical to it.  Every program reports
+        exact bytes-on-wire (``SolveResult.comm_bytes`` + cumulative
+        ``comm_bytes`` per history entry);
   * a shared outer driver: objective / duality-gap history, early
     stopping, warm starts from a previous ``w`` / ``alpha``.
 
@@ -48,6 +56,7 @@ from typing import Any, Callable, Dict, List, Optional, Type
 
 from .admm import (ADMMConfig, admm_shard_map_program, admm_simulated_program,
                    make_admm_step)
+from .compress import as_policy
 from .d3ca import (D3CAConfig, d3ca_shard_map_program, d3ca_simulated_program,
                    make_d3ca_step)
 from .engines import (EngineProgram, drive, prepare_shard_map,
@@ -82,6 +91,11 @@ class SolveResult:
     local_backend: str
     block_format: str = "dense"
     staleness: int = 0
+    compression: Optional[str] = None   # canonical policy spec, or None
+    #: exact per-step wire accounting of the declared collectives (see
+    #: repro.core.compress.wire_accounting); history entries carry the
+    #: cumulative "comm_bytes" derived from it
+    comm_bytes: Optional[Dict] = None
 
 
 def _unpack_warm_start(warm_start):
@@ -113,7 +127,8 @@ class Solver:
     uses_local_backend: bool = True
 
     def __init__(self, engine: str = "simulated", local_backend: str = "ref",
-                 block_format: str = "dense", staleness: int = 0):
+                 block_format: str = "dense", staleness: int = 0,
+                 compression=None):
         engine = ENGINE_ALIASES.get(engine, engine)
         if engine not in ENGINES:
             raise ValueError(f"engine={engine!r}; expected one of {ENGINES}")
@@ -137,6 +152,15 @@ class Solver:
         self.local_backend = local_backend
         self.block_format = block_format
         self.staleness = staleness
+        #: normalized CompressionPolicy (None = no compression machinery
+        #: at all -- the engines build the exact uncompressed program).
+        #: Validated against the solver's declared CommSchedule when the
+        #: program is built.
+        self.compression = as_policy(compression)
+
+    @property
+    def compression_spec(self) -> Optional[str]:
+        return self.compression.spec if self.compression is not None else None
 
     # ---- subclass hooks ---------------------------------------------------
     def _simulated_program(self, loss, data, cfg, w0, alpha0) -> EngineProgram:
@@ -209,6 +233,7 @@ class Solver:
         history: List[Dict[str, float]] = []
         need_obs = record_history or callback is not None or tol is not None
         prev_f = [None]
+        bytes_per_step = (prog.comm_bytes or {}).get("bytes_per_step")
         t0 = time.perf_counter()
 
         def observe(t, state):
@@ -219,6 +244,10 @@ class Solver:
             f = float(loss.objective(X, y, w, lam))
             entry = {"iter": t, "time_s": time.perf_counter() - t0,
                      "objective": f}
+            if bytes_per_step is not None:
+                # cumulative bytes-on-wire after t outer steps (every
+                # declared collective launches once per step)
+                entry["comm_bytes"] = bytes_per_step * t
             if alpha is not None:
                 entry["duality_gap"] = float(
                     f - loss.dual_objective(X, y, alpha, lam))
@@ -247,7 +276,9 @@ class Solver:
             solver=self.name, engine=self.engine,
             local_backend=self.local_backend,
             block_format=self.block_format,
-            staleness=self.staleness)
+            staleness=self.staleness,
+            compression=self.compression_spec,
+            comm_bytes=prog.comm_bytes)
 
 
 # ---------------------------------------------------------------------------
@@ -286,14 +317,16 @@ class D3CASolver(Solver):
     def _simulated_program(self, loss, data, cfg, w0, alpha0):
         return d3ca_simulated_program(loss, data, cfg,
                                       local_backend=self.local_backend,
-                                      w0=w0, alpha0=alpha0)
+                                      w0=w0, alpha0=alpha0,
+                                      compression=self.compression)
 
     def _shard_map_program(self, loss, sdata, cfg, w0, alpha0,
                            staleness: int = 0):
         return d3ca_shard_map_program(loss, sdata, cfg,
                                       local_backend=self.local_backend,
                                       w0=w0, alpha0=alpha0,
-                                      staleness=staleness)
+                                      staleness=staleness,
+                                      compression=self.compression)
 
 
 @register_solver
@@ -305,13 +338,15 @@ class RADiSASolver(Solver):
     def _simulated_program(self, loss, data, cfg, w0, alpha0):
         return radisa_simulated_program(loss, data, cfg,
                                         local_backend=self.local_backend,
-                                        w0=w0)
+                                        w0=w0,
+                                        compression=self.compression)
 
     def _shard_map_program(self, loss, sdata, cfg, w0, alpha0,
                            staleness: int = 0):
         return radisa_shard_map_program(loss, sdata, cfg,
                                         local_backend=self.local_backend,
-                                        w0=w0, staleness=staleness)
+                                        w0=w0, staleness=staleness,
+                                        compression=self.compression)
 
 
 @register_solver
@@ -322,9 +357,11 @@ class ADMMSolver(Solver):
     make_step = staticmethod(make_admm_step)
 
     def _simulated_program(self, loss, data, cfg, w0, alpha0):
-        return admm_simulated_program(loss, data, cfg, w0=w0)
+        return admm_simulated_program(loss, data, cfg, w0=w0,
+                                      compression=self.compression)
 
     def _shard_map_program(self, loss, sdata, cfg, w0, alpha0,
                            staleness: int = 0):
         return admm_shard_map_program(loss, sdata, cfg, w0=w0,
-                                      staleness=staleness)
+                                      staleness=staleness,
+                                      compression=self.compression)

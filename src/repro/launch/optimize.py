@@ -26,6 +26,16 @@ dataset under any (engine, local_backend) pair:
       --solver d3ca --mesh 4x2 --engine async --staleness 2 \\
       --force-host-devices 8
 
+  # compressed reductions: quantize every declared collective (or name
+  # them individually) with error feedback; the summary reports exact
+  # bytes-on-wire per outer step.  --compression identity is
+  # bit-identical to no compression
+  PYTHONPATH=src python -m repro.launch.optimize \\
+      --solver d3ca --mesh 4x2 --engine shard_map \\
+      --compression int8 --force-host-devices 8
+  PYTHONPATH=src python -m repro.launch.optimize \\
+      --solver radisa --compression "dw=topk:0.1,z=identity"
+
 Prints one line per outer iteration (objective, duality gap when the
 solver has a dual, relative optimality when --ref-epochs > 0) and a
 final JSON summary.
@@ -62,6 +72,13 @@ def build_parser():
                     help="async engine only: apply every declared "
                          "reduction with delay TAU outer iterations "
                          "(0 = synchronous, identical to shard_map)")
+    ap.add_argument("--compression", default=None, metavar="SPEC",
+                    help="compress the declared collectives: a codec for "
+                         "all of them ('int8', 'fp8', 'topk:0.1', "
+                         "'identity') or per-collective "
+                         "('w_contrib=int8,dalpha=identity'); codecs "
+                         "carry error feedback, and the summary reports "
+                         "exact bytes-on-wire (default: no compression)")
     ap.add_argument("--backend", default="ref", choices=["ref", "pallas"],
                     help="cell-local solver backend")
     ap.add_argument("--block-format", default="dense",
@@ -158,20 +175,31 @@ def main(argv=None):
 
     cls = get_solver(args.solver)
     solver = cls(engine=args.engine, local_backend=args.backend,
-                 block_format=args.block_format, staleness=args.staleness)
+                 block_format=args.block_format, staleness=args.staleness,
+                 compression=args.compression)
     cfg_kw = {"lam": args.lam, "outer_iters": args.iters}
     if args.solver == "admm":
         cfg_kw["rho"] = args.lam
     cfg = cls.config_cls(**cfg_kw)
 
     stale = f" staleness={args.staleness}" if args.engine == "async" else ""
-    print(f"[optimize] {args.solver} engine={args.engine}{stale} "
+    comp = (f" compression={solver.compression_spec}"
+            if solver.compression is not None else "")
+    print(f"[optimize] {args.solver} engine={args.engine}{stale}{comp} "
           f"backend={args.backend} block_format={args.block_format} "
           f"grid={P}x{Q} "
           f"{args.dataset}({X.shape[0]}x{X.shape[1]}) loss={args.loss} "
           f"lam={args.lam}")
     res = solver.solve(args.loss, X, y, P=P, Q=Q, cfg=cfg, tol=args.tol,
                        f_star=f_star)
+    if res.comm_bytes is not None:
+        acct = res.comm_bytes
+        detail = ", ".join(
+            f"{name}: {c['bytes_per_step']}B/step [{c['codec']}]"
+            for name, c in acct["collectives"].items())
+        print(f"[optimize] wire: {acct['bytes_per_step']} B/step "
+              f"(uncompressed {acct['uncompressed_bytes_per_step']}) -- "
+              f"{detail}")
     for h in res.history:
         line = (f"  t={h['iter']:3d}  {h['time_s']:7.2f}s  "
                 f"f={h['objective']:.6f}")
@@ -191,6 +219,10 @@ def main(argv=None):
         "objective": res.history[-1]["objective"] if res.history else None,
         "rel_opt": res.history[-1].get("rel_opt") if res.history else None,
         "total_s": res.history[-1]["time_s"] if res.history else None,
+        "compression": res.compression,
+        "comm_bytes_per_step": (res.comm_bytes or {}).get("bytes_per_step"),
+        "comm_bytes_total": (res.history[-1].get("comm_bytes")
+                             if res.history else None),
     }
     print(json.dumps(summary, indent=1))
     if args.json_out:

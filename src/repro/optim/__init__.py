@@ -1,3 +1,13 @@
-from . import compression, radisa_svrg
+from . import radisa_svrg
 from .adamw import AdamWConfig, global_norm, init as adamw_init, update as adamw_update
 from .schedules import constant, inverse_sqrt, warmup_cosine
+
+
+def __getattr__(name):
+    # `compression` is a deprecation shim over repro.core.compress; load
+    # it lazily so `import repro.optim` (AdamW users) stays silent and
+    # only actual use of the legacy path triggers its DeprecationWarning
+    if name == "compression":
+        import importlib
+        return importlib.import_module(".compression", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

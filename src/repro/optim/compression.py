@@ -1,43 +1,25 @@
-"""Int8 gradient compression with error feedback (distributed-optimization
-trick for bandwidth-bound DP all-reduces).
+"""DEPRECATED: moved to :mod:`repro.core.compress`.
 
-``compress`` quantizes (g + e) per-tensor to int8 with a float scale;
-``decompress`` restores; the residual e is carried to the next step
-(error feedback keeps SGD/Adam convergence; tested in
-tests/test_compression.py).  In the shard_map data-parallel path the
-int8 payload is what crosses the "data"/"pod" axes: psum of int8-dequant
-halves the DP collective bytes vs bf16 (4x vs fp32).
+The int8 + error-feedback primitives that lived here are now the
+``int8`` codec of the compressed-communication subsystem
+(``repro.core.compress``), which plugs into every solver's declared
+CommSchedule via ``get_solver(...)(compression="int8")`` and adds
+simulated-fp8 / top-k codecs, per-collective policies, and exact
+bytes-on-wire accounting.
+
+This shim re-exports the legacy tree-level helpers (numerics unchanged,
+bit for bit) and warns on import; it will be removed once nothing
+imports it.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+import warnings
 
+from repro.core.compress import (compress, decompress,  # noqa: F401
+                                 init_error)
 
-def init_error(params):
-    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
-
-
-def _q(x):
-    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
-    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
-    return q, scale
-
-
-def compress(grads, error):
-    """Returns (int8 tree, scale tree, new error tree)."""
-    def one(g, e):
-        t = g.astype(jnp.float32) + e
-        q, s = _q(t)
-        deq = q.astype(jnp.float32) * s
-        return q, s, t - deq
-
-    out = jax.tree.map(one, grads, error)
-    qs = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
-    ss = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
-    es = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
-    return qs, ss, es
-
-
-def decompress(qs, ss):
-    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s, qs, ss)
+warnings.warn(
+    "repro.optim.compression is deprecated; use repro.core.compress "
+    "(same init_error/compress/decompress helpers, plus codecs, "
+    "per-collective CompressionPolicy and wire accounting)",
+    DeprecationWarning, stacklevel=2)

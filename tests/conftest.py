@@ -7,13 +7,15 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
 def pytest_configure(config):
-    # CI splits tier1 into a matrix over the three engines:
-    #   -m "not shard_map and not async_engine"  -> everything
-    #                          single-device (simulated split)
+    # CI splits tier1 into a matrix over the engines/policies:
+    #   -m "not shard_map and not async_engine and not compression"
+    #                       -> everything single-device (simulated split)
     #   -m shard_map        -> the subprocess suites that force a device
     #                          grid (shard_map split)
     #   -m async_engine     -> the bounded-staleness engine's subprocess
     #                          suites (async split)
+    #   -m compression      -> the compressed-reduction subprocess suites
+    #                          (compression split)
     config.addinivalue_line(
         "markers",
         "shard_map: exercises the shard_map engine in a subprocess with a "
@@ -22,3 +24,8 @@ def pytest_configure(config):
         "markers",
         "async_engine: exercises the bounded-staleness async engine in a "
         "subprocess with a forced multi-device grid (own CI matrix leg)")
+    config.addinivalue_line(
+        "markers",
+        "compression: exercises compressed reductions on the mesh engines "
+        "in a subprocess with a forced multi-device grid (own CI matrix "
+        "leg)")

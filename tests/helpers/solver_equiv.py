@@ -1,6 +1,6 @@
 """Unified solver API on 8 forced host devices.
 
-Two modes, selected by argv[1] (default "sync"):
+Three modes, selected by argv[1] (default "sync"):
 
   * ``sync``  -- every solver must produce the same iterates under
     (engine="shard_map", local_backend="pallas") as under
@@ -13,10 +13,17 @@ Two modes, selected by argv[1] (default "sync"):
     match engine="shard_map" to 1e-8 (it is the same program), and a
     staleness=2 run must still converge (duality gap / objective under
     a loose threshold).
+  * ``compress`` -- the compressed-communication contract: for all
+    three solvers x both block formats (and the pallas backend),
+    compression=None and the identity codec produce bit-identical
+    iterates on the mesh engines (diff 0.0); the identity accounting
+    reports exactly the uncompressed bytes; compression composes with
+    the async engine's staleness rings; and EF-int8 D3CA reaches the
+    uncompressed duality gap within 2x the iterations.
 
-Executed as a subprocess by tests/test_solver.py (the device count must
-be fixed before jax initializes).  Prints max-abs diffs; exits nonzero
-on failure.
+Executed as a subprocess by tests/test_solver.py / test_compress.py
+(the device count must be fixed before jax initializes).  Prints
+max-abs diffs; exits nonzero on failure.
 """
 import os
 import sys
@@ -95,6 +102,100 @@ def main_async():
     raise SystemExit(fails)
 
 
+def main_compress():
+    """compression=None == identity codec (bit for bit) on the mesh
+    engines; exact identity accounting; async composition; EF-int8
+    convergence within 2x iterations."""
+    lam = 1.0
+    X, y = make_svm_data(120, 42, seed=1)
+
+    fails = 0
+
+    def check_zero(name, a, b):
+        nonlocal fails
+        d = float(jnp.abs(a - b).max())
+        print(f"{name} {d:.3e}")
+        if d != 0.0:
+            fails += 1
+
+    cases = [
+        ("d3ca", D3CAConfig(lam=lam, outer_iters=3, local_steps=12)),
+        ("radisa", RADiSAConfig(lam=lam, gamma=0.03, outer_iters=3, L=12)),
+        ("admm", ADMMConfig(lam=lam, rho=lam, outer_iters=4)),
+    ]
+    for block_format in ("dense", "sparse"):
+        for name, cfg in cases:
+            rn = get_solver(name)(engine="shard_map",
+                                  block_format=block_format).solve(
+                "hinge", X, y, P=Pn, Q=Qn, cfg=cfg, record_history=False)
+            ri = get_solver(name)(engine="shard_map",
+                                  block_format=block_format,
+                                  compression="identity").solve(
+                "hinge", X, y, P=Pn, Q=Qn, cfg=cfg, record_history=False)
+            check_zero(f"{name}_{block_format}_identity_w", rn.w, ri.w)
+            if rn.alpha is not None:
+                check_zero(f"{name}_{block_format}_identity_alpha",
+                           rn.alpha, ri.alpha)
+            # identity accounting invariant: exactly uncompressed bytes
+            if (ri.comm_bytes["bytes_per_step"]
+                    != rn.comm_bytes["bytes_per_step"]
+                    or ri.comm_bytes["bytes_per_step"]
+                    != ri.comm_bytes["uncompressed_bytes_per_step"]):
+                print(f"{name}_{block_format}_identity_bytes MISMATCH "
+                      f"{ri.comm_bytes}")
+                fails += 1
+
+    # the pallas local backend runs inside compressed cells unchanged
+    cfg = D3CAConfig(lam=lam, outer_iters=3, local_steps=12)
+    rn = get_solver("d3ca")(engine="shard_map",
+                            local_backend="pallas").solve(
+        "hinge", X, y, P=Pn, Q=Qn, cfg=cfg, record_history=False)
+    ri = get_solver("d3ca")(engine="shard_map", local_backend="pallas",
+                            compression="identity").solve(
+        "hinge", X, y, P=Pn, Q=Qn, cfg=cfg, record_history=False)
+    check_zero("d3ca_pallas_identity_w", rn.w, ri.w)
+
+    # compression composes with the async engine's staleness rings:
+    # identity + tau=2 must equal the uncompressed tau=2 run bit for bit
+    ra = get_solver("d3ca")(engine="async", staleness=2).solve(
+        "hinge", X, y, P=Pn, Q=Qn, cfg=cfg, record_history=False)
+    rb = get_solver("d3ca")(engine="async", staleness=2,
+                            compression="identity").solve(
+        "hinge", X, y, P=Pn, Q=Qn, cfg=cfg, record_history=False)
+    check_zero("d3ca_async_tau2_identity_w", ra.w, rb.w)
+    # ...and a lossy codec under staleness still closes the gap
+    r = get_solver("d3ca")(engine="async", staleness=2,
+                           compression="int8").solve(
+        "hinge", X, y, P=Pn, Q=Qn,
+        cfg=D3CAConfig(lam=lam, outer_iters=12))
+    gap = r.history[-1]["duality_gap"]
+    print(f"d3ca_async_tau2_int8_gap {gap:.3e}")
+    if not gap < 0.5:
+        fails += 1
+
+    # EF convergence: int8-compressed D3CA reaches the uncompressed
+    # duality gap within 2x the iterations on the small SVM fixture
+    T = 8
+    gap_ref = get_solver("d3ca")(engine="shard_map").solve(
+        "hinge", X, y, P=Pn, Q=Qn,
+        cfg=D3CAConfig(lam=lam, outer_iters=T)
+    ).history[-1]["duality_gap"]
+    r8 = get_solver("d3ca")(engine="shard_map", compression="int8").solve(
+        "hinge", X, y, P=Pn, Q=Qn,
+        cfg=D3CAConfig(lam=lam, outer_iters=2 * T))
+    gap_8 = min(h["duality_gap"] for h in r8.history)
+    bytes_ratio = (r8.comm_bytes["uncompressed_bytes_per_step"]
+                   / r8.comm_bytes["bytes_per_step"])
+    print(f"d3ca_int8_ef_gap {gap_8:.3e} (uncompressed@{T} {gap_ref:.3e}, "
+          f"bytes cut {bytes_ratio:.2f}x)")
+    if not gap_8 <= gap_ref:
+        fails += 1
+    if not bytes_ratio >= 3.0:
+        print("d3ca_int8_bytes_ratio TOO SMALL")
+        fails += 1
+    raise SystemExit(fails)
+
+
 def main():
     lam = 1.0
     # m = 42: P*Q = 8 does not divide it -> exercises the shared padding
@@ -161,5 +262,7 @@ if __name__ == "__main__":
     mode = sys.argv[1] if len(sys.argv) > 1 else "sync"
     if mode == "async":
         main_async()
+    elif mode == "compress":
+        main_compress()
     else:
         main()

@@ -124,9 +124,15 @@ def test_stale_comm_bounded_delay(tau):
     cellprog = _delay_program()
     data = jnp.ones((1,))
     state0 = jnp.zeros((1,))
-    step, bufs0 = mesh_program(cellprog, mesh, data, state0, staleness=tau)
-    assert set(bufs0) == {"probe"} and bufs0["probe"].shape == (1, 1, tau, 1)
-    state = (state0, bufs0)
+    step, comm0, acct = mesh_program(cellprog, mesh, data, state0,
+                                     staleness=tau)
+    assert set(comm0) == {"stale"}
+    assert comm0["stale"]["probe"].shape == (1, 1, tau, 1)
+    # wire accounting comes back from every engine binding: the probe
+    # payload is one f32 per cell per step
+    assert acct["collectives"]["probe"]["bytes_per_step"] == 4
+    assert acct["bytes_per_step"] == acct["uncompressed_bytes_per_step"]
+    state = (state0, comm0)
     seen = []
     for t in range(1, 9):
         state = step(t, data, state)
@@ -142,9 +148,9 @@ def test_stale_tau0_is_sync():
     cellprog = _delay_program()
     data = jnp.ones((1,))
     state0 = jnp.zeros((1,))
-    step, bufs0 = mesh_program(cellprog, mesh, data, state0, staleness=0)
-    assert bufs0 == {}
-    state = (state0, bufs0)
+    step, comm0, _ = mesh_program(cellprog, mesh, data, state0, staleness=0)
+    assert comm0 == {}
+    state = (state0, comm0)
     for t in range(1, 5):
         state = step(t, data, state)
         assert float(state[0][0]) == float(t)    # no delay at tau = 0
