@@ -79,6 +79,26 @@ def validate_payload(payload, name: str):
     return errs
 
 
+def phase_line(payload: dict, name: str):
+    """One-line local/comm/host breakdown over the cells that carry the
+    telemetry subsystem's per-phase fields (older payloads have none --
+    return None and print nothing rather than fail validation)."""
+    cells = payload.get("cells") or {}
+    ph = [c for c in cells.values() if isinstance(c, dict)
+          and all(k in c for k in ("step_s", "local_s", "comm_s", "host_s"))]
+    if not ph:
+        return None
+    tot = sum(c["step_s"] + c["host_s"] for c in ph)
+    if tot <= 0:
+        return None
+    loc = sum(c["local_s"] for c in ph)
+    com = sum(c["comm_s"] for c in ph)
+    hst = sum(c["host_s"] for c in ph)
+    return (f"  {name} phases: local {100 * loc / tot:.1f}% / "
+            f"comm {100 * com / tot:.1f}% / host {100 * hst / tot:.1f}% "
+            f"(mean per-iter over {len(ph)} cells)")
+
+
 def compare(fresh: dict, baseline: dict, threshold: float):
     """Returns (failures, report_lines)."""
     lines = []
@@ -119,6 +139,10 @@ def compare(fresh: dict, baseline: dict, threshold: float):
     lines.append(f"  host speed (median s_per_iter): baseline "
                  f"{med_b * 1e3:.2f} ms, fresh {med_f * 1e3:.2f} ms "
                  f"({med_f / med_b:.2f}x raw -- normalized out below)")
+    for payload, name in ((fresh, "fresh"), (baseline, "baseline")):
+        pl = phase_line(payload, name)
+        if pl:
+            lines.append(pl)
 
     for key in sorted(set(fcells) | set(bcells)):
         f, b = fcells.get(key), bcells.get(key)

@@ -76,6 +76,22 @@ def provenance(quick: bool) -> dict:
     }
 
 
+def phase_fields(history) -> dict:
+    """Mean per-iteration phase attribution over a timed solve's history
+    (``step_s`` / ``local_s`` / ``comm_s`` / ``host_s`` -- present when
+    the solve ran under a tracer or registry).  Empty dict when
+    telemetry was off, so callers can ``cell.update(...)`` blindly."""
+    timed_hist = [h for h in history if "step_s" in h]
+    out = {}
+    if timed_hist:
+        k = float(len(timed_hist))
+        for field in ("step_s", "local_s", "comm_s", "host_s"):
+            vals = [h[field] for h in timed_hist if field in h]
+            if len(vals) == len(timed_hist):
+                out[field] = sum(vals) / k
+    return out
+
+
 def save_result(name: str, payload: dict):
     os.makedirs(OUT_DIR, exist_ok=True)
     with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as fh:

@@ -33,14 +33,19 @@ if "jax" not in sys.modules:
         os.environ["XLA_FLAGS"] = (
             flags + " --xla_force_host_platform_device_count=8").strip()
 
+import time  # noqa: E402
+
+import jax  # noqa: E402
+
 from repro.core import (D3CAConfig, RADiSAConfig, ADMMConfig,  # noqa: E402
                         get_solver, objective, serial_sdca)
 from repro.data import make_sparse_svm_data, make_svm_data  # noqa: E402
+from repro.obs import Registry, Tracer  # noqa: E402
 
 try:
-    from .common import emit_csv_row, provenance, timed
+    from .common import emit_csv_row, phase_fields, provenance, timed
 except ImportError:                       # `python benchmarks/core_bench.py`
-    from common import emit_csv_row, provenance, timed
+    from common import emit_csv_row, phase_fields, provenance, timed
 
 
 def bench_combo(name, cfg, X, y, P, Q, engine, backend, f_star, reps,
@@ -51,12 +56,51 @@ def bench_combo(name, cfg, X, y, P, Q, engine, backend, f_star, reps,
     prog = solver.program("hinge", X, y, P=P, Q=Q, cfg=cfg)
     state = prog.step(1, prog.state)          # compile + warm
     t = timed(lambda: prog.step(2, state), reps=reps, warmup=0)
-    # a short solve for a correctness anchor on the same combo
+    # a short solve for a correctness anchor on the same combo; the
+    # registry switches it to the timed drive path, so its history also
+    # carries the per-phase attribution (step_s / local_s / comm_s /
+    # host_s means land in the cell)
     res = solver.solve("hinge", X, y, P=P, Q=Q, cfg=cfg, f_star=f_star,
-                       record_history=True)
-    return {"s_per_iter": t, "rel_opt": res.history[-1]["rel_opt"],
+                       record_history=True, registry=Registry())
+    cell = {"s_per_iter": t, "rel_opt": res.history[-1]["rel_opt"],
             "iters": res.iters,
             "comm_bytes_per_step": res.comm_bytes["bytes_per_step"]}
+    cell.update(phase_fields(res.history))
+    return cell
+
+
+def trace_overhead(name, cfg, X, y, P, Q, iters, reps):
+    """Per-iter drive-loop cost with tracing on vs off, same warm program.
+
+    This measures exactly what an enabled Tracer adds to the hot loop
+    (span bookkeeping + the per-step block_until_ready the timed path
+    needs) without the one-time phase calibration, which amortizes to
+    zero over a long solve.  min-over-reps on both sides to shed
+    scheduler noise.
+
+    The tracer's cost is a fixed few microseconds per outer iteration,
+    so the *fraction* depends on step duration; the probe uses a
+    realistic inner-epoch count rather than the quick grid's micro-step
+    (on a 0.1 ms step even a perfect tracer misses a 3% budget)."""
+    from repro.core.engines import drive
+
+    cfg = type(cfg)(lam=cfg.lam, outer_iters=cfg.outer_iters,
+                    local_steps=max(1024, cfg.local_steps))
+    solver = get_solver(name)(engine="simulated", local_backend="ref")
+    prog = solver.program("hinge", X, y, P=P, Q=Q, cfg=cfg)
+    jax.block_until_ready(prog.step(1, prog.state))      # compile + warm
+
+    def run(tracer):
+        t0 = time.perf_counter()
+        state, _, _ = drive(prog, iters, tracer=tracer)
+        jax.block_until_ready(state)
+        return (time.perf_counter() - t0) / iters
+
+    run(Tracer())                                        # warm both paths
+    untraced = min(run(None) for _ in range(reps))
+    traced = min(run(Tracer()) for _ in range(reps))
+    return {"untraced_s_per_iter": untraced, "traced_s_per_iter": traced,
+            "overhead_frac": traced / untraced - 1.0}
 
 
 def main(argv=None):
@@ -65,6 +109,13 @@ def main(argv=None):
                     help="CI-sized instances")
     ap.add_argument("--out", default=os.path.join(ROOT, "BENCH_core.json"))
     ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--trace-out", default=None, metavar="TRACE.json",
+                    help="also run one traced d3ca/simulated/ref solve "
+                         "and write its Chrome-trace JSON here (the CI "
+                         "bench job uploads it as an artifact)")
+    ap.add_argument("--max-trace-overhead", type=float, default=0.03,
+                    help="fail when an enabled tracer slows s_per_iter "
+                         "by more than this fraction")
     args = ap.parse_args(argv)
 
     P, Q = 4, 2
@@ -135,6 +186,31 @@ def main(argv=None):
                     out["ratios"][
                         f"{name}/{engine}/{backend}/sparse_over_dense"] = (
                         sp["s_per_iter"] / dn["s_per_iter"])
+
+    # tracing-overhead gate: an enabled tracer must stay within
+    # --max-trace-overhead of the untraced drive loop (s_per_iter).  The
+    # absolute floor absorbs timer granularity on sub-millisecond iters.
+    ov = trace_overhead("d3ca", configs["d3ca"], X, y, P, Q,
+                        iters=max(10, 4 * iters), reps=max(3, args.reps))
+    out["trace_overhead"] = ov
+    print(f"[core_bench] trace overhead: "
+          f"{ov['untraced_s_per_iter'] * 1e3:.3f} -> "
+          f"{ov['traced_s_per_iter'] * 1e3:.3f} ms/iter "
+          f"({100 * ov['overhead_frac']:+.2f}%)")
+    budget = (ov["untraced_s_per_iter"] * (1.0 + args.max_trace_overhead)
+              + 5e-4)
+    assert ov["traced_s_per_iter"] <= budget, (
+        f"enabled tracer adds {100 * ov['overhead_frac']:.1f}% per iter "
+        f"(> {100 * args.max_trace_overhead:.0f}% budget)")
+
+    if args.trace_out:
+        tracer = Tracer()
+        solver = get_solver("d3ca")(engine="simulated", local_backend="ref")
+        solver.solve("hinge", X, y, P=P, Q=Q, cfg=configs["d3ca"],
+                     f_star=f_star, tracer=tracer)
+        tracer.write_chrome_trace(args.trace_out)
+        print(f"[core_bench] trace: {len(tracer.events)} events -> "
+              f"{args.trace_out}")
 
     with open(args.out, "w") as fh:
         json.dump(out, fh, indent=1)

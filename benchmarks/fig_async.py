@@ -44,9 +44,9 @@ from repro.core import (ADMMConfig, D3CAConfig, RADiSAConfig,  # noqa: E402
 from repro.data import make_svm_data  # noqa: E402
 
 try:
-    from .common import emit_csv_row, provenance, timed
+    from .common import emit_csv_row, phase_fields, provenance, timed
 except ImportError:                       # `python benchmarks/fig_async.py`
-    from common import emit_csv_row, provenance, timed
+    from common import emit_csv_row, phase_fields, provenance, timed
 
 
 def sweep_solver(name, cfg, X, y, P, Q, taus, backend, f_star, reps):
@@ -61,10 +61,13 @@ def sweep_solver(name, cfg, X, y, P, Q, taus, backend, f_star, reps):
         prog = solver.program("hinge", X, y, P=P, Q=Q, cfg=cfg)
         state = prog.step(1, prog.state)          # compile + warm
         t = timed(lambda: prog.step(2, state), reps=reps, warmup=0)
-        res = solver.solve("hinge", X, y, P=P, Q=Q, cfg=cfg, f_star=f_star)
+        from repro.obs import Registry
+        res = solver.solve("hinge", X, y, P=P, Q=Q, cfg=cfg, f_star=f_star,
+                           registry=Registry())
         entry = {"s_per_iter": t,
                  "rel_opt": res.history[-1]["rel_opt"],
                  "iters": res.iters, "staleness": tau}
+        entry.update(phase_fields(res.history))
         # per-collective bytes-on-wire counters (the staleness model
         # launches every collective every step, so tau does not change
         # the wire cost -- which is exactly what makes async and

@@ -53,9 +53,9 @@ from repro.core import (ADMMConfig, D3CAConfig, RADiSAConfig,  # noqa: E402
 from repro.data import make_svm_data  # noqa: E402
 
 try:
-    from .common import emit_csv_row, provenance, timed
+    from .common import emit_csv_row, phase_fields, provenance, timed
 except ImportError:                    # `python benchmarks/fig_compress.py`
-    from common import emit_csv_row, provenance, timed
+    from common import emit_csv_row, phase_fields, provenance, timed
 
 
 def codec_label(spec: str) -> str:
@@ -76,7 +76,9 @@ def sweep_solver(name, cfg, X, y, P, Q, codecs, backend, f_star, reps):
         prog = solver.program("hinge", X, y, P=P, Q=Q, cfg=cfg)
         state = prog.step(1, prog.state)          # compile + warm
         t = timed(lambda: prog.step(2, state), reps=reps, warmup=0)
-        res = solver.solve("hinge", X, y, P=P, Q=Q, cfg=cfg, f_star=f_star)
+        from repro.obs import Registry
+        res = solver.solve("hinge", X, y, P=P, Q=Q, cfg=cfg, f_star=f_star,
+                           registry=Registry())
         acct = res.comm_bytes
         entry = {"s_per_iter": t,
                  "rel_opt": res.history[-1]["rel_opt"],
@@ -88,6 +90,7 @@ def sweep_solver(name, cfg, X, y, P, Q, codecs, backend, f_star, reps):
                  "comm_bytes_by_collective": {
                      cname: c["bytes_per_step"]
                      for cname, c in acct["collectives"].items()}}
+        entry.update(phase_fields(res.history))
         if "duality_gap" in res.history[-1]:
             entry["duality_gap"] = res.history[-1]["duality_gap"]
         if codec in ("none", "identity"):

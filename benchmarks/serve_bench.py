@@ -25,8 +25,9 @@ import jax
 from repro.configs import get_config
 from repro.launch.serve import build_trace, static_batch_generate
 from repro.models import Transformer, reduced
-from repro.serve import (EngineConfig, InferenceEngine, SamplingParams,
-                         ServeMetrics, percentiles)
+from repro.obs import Registry
+from repro.serve import (EngineConfig, InferenceEngine, RequestMetrics,
+                         SamplingParams, percentiles)
 
 try:
     from .common import provenance
@@ -62,7 +63,8 @@ def run_static(model, params, reqs, batch_size):
 
 
 def run_engine(engine, reqs):
-    engine.metrics = ServeMetrics()      # count only this pass
+    reg = Registry()
+    engine.metrics = RequestMetrics(registry=reg)   # count only this pass
     out = engine.run(reqs)
     s = engine.metrics.summary()
     missing = [r.rid for r in reqs if r.rid not in out]
@@ -73,7 +75,9 @@ def run_engine(engine, reqs):
             "tokens_per_sec": s["tokens_per_sec"],
             "ttft_s": s["ttft_s"], "latency_s": s["latency_s"],
             "decode_steps": s["decode_steps"],
-            "preemptions": s["preemptions"]}
+            "preemptions": s["preemptions"],
+            # the unified telemetry schema, embedded verbatim
+            "metrics": reg.snapshot()}
 
 
 def main(argv=None):

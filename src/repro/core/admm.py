@@ -46,7 +46,7 @@ from jax.sharding import PartitionSpec as P
 from .comm import CommSchedule
 from .engines import (CellProgram, EngineProgram, SparseShardMapData,
                       drive_with_callback, grid_bind_state, grid_program,
-                      mesh_program, mesh_step_fn)
+                      mesh_local_step, mesh_program, mesh_step_fn)
 from .losses import Loss, get_loss
 from .partition import (DoublyPartitioned, SparseDoublyPartitioned,
                         ell_gather, ell_scatter_add)
@@ -182,11 +182,16 @@ def admm_simulated_program(loss: Loss, data: DoublyPartitioned,
     full0, unwrap, acct = grid_bind_state(cellprog, gdata, state0,
                                           Pn=Pn, Qn=Qn,
                                           compression=compression)
+    local = grid_program(cellprog, Pn, Qn, comm_local=True)
+    ef_names = (compression.stateful_names(cellprog.schedule)
+                if compression is not None else ())
     return EngineProgram(
         state=full0,
         step=lambda t, st: step(t, gdata, st),
         w_of=lambda st: data.w_from_blocks(unwrap(st)[2]),
-        comm_bytes=acct)
+        comm_bytes=acct,
+        local_step=lambda t, st: local(t, gdata, unwrap(st)),
+        ef_of=(lambda st: st[1]) if ef_names else None)
 
 
 def admm_simulated(loss_name: str, data: DoublyPartitioned, cfg: ADMMConfig,
@@ -312,11 +317,16 @@ def admm_shard_map_program(loss: Loss, sdata, cfg: ADMMConfig,
         cellprog, mesh, mdata, state0,
         data_axis=sdata.data_axis, model_axis=sdata.model_axis,
         staleness=staleness, compression=compression)
+    local = mesh_local_step(cellprog, mesh,
+                            data_axis=sdata.data_axis,
+                            model_axis=sdata.model_axis)
     return EngineProgram(
         state=(state0, comm0),
         step=lambda t, st: step(t, mdata, st),
         w_of=lambda st: st[0][2][: sdata.m],
-        comm_bytes=acct)
+        comm_bytes=acct,
+        local_step=lambda t, st: local(t, mdata, st[0]),
+        ef_of=(lambda st: st[1]["ef"]) if "ef" in comm0 else None)
 
 
 def admm_distributed(loss_name: str, mesh, x, y, mask, cfg: ADMMConfig,

@@ -196,6 +196,27 @@ class SyncComm(Comm):
         return jax.lax.all_gather(value, axes)
 
 
+class LocalComm(Comm):
+    """Collective-free executor for per-phase wall-clock attribution.
+
+    Every declared point is executed CELL-LOCALLY: psum/pmean return the
+    cell's own contribution unchanged and allgather broadcasts it to the
+    gathered shape -- same aval as the real reduction, zero bytes on the
+    wire.  The numerics are wrong on purpose; a program built with this
+    executor (``EngineProgram.local_step``) is only ever *timed*, never
+    consumed: the difference between stepping the real program and
+    stepping this one isolates the communication cost
+    (:func:`repro.obs.phases.calibrate_phases`).
+    """
+
+    def _exec(self, point: Collective, value):
+        if point.op == "allgather":
+            value = jnp.asarray(value)
+            return jnp.broadcast_to(
+                value[None], (self.sizes[point.axis],) + value.shape)
+        return value
+
+
 class ShapeProbeComm(Comm):
     """Collective-free executor that records each point's per-cell result
     aval (and, optionally, its per-cell *payload* aval -- the input the

@@ -131,6 +131,11 @@ def wire_accounting(schedule: CommSchedule, payload_avals: dict,
         comp = codec.payload_nbytes(aval.shape, aval.dtype)
         per[point.name] = {
             "op": point.op, "axis": point.axis, "codec": codec.name,
+            # per-cell payload aval (what one cell hands to ``comm``);
+            # telemetry microbenchmarks each codec on it
+            # (repro.obs.phases.bench_codecs)
+            "payload_shape": tuple(int(d) for d in aval.shape),
+            "payload_dtype": str(jnp.dtype(aval.dtype).name),
             "payload_bytes_per_cell": int(comp),
             "uncompressed_bytes_per_cell": int(raw),
             "cells": cells,

@@ -34,7 +34,7 @@ import jax.numpy as jnp
 from .comm import CommSchedule
 from .engines import (CellProgram, EngineProgram, SparseShardMapData,
                       drive_with_callback, grid_bind_state, grid_program,
-                      mesh_program, mesh_step_fn)
+                      mesh_local_step, mesh_program, mesh_step_fn)
 from .local import local_sdca, local_sdca_sparse
 from .losses import Loss, get_loss
 from .partition import (DoublyPartitioned, SparseDoublyPartitioned,
@@ -140,12 +140,17 @@ def d3ca_simulated_program(loss: Loss, data: DoublyPartitioned,
     full0, unwrap, acct = grid_bind_state(cellprog, gdata, state0,
                                           Pn=Pn, Qn=Qn,
                                           compression=compression)
+    local = grid_program(cellprog, Pn, Qn, comm_local=True)
+    ef_names = (compression.stateful_names(cellprog.schedule)
+                if compression is not None else ())
     return EngineProgram(
         state=full0,
         step=lambda t, s: step(t, gdata, s),
         w_of=lambda s: data.w_from_blocks(unwrap(s)[1]),
         alpha_of=lambda s: data.alpha_from_blocks(unwrap(s)[0] * data.mask),
-        comm_bytes=acct)
+        comm_bytes=acct,
+        local_step=lambda t, s: local(t, gdata, unwrap(s)),
+        ef_of=(lambda s: s[1]) if ef_names else None)
 
 
 def d3ca_simulated(loss_name: str, data: DoublyPartitioned, cfg: D3CAConfig,
@@ -233,12 +238,17 @@ def d3ca_shard_map_program(loss: Loss, sdata, cfg: D3CAConfig,
         cellprog, sdata.mesh, mdata, (alpha_init, w_init),
         data_axis=sdata.data_axis, model_axis=sdata.model_axis,
         staleness=staleness, compression=compression)
+    local = mesh_local_step(cellprog, sdata.mesh,
+                            data_axis=sdata.data_axis,
+                            model_axis=sdata.model_axis)
     return EngineProgram(
         state=((alpha_init, w_init), comm0),
         step=lambda t, s: step(t, mdata, s),
         w_of=lambda s: s[0][1][: sdata.m],
         alpha_of=lambda s: s[0][0][: sdata.n],
-        comm_bytes=acct)
+        comm_bytes=acct,
+        local_step=lambda t, s: local(t, mdata, s[0]),
+        ef_of=(lambda s: s[1]["ef"]) if "ef" in comm0 else None)
 
 
 def d3ca_distributed(loss_name: str, mesh, x, y, mask, cfg: D3CAConfig,

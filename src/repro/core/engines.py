@@ -40,6 +40,7 @@ tolerance.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Optional, Tuple
 
 import jax
@@ -48,7 +49,8 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from .comm import CommSchedule, ShapeProbeComm, StaleComm, SyncComm
+from .comm import (CommSchedule, LocalComm, ShapeProbeComm, StaleComm,
+                   SyncComm)
 from .compress import CompressedComm, wire_accounting
 from .partition import _ceil_to
 from .util import as_axes, axes_size, pvary, shard_map
@@ -66,19 +68,67 @@ class EngineProgram:
     #: collectives (see ``repro.core.compress.wire_accounting``); None
     #: for programs built outside the generic executors
     comm_bytes: Optional[dict] = None
+    #: same cell program with every collective executed cell-locally
+    #: (:class:`~repro.core.comm.LocalComm`); jitted lazily, so it costs
+    #: nothing unless phase attribution times it.  Numerically wrong by
+    #: design -- timing only (see ``repro.obs.phases``)
+    local_step: Optional[Callable[[int, Any], Any]] = None
+    #: state -> {collective: error-feedback residual array} when the
+    #: compression policy carries stateful codecs (telemetry reads the
+    #: per-iteration EF norms off it); None otherwise
+    ef_of: Optional[Callable[[Any], dict]] = None
 
 
-def drive(prog: EngineProgram, outer_iters: int, observe=None):
+def drive(prog: EngineProgram, outer_iters: int, observe=None, *,
+          tracer=None, on_step=None):
     """Run the outer loop.  ``observe(t, state) -> bool`` is called after
     every step; returning True stops early.  Returns
-    (final state, iterations run, stopped_early)."""
+    (final state, iterations run, stopped_early).
+
+    Telemetry (both optional, default off -- the untimed loop is
+    bit-identical to the pre-telemetry driver and adds no syncs):
+
+      * ``tracer`` -- a :class:`repro.obs.trace.Tracer`; each iteration
+        becomes an ``outer_iter`` span with ``step`` / ``observe``
+        children, and the step blocks on its device result so the span
+        measures real device wall-clock;
+      * ``on_step(t, t_begin, step_s)`` -- fires after every timed step
+        (the solver driver uses it to synthesize per-collective
+        attribution spans and feed per-iter phase fields into history).
+    """
+    tracing = tracer is not None and getattr(tracer, "enabled", False)
     state = prog.state
     done = 0
+    if not tracing and on_step is None:
+        for t in range(1, outer_iters + 1):
+            state = prog.step(t, state)
+            done = t
+            if observe is not None and observe(t, state):
+                return state, done, True
+        return state, done, False
+
+    if tracing:
+        tr, clock = tracer, tracer.clock
+    else:
+        from repro.obs.trace import NULL_TRACER
+        tr, clock = NULL_TRACER, time.perf_counter
     for t in range(1, outer_iters + 1):
-        state = prog.step(t, state)
-        done = t
-        if observe is not None and observe(t, state):
-            return state, done, True
+        with tr.span("outer_iter", iter=t):
+            with tr.span("step", iter=t):
+                # t0 taken INSIDE the span so the attribution spans
+                # on_step synthesizes at t0 nest within it
+                t0 = clock()
+                state = prog.step(t, state)
+                jax.block_until_ready(state)
+                step_s = clock() - t0
+            if on_step is not None:
+                on_step(t, t0, step_s)
+            done = t
+            if observe is not None:
+                with tr.span("observe", iter=t):
+                    stop = observe(t, state)
+                if stop:
+                    return state, done, True
     return state, done, False
 
 
@@ -322,7 +372,7 @@ def _drop_replicas(out, state_specs):
 
 
 def grid_program(cellprog: CellProgram, Pn: int, Qn: int, *,
-                 compression=None):
+                 compression=None, comm_local: bool = False):
     """Named-``vmap`` executor: the P x Q grid is the leading block axes
     of the operands and the declared collectives run as vmap-axis
     reductions.  Returns a jitted ``step(t, data, state) -> state``
@@ -339,13 +389,23 @@ def grid_program(cellprog: CellProgram, Pn: int, Qn: int, *,
     compressed collective to its (P, Q, *payload) error-feedback
     residuals (allocate with :func:`grid_comm_state`).  ``None`` builds
     the exact uncompressed program.
+
+    ``comm_local=True`` substitutes :class:`~repro.core.comm.LocalComm`
+    for the sync executor: every collective runs cell-locally, same
+    avals, zero reduction work.  Timing-only (``EngineProgram.
+    local_step``); incompatible with ``compression`` (a local program's
+    wire cost is zero by construction).
     """
     axis_map = {"data": (_GRID_DATA,), "model": (_GRID_MODEL,)}
     sizes = {"data": Pn, "model": Qn}
     sched = cellprog.schedule
     policy = compression
+    if comm_local and policy is not None:
+        raise ValueError("comm_local measures the collective-free step; "
+                         "it cannot compose with a compression policy")
     if policy is not None:
         policy.validate(sched)
+    comm_cls = LocalComm if comm_local else SyncComm
 
     def in_axes(specs, axis):
         return jax.tree_util.tree_map(
@@ -354,7 +414,7 @@ def grid_program(cellprog: CellProgram, Pn: int, Qn: int, *,
 
     if policy is None:
         def one_cell(t, d, s):
-            comm = SyncComm(sched, axis_map, sizes)
+            comm = comm_cls(sched, axis_map, sizes)
             out = cellprog.cell(comm, t, d, s)
             comm.finalize()
             return out
@@ -431,7 +491,7 @@ def _pvary_missing(tree_vals, specs, axis_map):
 
 def mesh_step_fn(cellprog: CellProgram, mesh, *, data_axis="data",
                  model_axis: str = "model", staleness: int = 0,
-                 compression=None):
+                 compression=None, comm_local: bool = False):
     """Raw (unjitted) mesh executor.
 
     Returns ``step(t, data, state, cbufs) -> (state, cbufs)`` running
@@ -455,6 +515,9 @@ def mesh_step_fn(cellprog: CellProgram, mesh, *, data_axis="data",
              "model": axes_size(mesh, model_axis)}
     sched = cellprog.schedule
     policy = compression
+    if comm_local and (staleness or policy is not None):
+        raise ValueError("comm_local measures the collective-free step; "
+                         "it cannot compose with staleness or compression")
     if policy is not None:
         policy.validate(sched)
     ef_names = policy.stateful_names(sched) if policy is not None else ()
@@ -483,7 +546,8 @@ def mesh_step_fn(cellprog: CellProgram, mesh, *, data_axis="data",
                               bufs={k: b[0, 0]
                                     for k, b in cbufs["stale"].items()})
         else:
-            inner = SyncComm(sched, axis_map, sizes)
+            inner = (LocalComm if comm_local else SyncComm)(
+                sched, axis_map, sizes)
         if policy is not None:
             comm = CompressedComm(inner, policy,
                                   ef={k: b[0, 0]
@@ -637,6 +701,25 @@ def mesh_program(cellprog: CellProgram, mesh, data, state0, *,
         return raw(t, data, state, cbufs)
 
     return step, comm0, acct
+
+
+def mesh_local_step(cellprog: CellProgram, mesh, *, data_axis="data",
+                    model_axis: str = "model"):
+    """Jitted collective-free twin of a mesh program's step, for the
+    differential phase attribution of :mod:`repro.obs.phases`:
+    ``local(t, data, state) -> state`` runs the same shard_map cell with
+    every declared reduction executed cell-locally
+    (:class:`~repro.core.comm.LocalComm`).  Numerically wrong on
+    purpose; only ever timed, never consumed."""
+    raw = mesh_step_fn(cellprog, mesh, data_axis=data_axis,
+                       model_axis=model_axis, comm_local=True)
+
+    @jax.jit
+    def local(t, data, state):
+        out, _ = raw(t, data, state, {})
+        return out
+
+    return local
 
 
 def prepare_shard_map(mesh, X, y, *, data_axis="data", model_axis="model",

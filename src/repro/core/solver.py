@@ -83,7 +83,9 @@ class SolveResult:
     w: Any                          # (m,) global primal iterate
     alpha: Optional[Any]            # (n,) global dual iterate (D3CA only)
     history: List[Dict[str, float]]  # per-iter: iter, time_s, objective,
-    #                                  [duality_gap], [rel_opt]
+    #                                  [duality_gap], [rel_opt]; timed
+    #                                  solves (tracer=/registry=) add
+    #                                  step_s, local_s, comm_s, host_s
     iters: int                      # outer iterations actually run
     converged: bool                 # True iff early stopping triggered
     solver: str
@@ -219,66 +221,169 @@ class Solver:
               cfg=None, mesh=None, warm_start=None,
               tol: Optional[float] = None, f_star: Optional[float] = None,
               record_history: bool = True,
-              callback: Optional[Callable] = None) -> SolveResult:
+              callback: Optional[Callable] = None,
+              tracer=None, registry=None) -> SolveResult:
         """Run the solver.  Early stopping (when ``tol`` is given) uses, in
         order of preference: relative optimality vs ``f_star``; the duality
         gap (dual solvers); the relative objective change between iterates.
         ``callback(t, w, alpha)`` fires every iteration.
+
+        Telemetry (both default off; the untimed path is the exact
+        legacy loop, bit-identical results):
+
+          * ``tracer`` -- a :class:`repro.obs.Tracer`.  The solve emits
+            ``solve > data_prep / calibrate / outer_iter > step /
+            observe`` spans, and phase attribution (``repro.obs.
+            phases``) synthesizes ``local_solve`` and ``comm/<name>``
+            child spans inside every measured step -- one per collective
+            the solver's CommSchedule declares, sized by the program's
+            exact bytes-on-wire;
+          * ``registry`` -- a :class:`repro.obs.Registry`.  Per-iter
+            metrics (``solver/objective``, ``solver/step_s``, phase
+            histograms, cumulative ``solver/comm_bytes``, per-collective
+            ``compress/ef_norm/*`` when error feedback is active,
+            ``async/ring_occupancy`` under staleness) land in it, keyed
+            by ``{solver=..., engine=...}`` labels.
+
+        Either one switches the driver to its timed path, which adds a
+        per-step device sync and per-iter ``step_s`` / ``local_s`` /
+        ``comm_s`` / ``host_s`` fields to the history; the iterates
+        themselves are unchanged.
         """
+        from repro.obs import as_tracer, calibrate_phases
+        from repro.obs.phases import bench_codecs
+        tr = as_tracer(tracer)
+        reg = registry
+        timed = tr.enabled or reg is not None
         loss = get_loss(loss_name)
         cfg = cfg if cfg is not None else self.config_cls()
-        prog = self.program(loss_name, X, y, P=P, Q=Q, cfg=cfg, mesh=mesh,
-                            warm_start=warm_start)
-        lam = cfg.lam
-        history: List[Dict[str, float]] = []
-        need_obs = record_history or callback is not None or tol is not None
-        prev_f = [None]
-        bytes_per_step = (prog.comm_bytes or {}).get("bytes_per_step")
-        t0 = time.perf_counter()
+        labels = {"solver": self.name, "engine": self.engine}
+        with tr.span("solve", loss=loss_name, **labels):
+            with tr.span("data_prep"):
+                prog = self.program(loss_name, X, y, P=P, Q=Q, cfg=cfg,
+                                    mesh=mesh, warm_start=warm_start)
+            split = None
+            if timed:
+                with tr.span("calibrate"):
+                    split = calibrate_phases(prog)
+                if self.compression is not None:
+                    codec_s = bench_codecs(self.compression,
+                                           prog.comm_bytes or {})
+                    for cname, secs in codec_s.items():
+                        if reg is not None:
+                            reg.gauge(f"compress/codec_s/{cname}",
+                                      **labels).set(secs)
+                    if codec_s:
+                        tr.instant("codec_bench", **codec_s)
+            lam = cfg.lam
+            history: List[Dict[str, float]] = []
+            need_obs = (record_history or callback is not None
+                        or tol is not None)
+            prev_f = [None]
+            bytes_per_step = (prog.comm_bytes or {}).get("bytes_per_step")
+            t0 = time.perf_counter()
+            last_phase: Dict[str, float] = {}
 
-        def observe(t, state):
-            if not need_obs:
-                return False
-            w = prog.w_of(state)
-            alpha = prog.alpha_of(state) if prog.alpha_of else None
-            f = float(loss.objective(X, y, w, lam))
-            entry = {"iter": t, "time_s": time.perf_counter() - t0,
-                     "objective": f}
-            if bytes_per_step is not None:
-                # cumulative bytes-on-wire after t outer steps (every
-                # declared collective launches once per step)
-                entry["comm_bytes"] = bytes_per_step * t
-            if alpha is not None:
-                entry["duality_gap"] = float(
-                    f - loss.dual_objective(X, y, alpha, lam))
-            if f_star is not None:
-                entry["rel_opt"] = float(rel_opt(f, f_star))
-            if record_history:
-                history.append(entry)
-            if callback is not None:
-                callback(t, w, alpha)
-            stop = False
-            if tol is not None:
+            def on_step(t, t_begin, step_s):
+                last_phase.clear()
+                last_phase["step_s"] = step_s
+                if split is not None:
+                    att = split.attribute(step_s)
+                    last_phase["local_s"] = att["local_s"]
+                    last_phase["comm_s"] = att["comm_s"]
+                    tr.record("local_solve", t_begin, att["local_s"], iter=t)
+                    off = t_begin + att["local_s"]
+                    for name, secs in att["collectives"].items():
+                        tr.record(f"comm/{name}", off, secs, iter=t)
+                        off += secs
+                if reg is not None:
+                    reg.histogram("solver/step_s", **labels).observe(step_s)
+                    if split is not None:
+                        reg.histogram("solver/local_s", **labels).observe(
+                            last_phase["local_s"])
+                        reg.histogram("solver/comm_s", **labels).observe(
+                            last_phase["comm_s"])
+                    if bytes_per_step is not None:
+                        reg.counter("solver/comm_bytes", **labels).inc(
+                            bytes_per_step)
+
+            def observe(t, state):
+                if not need_obs:
+                    return False
+                th0 = time.perf_counter()
+                w = prog.w_of(state)
+                alpha = prog.alpha_of(state) if prog.alpha_of else None
+                f = float(loss.objective(X, y, w, lam))
+                entry = {"iter": t, "time_s": time.perf_counter() - t0,
+                         "objective": f}
+                if timed:
+                    entry.update(last_phase)
+                if bytes_per_step is not None:
+                    # cumulative bytes-on-wire after t outer steps (every
+                    # declared collective launches once per step)
+                    entry["comm_bytes"] = bytes_per_step * t
+                if alpha is not None:
+                    entry["duality_gap"] = float(
+                        f - loss.dual_objective(X, y, alpha, lam))
                 if f_star is not None:
-                    stop = entry["rel_opt"] < tol
-                elif "duality_gap" in entry:
-                    stop = entry["duality_gap"] < tol
-                elif prev_f[0] is not None:
-                    stop = abs(f - prev_f[0]) <= tol * max(1.0, abs(f))
-            prev_f[0] = f
-            return stop
+                    entry["rel_opt"] = float(rel_opt(f, f_star))
+                if timed:
+                    # objective / gap / rel_opt eval is the host phase
+                    entry["host_s"] = time.perf_counter() - th0
+                if reg is not None:
+                    reg.counter("solver/iters", **labels).inc()
+                    reg.gauge("solver/objective", **labels).set(
+                        entry["objective"])
+                    if "duality_gap" in entry:
+                        reg.gauge("solver/duality_gap", **labels).set(
+                            entry["duality_gap"])
+                    if "rel_opt" in entry:
+                        reg.gauge("solver/rel_opt", **labels).set(
+                            entry["rel_opt"])
+                    if "host_s" in entry:
+                        reg.histogram("solver/host_s", **labels).observe(
+                            entry["host_s"])
+                    if prog.ef_of is not None:
+                        import numpy as np
+                        for cname, buf in prog.ef_of(state).items():
+                            reg.gauge(f"compress/ef_norm/{cname}",
+                                      **labels).set(
+                                float(np.linalg.norm(np.asarray(buf))))
+                    if self.staleness > 0:
+                        # filled FIFO slots / ring capacity (the rings
+                        # are seeded full at t=1; before that they hold
+                        # the first reduction, so occupancy ramps once)
+                        reg.gauge("async/ring_occupancy", **labels).set(
+                            min(t, self.staleness) / self.staleness)
+                if record_history:
+                    history.append(entry)
+                if callback is not None:
+                    callback(t, w, alpha)
+                stop = False
+                if tol is not None:
+                    if f_star is not None:
+                        stop = entry["rel_opt"] < tol
+                    elif "duality_gap" in entry:
+                        stop = entry["duality_gap"] < tol
+                    elif prev_f[0] is not None:
+                        stop = abs(f - prev_f[0]) <= tol * max(1.0, abs(f))
+                prev_f[0] = f
+                return stop
 
-        state, iters, stopped = drive(prog, cfg.outer_iters, observe)
-        return SolveResult(
-            w=prog.w_of(state),
-            alpha=prog.alpha_of(state) if prog.alpha_of else None,
-            history=history, iters=iters, converged=stopped,
-            solver=self.name, engine=self.engine,
-            local_backend=self.local_backend,
-            block_format=self.block_format,
-            staleness=self.staleness,
-            compression=self.compression_spec,
-            comm_bytes=prog.comm_bytes)
+            state, iters, stopped = drive(
+                prog, cfg.outer_iters, observe,
+                tracer=tr if tr.enabled else None,
+                on_step=on_step if timed else None)
+            return SolveResult(
+                w=prog.w_of(state),
+                alpha=prog.alpha_of(state) if prog.alpha_of else None,
+                history=history, iters=iters, converged=stopped,
+                solver=self.name, engine=self.engine,
+                local_backend=self.local_backend,
+                block_format=self.block_format,
+                staleness=self.staleness,
+                compression=self.compression_spec,
+                comm_bytes=prog.comm_bytes)
 
 
 # ---------------------------------------------------------------------------

@@ -110,6 +110,16 @@ def build_parser():
                          "for --engine shard_map on a laptop)")
     ap.add_argument("--json-out", default=None,
                     help="write the summary JSON here as well")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="trace the solve and write Chrome-trace JSON "
+                         "here (open in chrome://tracing or "
+                         "ui.perfetto.dev); spans cover data prep, every "
+                         "outer iteration, the cell-local solve and one "
+                         "span per declared collective.  OUT.jsonl is "
+                         "written next to it with the raw events")
+    ap.add_argument("--metrics", action="store_true",
+                    help="record solver metrics into a registry and "
+                         "print its snapshot in the summary JSON")
     return ap
 
 
@@ -190,8 +200,15 @@ def main(argv=None):
           f"grid={P}x{Q} "
           f"{args.dataset}({X.shape[0]}x{X.shape[1]}) loss={args.loss} "
           f"lam={args.lam}")
+    tracer = registry = None
+    if args.trace:
+        from repro.obs import Tracer
+        tracer = Tracer()
+    if args.metrics:
+        from repro.obs import Registry
+        registry = Registry()
     res = solver.solve(args.loss, X, y, P=P, Q=Q, cfg=cfg, tol=args.tol,
-                       f_star=f_star)
+                       f_star=f_star, tracer=tracer, registry=registry)
     if res.comm_bytes is not None:
         acct = res.comm_bytes
         detail = ", ".join(
@@ -209,6 +226,16 @@ def main(argv=None):
             line += f"  rel_opt={h['rel_opt']:.4f}"
         print(line)
 
+    phased = [h for h in res.history if "local_s" in h]
+    if phased:
+        tot = sum(h["step_s"] + h["host_s"] for h in phased)
+        loc = sum(h["local_s"] for h in phased)
+        com = sum(h["comm_s"] for h in phased)
+        hst = sum(h["host_s"] for h in phased)
+        print(f"[optimize] phases: local {100 * loc / tot:.1f}% / "
+              f"comm {100 * com / tot:.1f}% / host {100 * hst / tot:.1f}% "
+              f"of {tot:.3f}s measured")
+
     summary = {
         "solver": res.solver, "engine": res.engine,
         "staleness": res.staleness,
@@ -224,6 +251,14 @@ def main(argv=None):
         "comm_bytes_total": (res.history[-1].get("comm_bytes")
                              if res.history else None),
     }
+    if registry is not None:
+        summary["metrics"] = registry.snapshot()
+    if tracer is not None:
+        tracer.write_chrome_trace(args.trace)
+        base, _ = os.path.splitext(args.trace)
+        tracer.write_jsonl(base + ".jsonl")
+        print(f"[optimize] trace: {len(tracer.events)} events -> "
+              f"{args.trace} (+ {base + '.jsonl'})")
     print(json.dumps(summary, indent=1))
     if args.json_out:
         with open(args.json_out, "w") as fh:

@@ -143,6 +143,15 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--num-pages", type=int, default=256)
     ap.add_argument("--max-seq-len", type=int, default=512)
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="trace the serve loop and write Chrome-trace "
+                         "JSON here (engine_step > admission / prefill / "
+                         "decode_step spans, preempt/finish/reject "
+                         "instants); open in chrome://tracing or "
+                         "ui.perfetto.dev")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the metrics-registry snapshot (the same "
+                         "schema solver telemetry uses) after the run")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -166,10 +175,18 @@ def main(argv=None):
     reqs = build_trace(cfg, args.requests, args.prompt_len, plen_max,
                        gen_min, args.gen, sampling, seed=args.seed)
 
+    tracer = registry = None
+    if args.trace:
+        from repro.obs import Tracer
+        tracer = Tracer()
+    if args.metrics:
+        from repro.obs import Registry
+        registry = Registry()
     try:
         engine = InferenceEngine(model, params, EngineConfig(
             max_slots=args.slots, page_size=args.page_size,
-            num_pages=args.num_pages, max_seq_len=args.max_seq_len))
+            num_pages=args.num_pages, max_seq_len=args.max_seq_len),
+            tracer=tracer, registry=registry)
     except NotImplementedError as e:
         print(f"note: {e}")
         print("falling back to the seed static loop (greedy, fixed batch)")
@@ -185,6 +202,11 @@ def main(argv=None):
           f"ttft p50 {s['ttft_s']['p50'] * 1e3:.0f} ms, "
           f"latency p99 {s['latency_s']['p99'] * 1e3:.0f} ms")
     print(json.dumps(s, indent=1))
+    if registry is not None:
+        print(json.dumps(registry.snapshot(), indent=1))
+    if tracer is not None:
+        tracer.write_chrome_trace(args.trace)
+        print(f"trace: {len(tracer.events)} events -> {args.trace}")
     if s["rejections"]:
         print(f"{s['rejections']} request(s) rejected "
               f"(prompt + gen > --max-seq-len, or queue full)")

@@ -1,0 +1,46 @@
+"""repro.obs -- unified telemetry: tracing, metrics, phase attribution.
+
+The paper's central claim is about *scaling properties* -- where
+wall-clock goes as the P x Q grid grows -- so the repo needs one
+measurement substrate that attributes time to the local Pallas solve vs
+the declared collectives vs host bookkeeping, instead of four
+instrumentation dialects (solver ``history`` dicts, ``ServeMetrics``,
+``Comm.wire_bytes``, BENCH provenance stamps).
+
+Modules:
+  * ``trace``   -- :class:`Tracer`: nestable spans with an injectable
+                   clock, thread-safe, near-zero overhead when disabled
+                   (``NULL_TRACER``); exports Chrome-trace JSON
+                   (chrome://tracing / Perfetto) and a JSONL event log;
+                   optional ``jax.profiler`` TraceAnnotation
+                   pass-through so spans appear in device profiles
+  * ``metrics`` -- :class:`Registry` of labelled counters / gauges /
+                   histograms with one ``snapshot()`` schema shared by
+                   every BENCH emitter; absorbs the legacy percentile
+                   helpers
+  * ``phases``  -- per-phase wall-clock attribution: calibrates the
+                   local-solve vs communication split of an
+                   :class:`~repro.core.engines.EngineProgram` (via its
+                   collective-free ``local_step``) and prices each
+                   named collective's share; per-codec encode/decode
+                   microbench
+  * ``serve``   -- :class:`RequestMetrics`: the serving engine's
+                   request-lifecycle bookkeeping (tok/s, TTFT, latency
+                   percentiles) written through a Registry; the legacy
+                   ``repro.serve.metrics.ServeMetrics`` is a deprecated
+                   shim over it
+
+Nothing in this package imports ``repro.core`` or ``repro.serve`` --
+the observability layer sits below both and is threaded through them.
+"""
+from .metrics import Counter, Gauge, Histogram, Registry, percentiles
+from .phases import PhaseSplit, bench_codecs, calibrate_phases
+from .serve import RequestMetrics
+from .trace import NULL_TRACER, NullTracer, Tracer, as_tracer
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Registry", "percentiles",
+    "PhaseSplit", "bench_codecs", "calibrate_phases",
+    "RequestMetrics",
+    "NULL_TRACER", "NullTracer", "Tracer", "as_tracer",
+]

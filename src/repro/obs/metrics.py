@@ -1,0 +1,153 @@
+"""Metrics registry: labelled counters / gauges / histograms.
+
+One :class:`Registry` absorbs the repo's scattered bookkeeping dialects
+-- the serving engine's percentile counters, the solver driver's
+per-iteration history fields, the compressed-comm wire accounting --
+behind a single ``snapshot()`` schema every BENCH emitter can embed::
+
+    reg = Registry()
+    reg.counter("serve/prefills").inc()
+    reg.gauge("solver/objective", solver="d3ca").set(0.31)
+    reg.histogram("solver/step_s", solver="d3ca").observe(0.002)
+    reg.snapshot()
+    # {"counters":   {"serve/prefills": 1},
+    #  "gauges":     {"solver/objective{solver=d3ca}": 0.31},
+    #  "histograms": {"solver/step_s{solver=d3ca}":
+    #                   {"count": 1, "sum": ..., "mean": ..., "min": ...,
+    #                    "max": ..., "p50": ..., "p90": ..., "p99": ...}}}
+
+Metrics are host-side and cheap (a dict lookup + float op per update);
+get-or-create is lock-protected so engine threads can share a registry.
+The default percentile set is (50, 90, 99) -- p90 joined p50/p99 when
+the serving metrics moved here (the SLO middle ground the serve ROADMAP
+item needs).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+#: default percentile set for histograms and the legacy helpers
+DEFAULT_PERCENTILES = (50, 90, 99)
+
+
+def percentiles(xs, qs: Tuple[int, ...] = DEFAULT_PERCENTILES) -> dict:
+    """{f"p{q}": value} over ``xs`` (empty input -> zeros)."""
+    if len(xs) == 0:
+        return {f"p{q}": 0.0 for q in qs}
+    arr = np.asarray(xs, np.float64)
+    return {f"p{q}": float(np.percentile(arr, q)) for q in qs}
+
+
+class Counter:
+    """Monotonic float counter (``+=`` semantics via :meth:`inc`)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def inc(self, v: float = 1.0):
+        self.value += v
+
+    def set(self, v: float):
+        """Direct assignment -- for shims that mirror legacy attributes
+        (``metrics.preemptions += 1`` through a property)."""
+        self.value = v
+
+
+class Gauge:
+    """Last-value-wins metric."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def set(self, v: float):
+        self.value = float(v)
+
+
+class Histogram:
+    """Raw-observation histogram with percentile summaries."""
+
+    __slots__ = ("qs", "observations")
+
+    def __init__(self, qs: Tuple[int, ...] = DEFAULT_PERCENTILES):
+        self.qs = tuple(qs)
+        self.observations: List[float] = []
+
+    def observe(self, v: float):
+        self.observations.append(float(v))
+
+    @property
+    def count(self) -> int:
+        return len(self.observations)
+
+    @property
+    def sum(self) -> float:
+        return float(sum(self.observations))
+
+    def summary(self) -> dict:
+        obs = self.observations
+        out = {"count": len(obs), "sum": self.sum,
+               "mean": self.sum / len(obs) if obs else 0.0,
+               "min": float(min(obs)) if obs else 0.0,
+               "max": float(max(obs)) if obs else 0.0}
+        out.update(percentiles(obs, self.qs))
+        return out
+
+
+def _key(name: str, labels: dict) -> str:
+    if not labels:
+        return name
+    inner = ",".join(f"{k}={labels[k]}" for k in sorted(labels))
+    return f"{name}{{{inner}}}"
+
+
+class Registry:
+    """Get-or-create store of labelled metrics with one snapshot schema.
+
+    The same (kind, name, labels) triple always returns the same metric
+    object; a name may exist as several kinds (a gauge tracking the
+    latest value and a histogram of the series do not collide).
+    """
+
+    def __init__(self):
+        self._metrics: Dict[Tuple[str, str], object] = {}
+        self._lock = threading.Lock()
+
+    def _get(self, kind: str, name: str, labels: dict, factory):
+        key = (kind, _key(name, labels))
+        m = self._metrics.get(key)
+        if m is None:
+            with self._lock:
+                m = self._metrics.setdefault(key, factory())
+        return m
+
+    def counter(self, name: str, **labels) -> Counter:
+        return self._get("counter", name, labels, Counter)
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self._get("gauge", name, labels, Gauge)
+
+    def histogram(self, name: str, qs: Tuple[int, ...] = DEFAULT_PERCENTILES,
+                  **labels) -> Histogram:
+        return self._get("histogram", name, labels, lambda: Histogram(qs))
+
+    def snapshot(self) -> dict:
+        """The one schema every BENCH emitter embeds: plain JSON-able
+        dicts keyed by ``name{label=value,...}``."""
+        with self._lock:
+            items = list(self._metrics.items())
+        out = {"counters": {}, "gauges": {}, "histograms": {}}
+        for (kind, key), metric in sorted(items):
+            if kind == "counter":
+                out["counters"][key] = metric.value
+            elif kind == "gauge":
+                out["gauges"][key] = metric.value
+            else:
+                out["histograms"][key] = metric.summary()
+        return out

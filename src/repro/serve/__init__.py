@@ -15,18 +15,31 @@ Modules:
                     per-request seeds
   * ``scoring``  -- doubly-distributed batched x.w scoring for the
                     paper's trained linear models
-  * ``metrics``  -- tokens/s, TTFT and latency percentile counters
+  * ``metrics``  -- DEPRECATED shim over :mod:`repro.obs.serve` (the
+                    unified telemetry subsystem owns serving metrics:
+                    ``RequestMetrics`` + the shared metrics registry)
 """
+from repro.obs.metrics import percentiles
+from repro.obs.serve import RequestMetrics
+
 from .cache import PagePool, PagedCacheConfig, make_paged_arenas
 from .engine import EngineConfig, InferenceEngine, Request
-from .metrics import ServeMetrics, percentiles
 from .sampling import SamplingParams, sample_tokens
 from .scoring import LinearScorer, make_score_fn
 
 __all__ = [
     "PagePool", "PagedCacheConfig", "make_paged_arenas",
     "EngineConfig", "InferenceEngine", "Request",
-    "ServeMetrics", "percentiles",
+    "RequestMetrics", "ServeMetrics", "percentiles",
     "SamplingParams", "sample_tokens",
     "LinearScorer", "make_score_fn",
 ]
+
+
+def __getattr__(name):
+    # lazy: importing repro.serve must stay silent; touching the legacy
+    # name (not the package) is what triggers the DeprecationWarning
+    if name == "ServeMetrics":
+        from .metrics import ServeMetrics
+        return ServeMetrics
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

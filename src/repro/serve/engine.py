@@ -36,9 +36,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.serve import RequestMetrics
+from repro.obs.trace import as_tracer
+
 from .cache import PagePool, PagedCacheConfig, make_paged_arenas, \
     paged_kinds, write_prompt_pages
-from .metrics import ServeMetrics
 from .sampling import SamplingParams, params_arrays, sample_tokens
 
 
@@ -79,7 +81,7 @@ class _Slot:
 
 class InferenceEngine:
     def __init__(self, model, params, cfg: EngineConfig = EngineConfig(),
-                 clock=time.perf_counter):
+                 clock=time.perf_counter, tracer=None, registry=None):
         paged_kinds(model.cfg)      # raises for unsupported archs
         self.model = model
         self.params = params
@@ -88,7 +90,10 @@ class InferenceEngine:
         self.max_pages = self.pc.pages_for(cfg.max_seq_len)
         self.pool = PagePool(self.pc)
         self.arenas = make_paged_arenas(model.cfg, self.pc)
-        self.metrics = ServeMetrics(clock)
+        self.metrics = RequestMetrics(clock, registry=registry)
+        #: optional repro.obs Tracer; spans the admission/prefill/decode
+        #: phases of every step and marks preempt/finish/reject instants
+        self.tracer = as_tracer(tracer)
 
         self.queue: collections.deque = collections.deque()
         self.slots: List[Optional[_Slot]] = [None] * cfg.max_slots
@@ -141,22 +146,24 @@ class InferenceEngine:
     # ------------------------------------------------------------------
     # admission
     # ------------------------------------------------------------------
+    def _reject(self, req: Request, reason: str) -> bool:
+        self.metrics.rejections += 1
+        self.tracer.instant("reject", rid=str(req.rid), reason=reason)
+        return False
+
     def submit(self, req: Request) -> bool:
         """Queue a request; False (and a rejection count) if refused."""
         total = len(req.prompt) + req.max_new_tokens
         if total > self.cfg.max_seq_len or \
                 self.pc.pages_for(total) > self.cfg.num_pages:
-            self.metrics.rejections += 1
-            return False
+            return self._reject(req, "too_long")
         if len(self.queue) >= self.cfg.max_queue:
-            self.metrics.rejections += 1
-            return False
+            return self._reject(req, "queue_full")
         # rids key the page pool and the output dict: a duplicate would
         # merge two requests' pages under one owner (double free /
         # cross-request KV reuse on finish)
         if req.rid in self._live or req.rid in self.outputs:
-            self.metrics.rejections += 1
-            return False
+            return self._reject(req, "duplicate_rid")
         self._live.add(req.rid)
         self.queue.append(req)
         self.metrics.start_request(req.rid, len(req.prompt))
@@ -193,10 +200,12 @@ class InferenceEngine:
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :plen] = req.prompt
         sp = params_arrays([req.sampling], [0])
-        first, self.arenas = self._prefill(
-            self.params, jnp.asarray(toks), jnp.asarray(plen, jnp.int32),
-            self.arenas, jnp.asarray(bt_row), *sp)
-        first = int(first)
+        with self.tracer.span("prefill", rid=str(req.rid), prompt_len=plen,
+                              bucket=bucket):
+            first, self.arenas = self._prefill(
+                self.params, jnp.asarray(toks), jnp.asarray(plen, jnp.int32),
+                self.arenas, jnp.asarray(bt_row), *sp)
+            first = int(first)      # device sync closes the span honestly
         self.metrics.prefills += 1
         self.metrics.first_token(req.rid)
 
@@ -221,6 +230,7 @@ class InferenceEngine:
         self.slots[i] = None
         self.queue.appendleft(slot.request)
         self.metrics.preemptions += 1
+        self.tracer.instant("preempt", rid=str(slot.rid), slot=i)
 
     def _grow(self):
         """Ensure every active slot has a page for its next write."""
@@ -259,6 +269,8 @@ class InferenceEngine:
         self.outputs[slot.rid] = np.asarray(slot.generated, np.int32)
         self._live.discard(slot.rid)
         self.metrics.finish(slot.rid, len(slot.generated))
+        self.tracer.instant("finish", rid=str(slot.rid),
+                            n_generated=len(slot.generated))
         self.pool.free(slot.rid)
         if self.cfg.reserve_pages:
             self._reserved_pages -= self.pc.pages_for(
@@ -272,9 +284,14 @@ class InferenceEngine:
     # ------------------------------------------------------------------
     def step(self) -> bool:
         """Admit + grow + one decode step.  False when fully idle."""
-        while self._try_admit_one():
-            pass
-        self._grow()
+        with self.tracer.span("engine_step"):
+            return self._step_inner()
+
+    def _step_inner(self) -> bool:
+        with self.tracer.span("admission"):
+            while self._try_admit_one():
+                pass
+            self._grow()
 
         active_idx = [i for i, s in enumerate(self.slots) if s is not None]
         if not active_idx:
@@ -294,19 +311,20 @@ class InferenceEngine:
             sp_list[i] = s.request.sampling
             steps[i] = len(s.generated)
 
-        if all(self.slots[i].request.sampling.temperature <= 0.0
-               for i in active_idx):
-            nxt, self.arenas = self._decode_greedy(
-                self.params, self.arenas, jnp.asarray(tokens),
-                jnp.asarray(self._bt), jnp.asarray(lengths),
-                jnp.asarray(active))
-        else:
-            sp = params_arrays(sp_list, steps)
-            nxt, self.arenas = self._decode(
-                self.params, self.arenas, jnp.asarray(tokens),
-                jnp.asarray(self._bt), jnp.asarray(lengths),
-                jnp.asarray(active), *sp)
-        nxt = np.asarray(nxt)
+        with self.tracer.span("decode_step", batch=len(active_idx)):
+            if all(self.slots[i].request.sampling.temperature <= 0.0
+                   for i in active_idx):
+                nxt, self.arenas = self._decode_greedy(
+                    self.params, self.arenas, jnp.asarray(tokens),
+                    jnp.asarray(self._bt), jnp.asarray(lengths),
+                    jnp.asarray(active))
+            else:
+                sp = params_arrays(sp_list, steps)
+                nxt, self.arenas = self._decode(
+                    self.params, self.arenas, jnp.asarray(tokens),
+                    jnp.asarray(self._bt), jnp.asarray(lengths),
+                    jnp.asarray(active), *sp)
+            nxt = np.asarray(nxt)   # device sync closes the span honestly
         self.metrics.decode_steps += 1
 
         for i in active_idx:
@@ -323,8 +341,8 @@ class InferenceEngine:
 
         ``outputs`` and ``metrics`` accumulate across calls (requests
         may also be submit()ed before run); for per-batch numbers on a
-        reused engine, swap in a fresh ``ServeMetrics`` first and select
-        outputs by rid -- benchmarks/serve_bench.py does exactly this."""
+        reused engine, swap in a fresh ``RequestMetrics`` first and
+        select outputs by rid -- benchmarks/serve_bench.py does this."""
         for r in requests:
             self.submit(r)
         while self.step():

@@ -1,97 +1,30 @@
-"""Serving metrics: tokens/s, time-to-first-token, latency percentiles.
+"""DEPRECATED: moved to :mod:`repro.obs.serve` (telemetry subsystem).
 
-Pure host-side bookkeeping -- the engine calls ``start_request`` /
-``first_token`` / ``finish`` around its step loop and reads ``summary()``
-at the end.  The clock is injectable for deterministic tests.
+``ServeMetrics`` is now :class:`repro.obs.serve.RequestMetrics`, which
+writes every aggregate through a :class:`repro.obs.metrics.Registry`
+(one ``snapshot()`` schema shared with solver telemetry), adds p90 to
+the default percentile set, and makes ``summary()`` skip unfinished
+requests instead of raising on a cut-short trace.
+
+This shim keeps the old import path working (same engine-facing API:
+``start_request`` / ``first_token`` / ``finish`` / ``summary`` and the
+``preemptions`` / ``rejections`` / ``decode_steps`` / ``prefills``
+counters) and warns on import; it will be removed once nothing imports
+it.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Dict, List, Optional
+import warnings
 
-import numpy as np
+from repro.obs.metrics import percentiles  # noqa: F401
+from repro.obs.serve import RequestMetrics
 
-
-def percentiles(xs, qs=(50, 99)):
-    """{f"p{q}": value} over ``xs`` (empty input -> zeros)."""
-    if len(xs) == 0:
-        return {f"p{q}": 0.0 for q in qs}
-    arr = np.asarray(xs, np.float64)
-    return {f"p{q}": float(np.percentile(arr, q)) for q in qs}
+warnings.warn(
+    "repro.serve.metrics is deprecated; use repro.obs.serve."
+    "RequestMetrics (same lifecycle API, registry-backed, p90 in the "
+    "default percentiles) and repro.obs.metrics.percentiles",
+    DeprecationWarning, stacklevel=2)
 
 
-@dataclasses.dataclass
-class _RequestRecord:
-    arrival: float
-    n_prompt: int
-    first_token: Optional[float] = None
-    finish: Optional[float] = None
-    n_generated: int = 0
-
-
-class ServeMetrics:
-    def __init__(self, clock=time.perf_counter):
-        self.clock = clock
-        self._req: Dict[object, _RequestRecord] = {}
-        self.preemptions = 0
-        self.rejections = 0
-        self.decode_steps = 0
-        self.prefills = 0
-        self._t0: Optional[float] = None
-        self._t1: Optional[float] = None
-
-    # ---- per-request lifecycle ----
-    def start_request(self, rid, n_prompt, arrival=None):
-        t = self.clock() if arrival is None else arrival
-        if self._t0 is None:
-            self._t0 = t
-        # re-registration after preemption keeps the ORIGINAL arrival
-        if rid not in self._req:
-            self._req[rid] = _RequestRecord(arrival=t, n_prompt=n_prompt)
-
-    def first_token(self, rid):
-        rec = self._req[rid]
-        if rec.first_token is None:
-            rec.first_token = self.clock()
-
-    def finish(self, rid, n_generated):
-        rec = self._req[rid]
-        rec.finish = self.clock()
-        rec.n_generated = n_generated
-        self._t1 = rec.finish
-
-    # ---- aggregates ----
-    def _done(self) -> List[_RequestRecord]:
-        return [r for r in self._req.values() if r.finish is not None]
-
-    @property
-    def generated_tokens(self) -> int:
-        return sum(r.n_generated for r in self._done())
-
-    @property
-    def elapsed(self) -> float:
-        if self._t0 is None or self._t1 is None:
-            return 0.0
-        return max(self._t1 - self._t0, 1e-9)
-
-    def tokens_per_sec(self) -> float:
-        return self.generated_tokens / self.elapsed if self._done() else 0.0
-
-    def summary(self) -> dict:
-        done = self._done()
-        ttft = [r.first_token - r.arrival for r in done
-                if r.first_token is not None]
-        lat = [r.finish - r.arrival for r in done]
-        return {
-            "requests_finished": len(done),
-            "generated_tokens": self.generated_tokens,
-            "elapsed_s": self.elapsed,
-            "tokens_per_sec": self.tokens_per_sec(),
-            "ttft_s": percentiles(ttft),
-            "latency_s": percentiles(lat),
-            "prefills": self.prefills,
-            "decode_steps": self.decode_steps,
-            "preemptions": self.preemptions,
-            "rejections": self.rejections,
-        }
+class ServeMetrics(RequestMetrics):
+    """Legacy name for :class:`repro.obs.serve.RequestMetrics`."""

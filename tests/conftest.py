@@ -29,3 +29,8 @@ def pytest_configure(config):
         "compression: exercises compressed reductions on the mesh engines "
         "in a subprocess with a forced multi-device grid (own CI matrix "
         "leg)")
+    config.addinivalue_line(
+        "markers",
+        "obs: telemetry-subsystem integration tests that run real solves "
+        "under a tracer/registry (own CI matrix leg; the pure tracer/"
+        "registry unit tests stay in the simulated split)")

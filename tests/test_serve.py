@@ -12,8 +12,8 @@ from repro.configs import get_config
 from repro.launch.serve import static_batch_generate
 from repro.models import Transformer, reduced
 from repro.serve import (EngineConfig, InferenceEngine, LinearScorer,
-                         PagePool, PagedCacheConfig, Request, SamplingParams,
-                         ServeMetrics)
+                         PagePool, PagedCacheConfig, Request, RequestMetrics,
+                         SamplingParams)
 from repro.serve.sampling import params_arrays, sample_tokens
 
 
@@ -139,7 +139,7 @@ def test_sampling_top_p_keeps_argmax():
 
 def test_metrics_with_fake_clock():
     t = [0.0]
-    m = ServeMetrics(clock=lambda: t[0])
+    m = RequestMetrics(clock=lambda: t[0])
     m.start_request("a", 8)
     t[0] = 0.5
     m.first_token("a")
@@ -150,7 +150,19 @@ def test_metrics_with_fake_clock():
     assert s["generated_tokens"] == 10
     assert s["tokens_per_sec"] == pytest.approx(10 / 2.0)
     assert s["ttft_s"]["p50"] == pytest.approx(0.5)
+    assert s["ttft_s"]["p90"] == pytest.approx(0.5)   # p90 joined the set
     assert s["latency_s"]["p99"] == pytest.approx(2.0)
+
+
+def test_legacy_servemetrics_shim_warns():
+    import importlib
+    import sys
+    sys.modules.pop("repro.serve.metrics", None)
+    with pytest.warns(DeprecationWarning, match="repro.obs.serve"):
+        mod = importlib.import_module("repro.serve.metrics")
+    m = mod.ServeMetrics(clock=lambda: 0.0)
+    assert isinstance(m, RequestMetrics)
+    assert m.summary()["requests_finished"] == 0
 
 
 # ---------------------------------------------------------------------------
