@@ -32,6 +32,16 @@ Provenance rules (the stamps written by ``benchmarks.common.provenance``):
 
 Speedups beyond the inverse threshold are reported too, as a nudge to
 refresh the baseline so the gate keeps teeth.
+
+Besides raw speed, the gate also watches the **exposed communication
+share** of every cell that carries the telemetry per-phase fields: the
+fraction of a step the wire actually adds to the critical path
+(``comm_exposed_s / step_s`` for overlap-engine cells -- hidden comm is
+free -- and ``comm_s / step_s`` elsewhere).  A cell whose normalized
+exposed share grows more than ``--comm-threshold`` (default the same
+1.25x) fails the gate: that is a communication regression even when the
+total step time moved little.  Shares below a small absolute floor on
+both sides are skipped (pure timing noise on comm-free quick cells).
 """
 from __future__ import annotations
 
@@ -99,7 +109,77 @@ def phase_line(payload: dict, name: str):
             f"(mean per-iter over {len(ph)} cells)")
 
 
-def compare(fresh: dict, baseline: dict, threshold: float):
+#: exposed-comm shares below this on both sides are timing noise, not
+#: signal -- quick-grid cells move sub-millisecond payloads
+SHARE_FLOOR = 0.02
+
+
+def exposed_share(cell) -> float | None:
+    """Fraction of a step's wall-clock the wire adds to the critical
+    path.  Overlap-engine cells report ``comm_exposed_s`` (hidden comm
+    runs under the local solve and costs nothing); everything else
+    exposes all of ``comm_s``."""
+    if not isinstance(cell, dict):
+        return None
+    step = cell.get("step_s")
+    if not isinstance(step, (int, float)) or step <= 0:
+        return None
+    if "comm_exposed_s" in cell:
+        return float(cell["comm_exposed_s"]) / step
+    if "comm_s" in cell:
+        return float(cell["comm_s"]) / step
+    return None
+
+
+def compare_comm_shares(fcells, bcells, shared, comm_threshold):
+    """Exposed-comm-share gate (see module docstring).  Returns
+    (failures, report_lines)."""
+    failures, lines = [], []
+    pairs = {}
+    for key in shared:
+        fs, bs = exposed_share(fcells[key]), exposed_share(bcells[key])
+        if fs is not None and bs is not None:
+            pairs[key] = (fs, bs)
+    if not pairs:
+        return failures, lines
+
+    def median(xs):
+        xs = sorted(xs)
+        mid = len(xs) // 2
+        return xs[mid] if len(xs) % 2 else (xs[mid - 1] + xs[mid]) / 2.0
+
+    # comm shares are within-step ratios, but compute and wire speed
+    # scale differently across hosts -- normalize by each payload's
+    # median share like the wall-clock gate normalizes s_per_iter
+    med_f = median([fs for fs, _ in pairs.values()])
+    med_b = median([bs for _, bs in pairs.values()])
+    lines.append(f"  exposed comm share (median over {len(pairs)} phased "
+                 f"cells): baseline {100 * med_b:.1f}%, fresh "
+                 f"{100 * med_f:.1f}%")
+    for key, (fs, bs) in sorted(pairs.items()):
+        if fs < SHARE_FLOOR and bs < SHARE_FLOOR:
+            continue                       # comm-free cell, pure noise
+        fn = fs / med_f if med_f > SHARE_FLOOR else fs
+        bn = bs / med_b if med_b > SHARE_FLOOR else bs
+        if bn <= 0:
+            lines.append(f"  {key}: exposed comm share "
+                         f"0% -> {100 * fs:.1f}% (no baseline share)")
+            continue
+        ratio = fn / bn
+        verdict = "ok"
+        if ratio > comm_threshold:
+            verdict = "COMM REGRESSION"
+            failures.append(
+                f"{key}: exposed comm share {100 * bs:.1f}% -> "
+                f"{100 * fs:.1f}% of step "
+                f"({ratio:.2f}x normalized > {comm_threshold:.2f}x)")
+        lines.append(f"  {key}: exposed comm {100 * bs:.1f}% -> "
+                     f"{100 * fs:.1f}% ({ratio:.2f}x {verdict})")
+    return failures, lines
+
+
+def compare(fresh: dict, baseline: dict, threshold: float,
+            comm_threshold: float | None = None):
     """Returns (failures, report_lines)."""
     lines = []
     failures = []
@@ -164,6 +244,12 @@ def compare(fresh: dict, baseline: dict, threshold: float):
         elif ratio < 1.0 / threshold:
             verdict = "faster (consider refreshing the baseline)"
         lines.append(f"  {key}: {ratio:.2f}x {verdict}")
+
+    cfails, clines = compare_comm_shares(
+        fcells, bcells, shared,
+        threshold if comm_threshold is None else comm_threshold)
+    failures.extend(cfails)
+    lines.extend(clines)
     return failures, lines
 
 
@@ -173,11 +259,15 @@ def main(argv=None):
     ap.add_argument("--baseline", default=DEFAULT_BASELINE)
     ap.add_argument("--threshold", type=float, default=1.25,
                     help="fail when fresh/baseline s_per_iter exceeds this")
+    ap.add_argument("--comm-threshold", type=float, default=None,
+                    help="fail when a cell's normalized exposed-comm "
+                         "share grows beyond this (default: --threshold)")
     args = ap.parse_args(argv)
 
     fresh = load(args.fresh)
     baseline = load(args.baseline)
-    failures, lines = compare(fresh, baseline, args.threshold)
+    failures, lines = compare(fresh, baseline, args.threshold,
+                              comm_threshold=args.comm_threshold)
 
     print(f"[check_regression] fresh={args.fresh}")
     print(f"[check_regression] baseline={args.baseline} "

@@ -24,7 +24,8 @@ def ensure_host_devices(argv, count: int = 32):
     engine.  Must run before anything imports jax (the device count is
     locked at first init) -- call it between the stdlib imports and the
     ``repro.*`` imports of a benchmark script."""
-    if not any("shard_map" in a or "async" in a for a in argv):
+    if not any("shard_map" in a or "async" in a or "overlap" in a
+               for a in argv):
         return      # also matches the --engine=shard_map / =async forms
     flags = os.environ.get("XLA_FLAGS", "")
     if "xla_force_host_platform_device_count" in flags:
@@ -42,19 +43,24 @@ def add_engine_args(ap):
     """--engine / --backend / --block-format / --staleness /
     --compression knobs shared by the fig benchmarks."""
     ap.add_argument("--engine", default="simulated",
-                    choices=["simulated", "shard_map", "sync", "async"])
+                    choices=["simulated", "shard_map", "sync", "async",
+                             "overlap"])
     ap.add_argument("--backend", default="ref", choices=["ref", "pallas"],
                     help="cell-local solver backend")
     ap.add_argument("--block-format", default="dense",
                     choices=["dense", "sparse"],
                     help="per-cell layout (sparse = padded-ELL cells)")
     ap.add_argument("--staleness", type=int, default=0, metavar="TAU",
-                    help="async engine only: reduction delay tau "
+                    help="async/overlap engines: reduction delay tau "
                          "(0 = synchronous)")
     ap.add_argument("--compression", default=None, metavar="SPEC",
                     help="codec spec for the declared collectives "
-                         "('int8', 'fp8', 'topk:0.1', or per-collective "
-                         "'dw=int8,z=identity'); default: none")
+                         "('int8', 'fp8', 'topk:0.1', per-collective "
+                         "'dw=int8,z=identity', or an "
+                         "'adaptive[:...]' schedule); default: none")
+    ap.add_argument("--topology", default=None, metavar="SPEC",
+                    help="hierarchical reduction topology, e.g. "
+                         "'pods=2:int8' (default: flat)")
     return ap
 
 
@@ -85,11 +91,48 @@ def phase_fields(history) -> dict:
     out = {}
     if timed_hist:
         k = float(len(timed_hist))
-        for field in ("step_s", "local_s", "comm_s", "host_s"):
+        for field in ("step_s", "local_s", "comm_s", "host_s",
+                      "comm_exposed_s", "comm_hidden_s"):
             vals = [h[field] for h in timed_hist if field in h]
             if len(vals) == len(timed_hist):
                 out[field] = sum(vals) / k
     return out
+
+
+def annotate_wire_predictions(cells: dict, samples, algo: str = "ring"):
+    """Fit the alpha-beta wire-time model on a sweep's own measured
+    per-step ``comm_s`` and stamp every sampled cell with predicted
+    seconds + relative error (``predicted_comm_s`` /
+    ``predicted_rel_err``).
+
+    Each sample is ``(acct, sizes, measured_comm_s, cell_key,
+    topology_or_None)`` -- ``acct`` the program's wire accounting,
+    ``sizes`` the logical axis extents.  Returns the ``wire_model``
+    report block for the sweep payload (fitted alpha/beta + per-cell
+    predicted-vs-measured).
+    """
+    import dataclasses
+
+    from repro.core.comm_model import fit_link, predict_comm_s
+    link = fit_link([(acct, sizes, t) for acct, sizes, t, _, _ in samples],
+                    algo=algo, name="fitted")
+    report = {"alpha_s": link.alpha_s,
+              "beta_s_per_byte": link.beta_s_per_byte,
+              "bandwidth_gbps": link.bandwidth_gbps, "algo": algo,
+              "cells": {}}
+    for acct, sizes, measured, key, topo in samples:
+        if topo is not None:
+            topo = dataclasses.replace(topo, intra=link, inter=link)
+        pred = predict_comm_s(acct, sizes, topology=topo, link=link,
+                              algo=algo)
+        rel_err = (abs(pred["total_s"] - measured) / measured
+                   if measured > 0 else None)
+        cells[key]["predicted_comm_s"] = pred["total_s"]
+        cells[key]["predicted_rel_err"] = rel_err
+        report["cells"][key] = {"predicted_s": pred["total_s"],
+                                "measured_s": measured,
+                                "rel_err": rel_err}
+    return report
 
 
 def save_result(name: str, payload: dict):

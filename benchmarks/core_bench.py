@@ -49,10 +49,10 @@ except ImportError:                       # `python benchmarks/core_bench.py`
 
 
 def bench_combo(name, cfg, X, y, P, Q, engine, backend, f_star, reps,
-                block_format="dense", compression=None):
+                block_format="dense", compression=None, staleness=0):
     solver = get_solver(name)(engine=engine, local_backend=backend,
                               block_format=block_format,
-                              compression=compression)
+                              compression=compression, staleness=staleness)
     prog = solver.program("hinge", X, y, P=P, Q=Q, cfg=cfg)
     state = prog.step(1, prog.state)          # compile + warm
     t = timed(lambda: prog.step(2, state), reps=reps, warmup=0)
@@ -147,27 +147,31 @@ def main(argv=None):
            "provenance": provenance(args.quick),
            "cells": {}, "ratios": {}}
 
+    # the overlap engine rides the grid at a fixed tau (its own tau
+    # sweep lives in fig_overlap); tau > 0 hides comm behind local solve
+    overlap_tau = 2
     for name, cfg in configs.items():
         backends = ("ref",) if name == "admm" else ("ref", "pallas")
-        for engine in ("simulated", "shard_map"):
+        for engine in ("simulated", "shard_map", "overlap"):
+            tau = overlap_tau if engine == "overlap" else 0
             for backend in backends:
                 key = f"{name}/{engine}/{backend}"
                 cell = bench_combo(name, cfg, X, y, P, Q, engine, backend,
-                                   f_star, args.reps)
+                                   f_star, args.reps, staleness=tau)
                 out["cells"][key] = cell
                 emit_csv_row(f"core/{key}", cell["s_per_iter"] * 1e6,
                              f"rel_opt={cell['rel_opt']:.4f}")
                 skey = f"{key}/sparse"
                 scell = bench_combo(name, cfg, Xs, ys, P, Q, engine,
                                     backend, fs_star, args.reps,
-                                    block_format="sparse")
+                                    block_format="sparse", staleness=tau)
                 out["cells"][skey] = scell
                 emit_csv_row(f"core/{skey}", scell["s_per_iter"] * 1e6,
                              f"rel_opt={scell['rel_opt']:.4f}")
 
     cells = out["cells"]
     for name in configs:
-        for engine in ("simulated", "shard_map"):
+        for engine in ("simulated", "shard_map", "overlap"):
             r = cells.get(f"{name}/{engine}/ref")
             p = cells.get(f"{name}/{engine}/pallas")
             if r and p:
@@ -179,7 +183,11 @@ def main(argv=None):
             if s and d:
                 out["ratios"][f"{name}/{backend}/shard_map_over_simulated"] \
                     = (d["s_per_iter"] / s["s_per_iter"])
-            for engine in ("simulated", "shard_map"):
+            o = cells.get(f"{name}/overlap/{backend}")
+            if d and o:
+                out["ratios"][f"{name}/{backend}/overlap_over_shard_map"] \
+                    = (o["s_per_iter"] / d["s_per_iter"])
+            for engine in ("simulated", "shard_map", "overlap"):
                 dn = cells.get(f"{name}/{engine}/{backend}")
                 sp = cells.get(f"{name}/{engine}/{backend}/sparse")
                 if dn and sp:

@@ -44,17 +44,20 @@ from repro.core import (ADMMConfig, D3CAConfig, RADiSAConfig,  # noqa: E402
 from repro.data import make_svm_data  # noqa: E402
 
 try:
-    from .common import emit_csv_row, phase_fields, provenance, timed
+    from .common import (annotate_wire_predictions, emit_csv_row,
+                         phase_fields, provenance, timed)
 except ImportError:                       # `python benchmarks/fig_async.py`
-    from common import emit_csv_row, phase_fields, provenance, timed
+    from common import (annotate_wire_predictions, emit_csv_row,
+                        phase_fields, provenance, timed)
 
 
 def sweep_solver(name, cfg, X, y, P, Q, taus, backend, f_star, reps):
-    """One solver across the staleness grid.  Returns (cells, curves)."""
+    """One solver across the staleness grid.  Returns (cells, curves,
+    samples) -- samples feed the wire-time model fit."""
     sync = get_solver(name)(engine="shard_map", local_backend=backend)
     w_sync = sync.solve("hinge", X, y, P=P, Q=Q, cfg=cfg,
                         record_history=False).w
-    cells, curves = {}, {}
+    cells, curves, samples = {}, {}, []
     for tau in taus:
         solver = get_solver(name)(engine="async", staleness=tau,
                                   local_backend=backend)
@@ -86,11 +89,15 @@ def sweep_solver(name, cfg, X, y, P, Q, taus, backend, f_star, reps):
             assert diff <= 1e-8, (
                 f"{name}: async(staleness=0) diverged from shard_map "
                 f"by {diff:.3e} (> 1e-8)")
-        cells[f"{name}/async/{backend}/tau{tau}"] = entry
+        key = f"{name}/async/{backend}/tau{tau}"
+        if "comm_s" in entry:
+            samples.append((acct, {"data": P, "model": Q},
+                            entry["comm_s"], key, None))
+        cells[key] = entry
         curves[str(tau)] = [h["rel_opt"] for h in res.history]
         emit_csv_row(f"fig_async/{name}/tau{tau}", t * 1e6,
                      f"rel_opt={entry['rel_opt']:.4f}")
-    return cells, curves
+    return cells, curves, samples
 
 
 def main(argv=None):
@@ -140,11 +147,18 @@ def main(argv=None):
                               "backend": args.backend, "curves": {}}
     payload["provenance"] = provenance(args.quick)
 
+    all_samples = []
     for name in args.solvers.split(","):
-        cells, curves = sweep_solver(name, configs[name], X, y, P, Q, taus,
-                                     args.backend, f_star, args.reps)
+        cells, curves, samples = sweep_solver(
+            name, configs[name], X, y, P, Q, taus, args.backend, f_star,
+            args.reps)
         payload["cells"].update(cells)
         payload["async_sweep"]["curves"][name] = curves
+        all_samples.extend(samples)
+
+    if all_samples:
+        payload["async_sweep"]["wire_model"] = annotate_wire_predictions(
+            payload["cells"], all_samples)
 
     with open(args.out, "w") as fh:
         json.dump(payload, fh, indent=1)

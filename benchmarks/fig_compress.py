@@ -53,9 +53,11 @@ from repro.core import (ADMMConfig, D3CAConfig, RADiSAConfig,  # noqa: E402
 from repro.data import make_svm_data  # noqa: E402
 
 try:
-    from .common import emit_csv_row, phase_fields, provenance, timed
+    from .common import (annotate_wire_predictions, emit_csv_row,
+                         phase_fields, provenance, timed)
 except ImportError:                    # `python benchmarks/fig_compress.py`
-    from common import emit_csv_row, phase_fields, provenance, timed
+    from common import (annotate_wire_predictions, emit_csv_row,
+                        phase_fields, provenance, timed)
 
 
 def codec_label(spec: str) -> str:
@@ -64,11 +66,12 @@ def codec_label(spec: str) -> str:
 
 
 def sweep_solver(name, cfg, X, y, P, Q, codecs, backend, f_star, reps):
-    """One solver across the codec grid.  Returns (cells, curves)."""
+    """One solver across the codec grid.  Returns (cells, curves,
+    samples) -- samples feed the wire-time model fit."""
     plain = get_solver(name)(engine="shard_map", local_backend=backend)
     w_plain = plain.solve("hinge", X, y, P=P, Q=Q, cfg=cfg,
                           record_history=False).w
-    cells, curves = {}, {}
+    cells, curves, samples = {}, {}, []
     for codec in codecs:
         compression = None if codec == "none" else codec
         solver = get_solver(name)(engine="shard_map", local_backend=backend,
@@ -109,14 +112,18 @@ def sweep_solver(name, cfg, X, y, P, Q, codecs, backend, f_star, reps):
                 f"{acct['bytes_per_step']} B/step, expected the exact "
                 f"uncompressed {acct['uncompressed_bytes_per_step']}")
         label = codec_label(codec)
-        cells[f"{name}/compress/{backend}/{label}"] = entry
+        key = f"{name}/compress/{backend}/{label}"
+        if "comm_s" in entry:
+            samples.append((acct, {"data": P, "model": Q},
+                            entry["comm_s"], key, None))
+        cells[key] = entry
         curves[label] = {
             "rel_opt": [h["rel_opt"] for h in res.history],
             "comm_bytes": [h["comm_bytes"] for h in res.history]}
         emit_csv_row(f"fig_compress/{name}/{label}", t * 1e6,
                      f"rel_opt={entry['rel_opt']:.4f},"
                      f"bytes={entry['comm_bytes_per_step']}")
-    return cells, curves
+    return cells, curves, samples
 
 
 def main(argv=None):
@@ -163,12 +170,14 @@ def main(argv=None):
                                  "backend": args.backend, "curves": {}}
     payload["provenance"] = provenance(args.quick)
 
+    all_samples = []
     for name in args.solvers.split(","):
-        cells, curves = sweep_solver(name, configs[name], X, y, P, Q,
-                                     codecs, args.backend, f_star,
-                                     args.reps)
+        cells, curves, samples = sweep_solver(name, configs[name], X, y,
+                                              P, Q, codecs, args.backend,
+                                              f_star, args.reps)
         payload["cells"].update(cells)
         payload["compress_sweep"]["curves"][name] = curves
+        all_samples.extend(samples)
         # headline contract: int8 cuts the reported reduction bytes
         # >= 3x vs float32 (int8 payload + one f32 scale per collective)
         none_cell = cells.get(f"{name}/compress/{args.backend}/none")
@@ -181,6 +190,10 @@ def main(argv=None):
             assert ratio >= 3.0, (
                 f"{name}: int8 cut reduction bytes only {ratio:.2f}x "
                 "(expected >= 3x vs float32)")
+
+    if all_samples:
+        payload["compress_sweep"]["wire_model"] = annotate_wire_predictions(
+            payload["cells"], all_samples)
 
     with open(args.out, "w") as fh:
         json.dump(payload, fh, indent=1)

@@ -1,8 +1,11 @@
 """Core: the paper's doubly distributed optimization algorithms."""
 from .admm import (ADMMConfig, admm_distributed,
                    admm_setup_simulated, admm_simulated)
-from .comm import Comm, CommSchedule, StaleComm, SyncComm
-from .compress import (CompressedComm, CompressionPolicy, as_policy,
+from .comm import Comm, CommSchedule, OverlapComm, StaleComm, SyncComm
+from .comm_model import (LinkModel, Topology, as_topology, fit_link,
+                         overlap_split, predict_comm_s)
+from .compress import (CompressedComm, CompressionPolicy,
+                       CompressionSchedule, as_compression, as_policy,
                        available_codecs, get_codec, wire_accounting)
 from .d3ca import (D3CAConfig, d3ca_distributed, d3ca_simulated,
                    make_d3ca_step, make_d3ca_step_sparse)
@@ -21,8 +24,11 @@ from .solver import (BLOCK_FORMATS, ENGINES, LOCAL_BACKENDS, SolveResult,
 __all__ = [
     "ADMMConfig", "admm_distributed", "admm_setup_simulated",
     "admm_simulated",
-    "Comm", "CommSchedule", "StaleComm", "SyncComm",
-    "CompressedComm", "CompressionPolicy", "as_policy", "available_codecs",
+    "Comm", "CommSchedule", "OverlapComm", "StaleComm", "SyncComm",
+    "LinkModel", "Topology", "as_topology", "fit_link", "overlap_split",
+    "predict_comm_s",
+    "CompressedComm", "CompressionPolicy", "CompressionSchedule",
+    "as_compression", "as_policy", "available_codecs",
     "get_codec", "wire_accounting",
     "D3CAConfig", "d3ca_distributed", "d3ca_simulated", "make_d3ca_step",
     "make_d3ca_step_sparse",

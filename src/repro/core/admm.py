@@ -46,7 +46,8 @@ from jax.sharding import PartitionSpec as P
 from .comm import CommSchedule
 from .engines import (CellProgram, EngineProgram, SparseShardMapData,
                       drive_with_callback, grid_bind_state, grid_program,
-                      mesh_local_step, mesh_program, mesh_step_fn)
+                      mesh_local_step, mesh_program, mesh_step_fn,
+                      overlap_donates)
 from .losses import Loss, get_loss
 from .partition import (DoublyPartitioned, SparseDoublyPartitioned,
                         ell_gather, ell_scatter_add)
@@ -158,7 +159,8 @@ def admm_setup_simulated(data, cfg: ADMMConfig):
 
 def admm_simulated_program(loss: Loss, data: DoublyPartitioned,
                            cfg: ADMMConfig, *, chol=None,
-                           w0=None, compression=None) -> EngineProgram:
+                           w0=None, compression=None,
+                           topology=None) -> EngineProgram:
     """Named-vmap grid engine.  State: (s (P,Q,n_p,1), u (P,Q,n_p,1),
     w_blocks (Q, m_q)).  The Cholesky setup runs at build time.
     ``data`` may be dense or sparse (padded-ELL cells); ``compression``
@@ -173,7 +175,8 @@ def admm_simulated_program(loss: Loss, data: DoublyPartitioned,
     # blocked layout: one leading block axis per logical axis of the
     # dim-spec, per-cell extents in place -- chol spec is ("model",)
     gdata = (*x_parts, data.y_blocks, data.mask, chol[:, None])
-    step = grid_program(cellprog, Pn, Qn, compression=compression)
+    step = grid_program(cellprog, Pn, Qn, compression=compression,
+                        topology=topology)
 
     w_init = (jnp.zeros((Qn, data.m_q)) if w0 is None
               else data.w_to_blocks(jnp.asarray(w0)))
@@ -181,17 +184,17 @@ def admm_simulated_program(loss: Loss, data: DoublyPartitioned,
     state0 = (zeros_su, zeros_su, w_init)
     full0, unwrap, acct = grid_bind_state(cellprog, gdata, state0,
                                           Pn=Pn, Qn=Qn,
-                                          compression=compression)
+                                          compression=compression,
+                                          topology=topology)
     local = grid_program(cellprog, Pn, Qn, comm_local=True)
-    ef_names = (compression.stateful_names(cellprog.schedule)
-                if compression is not None else ())
+    wrapped = full0 is not state0
     return EngineProgram(
         state=full0,
         step=lambda t, st: step(t, gdata, st),
         w_of=lambda st: data.w_from_blocks(unwrap(st)[2]),
         comm_bytes=acct,
         local_step=lambda t, st: local(t, gdata, unwrap(st)),
-        ef_of=(lambda st: st[1]) if ef_names else None)
+        ef_of=(lambda st: st[1]) if wrapped else None)
 
 
 def admm_simulated(loss_name: str, data: DoublyPartitioned, cfg: ADMMConfig,
@@ -284,7 +287,8 @@ def admm_setup_distributed_sparse(mesh, cols, vals, m_q: int,
 
 def admm_shard_map_program(loss: Loss, sdata, cfg: ADMMConfig,
                            *, w0=None, staleness: int = 0,
-                           compression=None) -> EngineProgram:
+                           compression=None, overlap: bool = False,
+                           topology=None) -> EngineProgram:
     """Mesh engine.  State: ((s (n_pad, Q), u (n_pad, Q), w (m_pad,)),
     comm_state), all sharded.
 
@@ -316,17 +320,22 @@ def admm_shard_map_program(loss: Loss, sdata, cfg: ADMMConfig,
     step, comm0, acct = mesh_program(
         cellprog, mesh, mdata, state0,
         data_axis=sdata.data_axis, model_axis=sdata.model_axis,
-        staleness=staleness, compression=compression)
+        staleness=staleness, compression=compression,
+        overlap=overlap, topology=topology)
     local = mesh_local_step(cellprog, mesh,
                             data_axis=sdata.data_axis,
                             model_axis=sdata.model_axis)
+    is_overlap = bool(overlap) and staleness > 0
     return EngineProgram(
         state=(state0, comm0),
         step=lambda t, st: step(t, mdata, st),
         w_of=lambda st: st[0][2][: sdata.m],
         comm_bytes=acct,
         local_step=lambda t, st: local(t, mdata, st[0]),
-        ef_of=(lambda st: st[1]["ef"]) if "ef" in comm0 else None)
+        ef_of=(lambda st: st[1]["ef"]) if "ef" in comm0 else None,
+        staleness=staleness, overlap=is_overlap,
+        sync_of=(lambda st: st[0]) if is_overlap else None,
+        donated=is_overlap and overlap_donates())
 
 
 def admm_distributed(loss_name: str, mesh, x, y, mask, cfg: ADMMConfig,

@@ -185,15 +185,89 @@ class Comm:
 class SyncComm(Comm):
     """Apply every reduction immediately (the paper's synchronous outer
     loop).  Works unchanged inside a named-``vmap`` grid and inside a
-    ``shard_map`` cell -- both execute collectives over named axes."""
+    ``shard_map`` cell -- both execute collectives over named axes.
 
-    def _exec(self, point: Collective, value):
+    All reduction executors (this one, :class:`StaleComm`,
+    :class:`OverlapComm`) funnel the *actual wire operation* through the
+    :meth:`_reduce` hook, so the hierarchical two-level reduction below
+    composes with every consumption policy.
+
+    **Hierarchical topology-aware reduction** (``set_topology``): when a
+    :class:`~repro.core.comm_model.Topology` with ``pods > 1`` is set,
+    a psum/pmean over the pod-split logical axis is executed as a
+    two-level axis split -- a full-precision psum over the intra-pod
+    axes followed by a codec-compressed psum over the pod axis (the
+    cheap fat link carries full floats, the expensive thin link carries
+    the codec payload).  The engine expresses the pod split as real
+    named axes: the logical axis must map to >= 2 concrete axes with the
+    pod axis leading (e.g. ``("pod", "data")`` on a multi-pod mesh, or a
+    third named-vmap level on the simulated grid).  A stateful cross-pod
+    codec carries its error-feedback residual per (cell, collective) in
+    ``hier_ef_in``/``hier_ef_out`` -- threaded through the engine state
+    exactly like :class:`CompressedComm`'s residuals, and *distinct*
+    from them (a per-collective policy codec compresses the cell
+    payload before any reduction; the topology codec compresses the
+    intra-pod partial sum).
+    """
+
+    #: two-level reduction disabled until ``set_topology`` is called
+    topology = None
+
+    def set_topology(self, topology, codec, ef: Optional[dict] = None):
+        """Enable hierarchical reduction over ``topology.axis``.
+
+        ``codec`` is the cross-pod codec instance; ``ef`` maps
+        collective name -> this cell's error-feedback residual (required
+        for stateful codecs, allocated by the engine against the
+        intra-pod partial-sum aval == the per-cell payload aval)."""
+        self.topology = topology
+        self._hier_codec = codec
+        self.hier_ef_in = dict(ef or {})
+        #: updated residuals, harvested by the engine after the cell runs
+        self.hier_ef_out: Dict[str, jnp.ndarray] = {}
+
+    def _reduce(self, point: Collective, value):
+        """The wire operation: fresh reduction of this step's value."""
         axes = self.axis_map[point.axis]
+        topo = self.topology
+        if (topo is not None and topo.pods > 1 and point.axis == topo.axis
+                and point.op != "allgather"):
+            return self._reduce_hierarchical(point, value, axes)
         if point.op == "psum":
             return jax.lax.psum(value, axes)
         if point.op == "pmean":
             return jax.lax.pmean(value, axes)
         return jax.lax.all_gather(value, axes)
+
+    def _reduce_hierarchical(self, point: Collective, value, axes):
+        if len(axes) < 2:
+            raise ValueError(
+                f"hierarchical reduction over {point.axis!r} needs a "
+                f"two-level axis split (pod axis + intra-pod axes); the "
+                f"engine mapped it to {axes!r}. Build the program with a "
+                "pod-split mesh/grid (topology=...) end to end.")
+        pod_axes, inner_axes = axes[:1], axes[1:]
+        part = jnp.asarray(jax.lax.psum(value, inner_axes))
+        codec = self._hier_codec
+        if codec.stateful:
+            try:
+                err = self.hier_ef_in[point.name]
+            except KeyError:
+                raise KeyError(
+                    f"no cross-pod error-feedback residual for reduction "
+                    f"{point.name!r}; the engine allocates one per "
+                    "pod-split collective at build time") from None
+            deq, new_err = codec.apply(part, err)
+            self.hier_ef_out[point.name] = new_err
+        else:
+            deq, _ = codec.apply(part)
+        out = jax.lax.psum(jnp.asarray(deq).astype(part.dtype), pod_axes)
+        if point.op == "pmean":
+            out = out / self.sizes[point.axis]
+        return out
+
+    def _exec(self, point: Collective, value):
+        return self._reduce(point, value)
 
 
 class LocalComm(Comm):
@@ -259,8 +333,16 @@ class StaleComm(SyncComm):
     at step ``max(1, t - tau)``.  Each point carries a ``(tau, ...)``
     FIFO ring in the engine state: slot ``(t-1) % tau`` holds the
     reduction of step ``t - tau``, which is read just before the fresh
-    value overwrites it.  At t = 1 every slot is seeded with the first
-    reduction, so stale reads never see zeros from initialization.
+    value overwrites it.
+
+    **Warm-up semantics (pinned by tests/test_comm.py):** at t = 1 every
+    ring slot is seeded with the *first* reduction, so the first ``tau``
+    steps consume the reduction of step ``max(1, t - tau)`` -- i.e.
+    steps 1..tau+1 all consume step 1's value, never zeros from
+    initialization and never a partially-filled ring.  This is the same
+    contract the overlap engine needs: during warm-up there is nothing
+    in flight to await, so the dispatch of step 1 is the only value
+    available.
 
     The fresh collective still executes every step -- on real hardware
     the reduction would be launched asynchronously and *consumed* tau
@@ -269,6 +351,11 @@ class StaleComm(SyncComm):
 
     ``tau = 0`` never touches a buffer and returns the fresh value, so
     the async engine at zero staleness is the sync engine, bit for bit.
+
+    ``wire_bytes`` accounting is **additive, not policy-dependent**: the
+    ring only re-times consumption, every step still puts exactly one
+    payload per declared point on the wire, so sync / stale / overlap
+    report identical byte totals for the identity codec (tested).
     """
 
     def __init__(self, schedule, axis_map, sizes, *, tau: int, t,
@@ -281,7 +368,9 @@ class StaleComm(SyncComm):
         self.bufs_in = bufs or {}
 
     def _exec(self, point, value):
-        fresh = super()._exec(point, value)
+        # the wire op goes through the _reduce hook so the hierarchical
+        # two-level reduction composes with the staleness ring
+        fresh = self._reduce(point, value)
         if self.tau == 0:
             return fresh
         try:
@@ -306,3 +395,53 @@ class StaleComm(SyncComm):
         super().finalize()
         if self.tau and set(self.bufs_out) != set(self.schedule.names):
             raise ValueError("staleness buffers out of sync with schedule")
+
+
+class OverlapComm(StaleComm):
+    """Communication-overlap executor (the overlap engine's policy).
+
+    Same consumption contract as :class:`StaleComm` -- the value applied
+    at step t is the reduction *dispatched* at step ``max(1, t - tau)``
+    -- but the engine built around it actually lets the wire overlap
+    the local solve:
+
+      * inside the jitted step the ring slots are the *reduction
+        in-flight buffers*: the fresh collective's result is written to
+        the slot that will be consumed tau steps later and nothing
+        downstream of this step's local solve depends on it, so XLA's
+        latency-hiding scheduler is free to run the collective
+        concurrently with the cell-local SDCA/SVRG kernels of steps
+        t..t+tau.  The engine donates the ring buffers to the step
+        (double-buffered slots, no defensive copy) to keep that window
+        open on accelerator backends;
+      * on the host path the driver never calls ``block_until_ready``
+        on the rings between steps -- only the iterate substate is
+        synced at observation points (``EngineProgram.sync_of``), so
+        dispatch returns a future and the await happens tau steps
+        later when the slot is next read.
+
+    Because consumption timing is identical to :class:`StaleComm`, the
+    overlap engine's trajectories match the async engine at equal tau
+    (and the sync engine bit-for-bit at tau = 0): overlap changes
+    *wall-clock*, never numerics.  Error-feedback residuals of a
+    composed :class:`CompressedComm` live with the **dispatch** step by
+    construction -- the codec encodes the payload before ``_reduce``
+    ever sees it, so the residual written to the engine state at step t
+    is the one produced by the payload dispatched at step t.
+    """
+
+    #: engines key off this to enable donation + selective host sync
+    overlap = True
+
+
+def hier_ef_names(schedule: CommSchedule, topology) -> Tuple[str, ...]:
+    """Names of collectives that need a cross-pod error-feedback
+    residual under ``topology``: the psum/pmean points over the
+    pod-split axis, when the cross-pod codec is stateful."""
+    if topology is None or topology.pods <= 1:
+        return ()
+    from .compress import get_codec
+    if not get_codec(topology.codec).stateful:
+        return ()
+    return tuple(p.name for p in schedule
+                 if p.axis == topology.axis and p.op != "allgather")

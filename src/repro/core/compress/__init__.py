@@ -20,12 +20,14 @@ from .codecs import (Codec, Fp8Codec, IdentityCodec, Int8Codec, TopKCodec,
                      available_codecs, compress, decompress, get_codec,
                      init_error)
 from .executor import CompressedComm, wire_accounting
-from .policy import CompressionPolicy, as_policy, identity_policy
+from .policy import (CompressionPolicy, CompressionSchedule, as_compression,
+                     as_policy, identity_policy)
 
 __all__ = [
     "Codec", "Fp8Codec", "IdentityCodec", "Int8Codec", "TopKCodec",
     "available_codecs", "get_codec",
     "compress", "decompress", "init_error",
     "CompressedComm", "wire_accounting",
-    "CompressionPolicy", "as_policy", "identity_policy",
+    "CompressionPolicy", "CompressionSchedule", "as_compression",
+    "as_policy", "identity_policy",
 ]

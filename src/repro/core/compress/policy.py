@@ -100,6 +100,106 @@ class CompressionPolicy:
         return f"CompressionPolicy({self.spec!r})"
 
 
+class CompressionSchedule:
+    """Adaptive per-collective codec switching: a sequence of
+    :class:`CompressionPolicy` stages advanced by observed convergence.
+
+    The CoCoA-style story: aggressive sparsification (top-k) buys the
+    most wire early, when updates are large and redundant; near
+    convergence the iterates need the denser signal, so the schedule
+    falls back to a gentler codec (int8).  The driver watches the
+    ``rel_opt`` slope in solver history (objective decrease when no
+    ``f_star`` is known) and advances to the next stage when progress
+    per iteration flattens below ``slope_tol`` decades/iter over a
+    ``window``-iteration lookback.  Stage switches happen between outer
+    steps at the host level -- each stage is a fresh program build warm
+    started from the current iterates, since a codec cannot change
+    inside a compiled step.
+
+    Spec grammar (``@``-separated options after the ``->`` stage
+    chain)::
+
+        adaptive                              # topk:0.25 -> int8
+        adaptive:topk:0.1->int8               # explicit stages
+        adaptive:topk:0.25->int8->identity@slope=0.02@window=4
+    """
+
+    DEFAULT_STAGES = ("topk:0.25", "int8")
+
+    def __init__(self, stages=None, *, slope_tol: float = 0.05,
+                 window: int = 3):
+        stages = tuple(stages) if stages else self.DEFAULT_STAGES
+        self.stages = tuple(as_policy(s) for s in stages)
+        if any(s is None for s in self.stages):
+            raise ValueError("CompressionSchedule stages must be policies")
+        self.slope_tol = float(slope_tol)
+        self.window = int(window)
+        if self.window < 1:
+            raise ValueError(f"window={window} must be >= 1")
+        if self.slope_tol < 0:
+            raise ValueError(f"slope_tol={slope_tol} must be >= 0")
+
+    @classmethod
+    def from_spec(cls, spec: str) -> "CompressionSchedule":
+        text = str(spec).strip()
+        head, *opts = text.split("@")
+        head = head.strip()
+        if not (head == "adaptive" or head.startswith("adaptive:")):
+            raise ValueError(f"bad adaptive spec {spec!r}: expected "
+                             "'adaptive[:stage->stage...][@slope=..]'")
+        body = head[len("adaptive"):].lstrip(":")
+        stages = [s.strip() for s in body.split("->") if s.strip()] or None
+        kw = {}
+        for opt in opts:
+            key, _, val = opt.strip().partition("=")
+            if key == "slope":
+                kw["slope_tol"] = float(val)
+            elif key == "window":
+                kw["window"] = int(val)
+            else:
+                raise ValueError(f"unknown adaptive option {opt!r} in "
+                                 f"spec {spec!r} (know: slope, window)")
+        return cls(stages, **kw)
+
+    @property
+    def spec(self) -> str:
+        chain = "->".join(s.spec for s in self.stages)
+        return (f"adaptive:{chain}@slope={self.slope_tol:g}"
+                f"@window={self.window}")
+
+    def validate(self, schedule) -> "CompressionSchedule":
+        for s in self.stages:
+            s.validate(schedule)
+        return self
+
+    def should_advance(self, values) -> bool:
+        """True when the convergence metric (smaller = better, e.g.
+        rel_opt) has flattened: its log10 decrease per iteration over
+        the last ``window`` iterations fell below ``slope_tol``."""
+        import math
+        if len(values) < self.window + 1:
+            return False
+        a = max(float(values[-1 - self.window]), 1e-12)
+        b = max(float(values[-1]), 1e-12)
+        slope = (math.log10(a) - math.log10(b)) / self.window
+        return slope < self.slope_tol
+
+    def __repr__(self):
+        return f"CompressionSchedule({self.spec!r})"
+
+
+def as_compression(compression):
+    """Normalize the ``compression=`` knob including adaptive schedules:
+    returns ``None``, a :class:`CompressionPolicy`, or a
+    :class:`CompressionSchedule` (``"adaptive..."`` specs)."""
+    if isinstance(compression, CompressionSchedule):
+        return compression
+    if isinstance(compression, str) \
+            and compression.strip().startswith("adaptive"):
+        return CompressionSchedule.from_spec(compression)
+    return as_policy(compression)
+
+
 def as_policy(compression) -> Optional[CompressionPolicy]:
     """Normalize the user-facing ``compression=`` knob.
 

@@ -34,7 +34,8 @@ import jax.numpy as jnp
 from .comm import CommSchedule
 from .engines import (CellProgram, EngineProgram, SparseShardMapData,
                       drive_with_callback, grid_bind_state, grid_program,
-                      mesh_local_step, mesh_program, mesh_step_fn)
+                      mesh_local_step, mesh_program, mesh_step_fn,
+                      overlap_donates)
 from .local import local_sdca, local_sdca_sparse
 from .losses import Loss, get_loss
 from .partition import (DoublyPartitioned, SparseDoublyPartitioned,
@@ -114,7 +115,7 @@ def d3ca_cell_program(loss: Loss, cfg: D3CAConfig, *, n: int, n_p: int,
 def d3ca_simulated_program(loss: Loss, data: DoublyPartitioned,
                            cfg: D3CAConfig, *, local_backend: str = "ref",
                            w0=None, alpha0=None,
-                           compression=None) -> EngineProgram:
+                           compression=None, topology=None) -> EngineProgram:
     """Named-vmap grid engine.  State: (alpha (P, n_p), w_blocks (Q, m_q)).
 
     ``data`` may be a dense :class:`DoublyPartitioned` or a sparse
@@ -130,7 +131,8 @@ def d3ca_simulated_program(loss: Loss, data: DoublyPartitioned,
     key0 = jax.random.PRNGKey(cfg.seed)
     x_parts = (data.cols, data.vals) if sparse else (data.x_blocks,)
     gdata = (key0, *x_parts, data.y_blocks, data.mask)
-    step = grid_program(cellprog, Pn, Qn, compression=compression)
+    step = grid_program(cellprog, Pn, Qn, compression=compression,
+                        topology=topology)
 
     alpha_init = (jnp.zeros((Pn, data.n_p)) if alpha0 is None
                   else data.alpha_to_blocks(jnp.asarray(alpha0)))
@@ -139,10 +141,10 @@ def d3ca_simulated_program(loss: Loss, data: DoublyPartitioned,
     state0 = (alpha_init, w_init)
     full0, unwrap, acct = grid_bind_state(cellprog, gdata, state0,
                                           Pn=Pn, Qn=Qn,
-                                          compression=compression)
+                                          compression=compression,
+                                          topology=topology)
     local = grid_program(cellprog, Pn, Qn, comm_local=True)
-    ef_names = (compression.stateful_names(cellprog.schedule)
-                if compression is not None else ())
+    wrapped = full0 is not state0
     return EngineProgram(
         state=full0,
         step=lambda t, s: step(t, gdata, s),
@@ -150,7 +152,7 @@ def d3ca_simulated_program(loss: Loss, data: DoublyPartitioned,
         alpha_of=lambda s: data.alpha_from_blocks(unwrap(s)[0] * data.mask),
         comm_bytes=acct,
         local_step=lambda t, s: local(t, gdata, unwrap(s)),
-        ef_of=(lambda s: s[1]) if ef_names else None)
+        ef_of=(lambda s: s[1]) if wrapped else None)
 
 
 def d3ca_simulated(loss_name: str, data: DoublyPartitioned, cfg: D3CAConfig,
@@ -216,13 +218,17 @@ def make_d3ca_step_sparse(loss: Loss, mesh, cfg: D3CAConfig, *, n: int,
 def d3ca_shard_map_program(loss: Loss, sdata, cfg: D3CAConfig,
                            *, local_backend: str = "ref",
                            w0=None, alpha0=None, staleness: int = 0,
-                           compression=None) -> EngineProgram:
+                           compression=None, overlap: bool = False,
+                           topology=None) -> EngineProgram:
     """Mesh engine.  State: ((alpha (n_pad,), w (m_pad,)), comm_state),
     all sharded (comm_state carries staleness rings and/or EF
     residuals).  ``sdata`` is a :class:`ShardMapData` or
     :class:`SparseShardMapData`; ``staleness=tau > 0`` selects the
     bounded-staleness async policy (tau = 0 is the sync engine);
-    ``compression`` routes both collectives through their codecs."""
+    ``compression`` routes both collectives through their codecs;
+    ``overlap=True`` dispatches reductions into donated ring slots and
+    awaits them tau steps later (the overlap engine); ``topology``
+    enables the hierarchical two-level reduction (pod-split mesh)."""
     sparse = isinstance(sdata, SparseShardMapData)
     cellprog = d3ca_cell_program(
         loss, cfg, n=sdata.n, n_p=sdata.n_p,
@@ -237,10 +243,12 @@ def d3ca_shard_map_program(loss: Loss, sdata, cfg: D3CAConfig,
     step, comm0, acct = mesh_program(
         cellprog, sdata.mesh, mdata, (alpha_init, w_init),
         data_axis=sdata.data_axis, model_axis=sdata.model_axis,
-        staleness=staleness, compression=compression)
+        staleness=staleness, compression=compression,
+        overlap=overlap, topology=topology)
     local = mesh_local_step(cellprog, sdata.mesh,
                             data_axis=sdata.data_axis,
                             model_axis=sdata.model_axis)
+    is_overlap = bool(overlap) and staleness > 0
     return EngineProgram(
         state=((alpha_init, w_init), comm0),
         step=lambda t, s: step(t, mdata, s),
@@ -248,7 +256,10 @@ def d3ca_shard_map_program(loss: Loss, sdata, cfg: D3CAConfig,
         alpha_of=lambda s: s[0][0][: sdata.n],
         comm_bytes=acct,
         local_step=lambda t, s: local(t, mdata, s[0]),
-        ef_of=(lambda s: s[1]["ef"]) if "ef" in comm0 else None)
+        ef_of=(lambda s: s[1]["ef"]) if "ef" in comm0 else None,
+        staleness=staleness, overlap=is_overlap,
+        sync_of=(lambda s: s[0]) if is_overlap else None,
+        donated=is_overlap and overlap_donates())
 
 
 def d3ca_distributed(loss_name: str, mesh, x, y, mask, cfg: D3CAConfig,

@@ -49,9 +49,10 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from .comm import (CommSchedule, LocalComm, ShapeProbeComm, StaleComm,
-                   SyncComm)
-from .compress import CompressedComm, wire_accounting
+from .comm import (CommSchedule, LocalComm, OverlapComm, ShapeProbeComm,
+                   StaleComm, SyncComm, hier_ef_names)
+from .comm_model import hierarchical_accounting
+from .compress import CompressedComm, get_codec, wire_accounting
 from .partition import _ceil_to
 from .util import as_axes, axes_size, pvary, shard_map
 
@@ -77,6 +78,22 @@ class EngineProgram:
     #: compression policy carries stateful codecs (telemetry reads the
     #: per-iteration EF norms off it); None otherwise
     ef_of: Optional[Callable[[Any], dict]] = None
+    #: consumption delay tau the program was built with (0 = sync)
+    staleness: int = 0
+    #: True for the overlap engine: reductions are dispatched into
+    #: double-buffered ring slots and awaited tau steps later, so the
+    #: driver must not block on in-flight comm state between steps
+    overlap: bool = False
+    #: state -> the substate that must be device-complete at an
+    #: observation point (the iterate substate, EXCLUDING in-flight
+    #: reduction slots).  None means block on the whole state -- the
+    #: overlap engine sets this so ``drive`` keeps the dispatch window
+    #: open on the host path
+    sync_of: Optional[Callable[[Any], Any]] = None
+    #: True when ``step`` donates its state argument (overlap engine on
+    #: non-CPU backends): callers that re-step from a saved state must
+    #: copy it first (see ``repro.obs.phases.calibrate_phases``)
+    donated: bool = False
 
 
 def drive(prog: EngineProgram, outer_iters: int, observe=None, *,
@@ -99,6 +116,12 @@ def drive(prog: EngineProgram, outer_iters: int, observe=None, *,
     tracing = tracer is not None and getattr(tracer, "enabled", False)
     state = prog.state
     done = 0
+    # The overlap engine's contract: never block on in-flight reduction
+    # slots between steps -- only the iterate substate is synced, so a
+    # dispatched collective stays a future until the slot is read tau
+    # steps later.  sync_of is None for every other engine (block on
+    # the whole state, the pre-overlap behavior).
+    sync = prog.sync_of if prog.sync_of is not None else (lambda s: s)
     if not tracing and on_step is None:
         for t in range(1, outer_iters + 1):
             state = prog.step(t, state)
@@ -119,7 +142,7 @@ def drive(prog: EngineProgram, outer_iters: int, observe=None, *,
                 # on_step synthesizes at t0 nest within it
                 t0 = clock()
                 state = prog.step(t, state)
-                jax.block_until_ready(state)
+                jax.block_until_ready(sync(state))
                 step_s = clock() - t0
             if on_step is not None:
                 on_step(t, t0, step_s)
@@ -352,6 +375,48 @@ class CellProgram:
 # -- grid engine (named vmap on one device) ---------------------------------
 
 _GRID_DATA, _GRID_MODEL = "grid_data", "grid_model"
+_GRID_POD = "grid_pod"
+
+#: grid-engine error-feedback dict key prefix for the cross-pod
+#: (topology) codec residuals -- keeps them distinct from a
+#: CompressionPolicy residual on the same collective name inside the
+#: single blocked ``ef`` operand
+_POD_EF = "pod:"
+
+
+def _norm_topology(topology):
+    """None | spec | Topology -> Topology with pods > 1, else None."""
+    if topology is None:
+        return None
+    from .comm_model import Topology
+    topo = Topology.from_spec(topology)
+    if topo.pods <= 1:
+        return None
+    if topo.axis != "data":
+        raise ValueError(f"topology splits axis {topo.axis!r}; the engines "
+                         "only pod-split the 'data' axis")
+    return topo
+
+
+def _split_pods(tree, specs, G):
+    """Blocked layout -> pod-split blocked layout: every leaf whose
+    dim-spec names 'data' splits its leading P block axis into
+    (G, P // G).  Pods are contiguous index ranges, matching the
+    mesh engines' ("pod", "data") axis order and ``axes_index``."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    out = []
+    for leaf, ds in zip(leaves, _spec_leaves(specs)):
+        if "data" in ds:
+            leaf = leaf.reshape((G, leaf.shape[0] // G) + leaf.shape[1:])
+        out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _merge_pods(tree):
+    """Collapse the (G, P // G) leading axes every vmap output carries
+    back into one P axis (all out leaves are stacked over all levels)."""
+    return jax.tree_util.tree_map(
+        lambda leaf: leaf.reshape((-1,) + leaf.shape[2:]), tree)
 
 
 def _drop_replicas(out, state_specs):
@@ -372,7 +437,8 @@ def _drop_replicas(out, state_specs):
 
 
 def grid_program(cellprog: CellProgram, Pn: int, Qn: int, *,
-                 compression=None, comm_local: bool = False):
+                 compression=None, comm_local: bool = False,
+                 topology=None):
     """Named-``vmap`` executor: the P x Q grid is the leading block axes
     of the operands and the declared collectives run as vmap-axis
     reductions.  Returns a jitted ``step(t, data, state) -> state``
@@ -395,8 +461,27 @@ def grid_program(cellprog: CellProgram, Pn: int, Qn: int, *,
     avals, zero reduction work.  Timing-only (``EngineProgram.
     local_step``); incompatible with ``compression`` (a local program's
     wire cost is zero by construction).
+
+    ``topology`` (a :class:`~repro.core.comm_model.Topology` or spec
+    string with ``pods > 1``) pod-splits the data axis as a THIRD named
+    vmap level, so psums over "data" execute hierarchically (intra-pod
+    full precision, cross-pod through the topology codec).  The step
+    then always takes the ``(state, ef)`` full state (cross-pod EF
+    residuals ride in ``ef`` under ``"pod:"``-prefixed keys) and the
+    blocked operand layout is unchanged -- pods are contiguous P-index
+    ranges reshaped inside the step.
     """
+    topo = _norm_topology(topology)
+    if comm_local:
+        topo = None            # the local twin runs no reductions at all
     axis_map = {"data": (_GRID_DATA,), "model": (_GRID_MODEL,)}
+    G = 1
+    if topo is not None:
+        G = topo.pods
+        if Pn % G:
+            raise ValueError(f"topology pods={G} does not divide P={Pn}")
+        axis_map = {"data": (_GRID_POD, _GRID_DATA),
+                    "model": (_GRID_MODEL,)}
     sizes = {"data": Pn, "model": Qn}
     sched = cellprog.schedule
     policy = compression
@@ -406,13 +491,14 @@ def grid_program(cellprog: CellProgram, Pn: int, Qn: int, *,
     if policy is not None:
         policy.validate(sched)
     comm_cls = LocalComm if comm_local else SyncComm
+    hier_codec = get_codec(topo.codec) if topo is not None else None
 
     def in_axes(specs, axis):
         return jax.tree_util.tree_map(
             lambda ds: 0 if axis in ds else None, specs,
             is_leaf=_is_dimspec)
 
-    if policy is None:
+    if policy is None and topo is None:
         def one_cell(t, d, s):
             comm = comm_cls(sched, axis_map, sizes)
             out = cellprog.cell(comm, t, d, s)
@@ -435,25 +521,53 @@ def grid_program(cellprog: CellProgram, Pn: int, Qn: int, *,
         return jax.jit(step)
 
     def one_cell_c(t, d, s, ef):
-        comm = CompressedComm(SyncComm(sched, axis_map, sizes), policy,
-                              ef=ef)
+        inner = SyncComm(sched, axis_map, sizes)
+        if topo is not None:
+            inner.set_topology(
+                topo, hier_codec,
+                ef={k[len(_POD_EF):]: v for k, v in ef.items()
+                    if k.startswith(_POD_EF)})
+        if policy is not None:
+            comm = CompressedComm(
+                inner, policy,
+                ef={k: v for k, v in ef.items()
+                    if not k.startswith(_POD_EF)})
+        else:
+            comm = inner
         out = cellprog.cell(comm, t, d, s)
         comm.finalize()
-        return out, comm.ef_out
+        ef_out = dict(comm.ef_out) if policy is not None else {}
+        if topo is not None:
+            ef_out.update({_POD_EF + k: v
+                           for k, v in inner.hier_ef_out.items()})
+        return out, ef_out
 
-    # EF residuals are private per cell: blocked over both grid axes
-    inner = jax.vmap(one_cell_c,
-                     in_axes=(None, in_axes(cellprog.data_specs, "model"),
-                              in_axes(cellprog.state_specs, "model"), 0),
-                     axis_name=_GRID_MODEL)
-    outer = jax.vmap(inner,
-                     in_axes=(None, in_axes(cellprog.data_specs, "data"),
-                              in_axes(cellprog.state_specs, "data"), 0),
-                     axis_name=_GRID_DATA)
+    # EF residuals are private per cell: blocked over every grid axis
+    vm = jax.vmap(one_cell_c,
+                  in_axes=(None, in_axes(cellprog.data_specs, "model"),
+                           in_axes(cellprog.state_specs, "model"), 0),
+                  axis_name=_GRID_MODEL)
+    vm = jax.vmap(vm,
+                  in_axes=(None, in_axes(cellprog.data_specs, "data"),
+                           in_axes(cellprog.state_specs, "data"), 0),
+                  axis_name=_GRID_DATA)
+    if topo is not None:
+        vm = jax.vmap(vm,
+                      in_axes=(None, in_axes(cellprog.data_specs, "data"),
+                               in_axes(cellprog.state_specs, "data"), 0),
+                      axis_name=_GRID_POD)
 
     def step_c(t, data, full_state):
         state, ef = full_state
-        out, ef_out = outer(t, data, state, ef)
+        if G > 1:
+            data = _split_pods(data, cellprog.data_specs, G)
+            state = _split_pods(state, cellprog.state_specs, G)
+            ef = {k: v.reshape((G, v.shape[0] // G) + v.shape[1:])
+                  for k, v in ef.items()}
+        out, ef_out = vm(t, data, state, ef)
+        if G > 1:
+            out = _merge_pods(out)
+            ef_out = _merge_pods(ef_out)
         return _drop_replicas(out, cellprog.state_specs), ef_out
 
     return jax.jit(step_c)
@@ -491,24 +605,35 @@ def _pvary_missing(tree_vals, specs, axis_map):
 
 def mesh_step_fn(cellprog: CellProgram, mesh, *, data_axis="data",
                  model_axis: str = "model", staleness: int = 0,
-                 compression=None, comm_local: bool = False):
+                 compression=None, comm_local: bool = False,
+                 overlap: bool = False, topology=None):
     """Raw (unjitted) mesh executor.
 
     Returns ``step(t, data, state, cbufs) -> (state, cbufs)`` running
     the cell once per device of the (data=P, model=Q) mesh under
     shard_map.  ``cbufs`` is the communication-state pytree -- ``{}``
-    when no policy needs state, otherwise up to two sub-dicts of
+    when no policy needs state, otherwise up to three sub-dicts of
     per-cell buffers sharded over (data, model):
 
       * ``cbufs["stale"]`` (``staleness = tau > 0``): one
         ``(P, Q, tau, *cell_result_shape)`` FIFO ring per collective
-        (:class:`StaleComm`; tau = 0 applies every reduction
-        synchronously via :class:`SyncComm`);
+        (:class:`StaleComm`, or :class:`OverlapComm` when
+        ``overlap=True`` -- same numerics, but the ring slots double as
+        the in-flight reduction buffers the engine donates; tau = 0
+        applies every reduction synchronously via :class:`SyncComm`);
       * ``cbufs["ef"]`` (``compression`` with lossy codecs): one
         ``(P, Q, *payload_shape)`` f32 error-feedback residual per
         compressed collective (:class:`CompressedComm` wrapping the
-        sync/stale executor, so compression composes with staleness).
+        sync/stale executor, so compression composes with staleness);
+      * ``cbufs["hier_ef"]`` (``topology`` with pods > 1 and a stateful
+        cross-pod codec): one ``(P, Q, *payload_shape)`` f32 residual
+        per pod-split collective for the hierarchical two-level
+        reduction.  ``data_axis`` must then be a >= 2 axis tuple with
+        the pod axis leading (e.g. ``("pod", "data")``).
     """
+    topo = _norm_topology(topology)
+    if comm_local:
+        topo = None            # the local twin runs no reductions at all
     daxes = as_axes(data_axis)
     axis_map = {"data": daxes, "model": (model_axis,)}
     sizes = {"data": axes_size(mesh, data_axis),
@@ -521,6 +646,18 @@ def mesh_step_fn(cellprog: CellProgram, mesh, *, data_axis="data",
     if policy is not None:
         policy.validate(sched)
     ef_names = policy.stateful_names(sched) if policy is not None else ()
+    if topo is not None:
+        if len(daxes) < 2:
+            raise ValueError(
+                f"topology pods={topo.pods} needs a pod-split mesh: pass "
+                f"data_axis as a >= 2 axis tuple, got {data_axis!r}")
+        if axes_size(mesh, daxes[:1]) != topo.pods:
+            raise ValueError(
+                f"mesh pod axis {daxes[0]!r} has extent "
+                f"{axes_size(mesh, daxes[:1])}, topology says "
+                f"pods={topo.pods}")
+    hier_codec = get_codec(topo.codec) if topo is not None else None
+    hnames = hier_ef_names(sched, topo)
     dspec = daxes if len(daxes) > 1 else daxes[0]
 
     def pspecs(specs):
@@ -536,18 +673,27 @@ def mesh_step_fn(cellprog: CellProgram, mesh, *, data_axis="data",
                                for name in sched.names}
     if ef_names:
         buf_pspecs["ef"] = {name: P(dspec, model_axis) for name in ef_names}
+    if hnames:
+        buf_pspecs["hier_ef"] = {name: P(dspec, model_axis)
+                                 for name in hnames}
 
     def kernel(t, data, state, cbufs):
         data = _pvary_missing(data, cellprog.data_specs, axis_map)
         state = _pvary_missing(state, cellprog.state_specs, axis_map)
         t = pvary(t, daxes + (model_axis,))
         if staleness:
-            inner = StaleComm(sched, axis_map, sizes, tau=staleness, t=t,
+            stale_cls = OverlapComm if overlap else StaleComm
+            inner = stale_cls(sched, axis_map, sizes, tau=staleness, t=t,
                               bufs={k: b[0, 0]
                                     for k, b in cbufs["stale"].items()})
         else:
             inner = (LocalComm if comm_local else SyncComm)(
                 sched, axis_map, sizes)
+        if topo is not None:
+            inner.set_topology(topo, hier_codec,
+                               ef={k: b[0, 0]
+                                   for k, b in cbufs.get("hier_ef",
+                                                         {}).items()})
         if policy is not None:
             comm = CompressedComm(inner, policy,
                                   ef={k: b[0, 0]
@@ -564,6 +710,9 @@ def mesh_step_fn(cellprog: CellProgram, mesh, *, data_axis="data",
         if ef_names:
             cb_out["ef"] = {k: e[None, None]
                             for k, e in comm.ef_out.items()}
+        if hnames:
+            cb_out["hier_ef"] = {k: e[None, None]
+                                 for k, e in inner.hier_ef_out.items()}
         return out, cb_out
 
     return shard_map(
@@ -635,48 +784,74 @@ def comm_accounting(cellprog: CellProgram, data, state, *, sizes,
 
 
 def grid_bind_state(cellprog: CellProgram, data, state0, *, Pn: int, Qn: int,
-                    compression=None):
+                    compression=None, topology=None):
     """Engine-state plumbing shared by the grid-engine program builders.
 
     One build-time probe yields both the wire accounting and (when the
     policy carries error feedback) the zero EF residuals -- one
     ``(P, Q, *payload_shape)`` f32 buffer per stateful-codec collective,
     blocked layout, matching :func:`grid_program`'s ``ef`` operand.
-    Returns ``(full_state0, unwrap, acct)`` where ``unwrap`` recovers
-    the solver state from the full engine state (identity when
-    ``compression`` is None, so the uncompressed state layout is
-    untouched)."""
+    With a hierarchical ``topology`` the cross-pod codec's residuals
+    join the same dict under ``"pod:"``-prefixed keys (sized by the
+    payload aval: the intra-pod partial sum a cross-pod residual tracks
+    has the per-cell payload shape) and the accounting is rewritten
+    into intra/inter tiers.  Returns ``(full_state0, unwrap, acct)``
+    where ``unwrap`` recovers the solver state from the full engine
+    state (identity when no comm state is carried, so the uncompressed
+    flat state layout is untouched)."""
+    topo = _norm_topology(topology)
     sizes = {"data": Pn, "model": Qn}
     _, payloads = probe_collective_shapes(cellprog, data, state0,
                                           sizes=sizes, layout="blocked")
     acct = wire_accounting(cellprog.schedule, payloads, sizes, compression)
-    if compression is None:
+    acct = hierarchical_accounting(acct, topo, sizes)
+    if compression is None and topo is None:
         return state0, (lambda s: s), acct
-    ef0 = {name: jnp.zeros((Pn, Qn) + payloads[name].shape, jnp.float32)
-           for name in compression.stateful_names(cellprog.schedule)}
+    ef0 = {}
+    if compression is not None:
+        ef0.update({
+            name: jnp.zeros((Pn, Qn) + payloads[name].shape, jnp.float32)
+            for name in compression.stateful_names(cellprog.schedule)})
+    for name in hier_ef_names(cellprog.schedule, topo):
+        ef0[_POD_EF + name] = jnp.zeros((Pn, Qn) + payloads[name].shape,
+                                        jnp.float32)
     return (state0, ef0), (lambda s: s[0]), acct
 
 
 def mesh_program(cellprog: CellProgram, mesh, data, state0, *,
                  data_axis="data", model_axis: str = "model",
-                 staleness: int = 0, compression=None):
+                 staleness: int = 0, compression=None,
+                 overlap: bool = False, topology=None):
     """Bind a CellProgram to a mesh: returns ``(step, comm0, acct)``
     where ``step(t, data, (state, comm_state))`` is jitted, ``comm0``
     holds the zero-initialized communication state (staleness rings
-    under ``"stale"``, error-feedback residuals under ``"ef"``; ``{}``
-    when ``staleness == 0`` and no lossy codec runs, in which case the
+    under ``"stale"``, error-feedback residuals under ``"ef"``,
+    cross-pod residuals under ``"hier_ef"``; ``{}`` when
+    ``staleness == 0`` and no stateful codec runs, in which case the
     jaxpr is exactly the sync engine's), and ``acct`` is the program's
-    exact per-step wire accounting (:func:`comm_accounting`)."""
+    exact per-step wire accounting (:func:`comm_accounting`, rewritten
+    into intra/inter-pod tiers under a hierarchical ``topology``).
+
+    ``overlap=True`` (the overlap engine) runs the cells under
+    :class:`~repro.core.comm.OverlapComm` and **donates the full state**
+    to the jitted step on accelerator backends, so the staleness rings
+    are double-buffered reduction slots XLA can keep in flight across
+    steps instead of defensively copying.  Donation is skipped on CPU
+    (where it is a no-op) to keep host-side re-stepping from saved
+    states -- e.g. phase calibration -- unrestricted there; callers can
+    check ``EngineProgram.donated``."""
+    topo = _norm_topology(topology)
     daxes = as_axes(data_axis)
     sizes = {"data": axes_size(mesh, data_axis),
              "model": axes_size(mesh, model_axis)}
     policy = compression
     raw = mesh_step_fn(cellprog, mesh, data_axis=data_axis,
                        model_axis=model_axis, staleness=staleness,
-                       compression=policy)
+                       compression=policy, overlap=overlap, topology=topo)
     results, payloads = probe_collective_shapes(cellprog, data, state0,
                                                 sizes=sizes)
     acct = wire_accounting(cellprog.schedule, payloads, sizes, policy)
+    acct = hierarchical_accounting(acct, topo, sizes)
     comm0 = {}
     dspec = daxes if len(daxes) > 1 else daxes[0]
     put = _putter(mesh)
@@ -694,13 +869,29 @@ def mesh_program(cellprog: CellProgram, mesh, data, state0, *,
                                 + payloads[name].shape, jnp.float32),
                       P(dspec, model_axis))
             for name in ef_names}
+    hnames = hier_ef_names(cellprog.schedule, topo)
+    if hnames:
+        comm0["hier_ef"] = {
+            name: put(jnp.zeros((sizes["data"], sizes["model"])
+                                + payloads[name].shape, jnp.float32),
+                      P(dspec, model_axis))
+            for name in hnames}
 
-    @jax.jit
-    def step(t, data, full_state):
+    def step_fn(t, data, full_state):
         state, cbufs = full_state
         return raw(t, data, state, cbufs)
 
+    donate = bool(overlap) and staleness > 0 and overlap_donates()
+    step = jax.jit(step_fn, donate_argnums=(2,)) if donate \
+        else jax.jit(step_fn)
     return step, comm0, acct
+
+
+def overlap_donates() -> bool:
+    """Whether the overlap engine donates its state to the jitted step
+    on this backend (donation is a no-op on CPU, and skipping it there
+    keeps host-side re-stepping from saved states unrestricted)."""
+    return jax.default_backend() != "cpu"
 
 
 def mesh_local_step(cellprog: CellProgram, mesh, *, data_axis="data",

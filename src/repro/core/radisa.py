@@ -39,7 +39,8 @@ import jax.numpy as jnp
 from .comm import CommSchedule
 from .engines import (CellProgram, EngineProgram, SparseShardMapData,
                       drive_with_callback, grid_bind_state, grid_program,
-                      mesh_local_step, mesh_program, mesh_step_fn)
+                      mesh_local_step, mesh_program, mesh_step_fn,
+                      overlap_donates)
 from .local import local_svrg, local_svrg_sparse
 from .losses import Loss, get_loss
 from .partition import (DoublyPartitioned, SparseDoublyPartitioned,
@@ -163,7 +164,8 @@ def radisa_cell_program(loss: Loss, cfg: RADiSAConfig, *, n: int, n_p: int,
 def radisa_simulated_program(loss: Loss, data: DoublyPartitioned,
                              cfg: RADiSAConfig, *,
                              local_backend: str = "ref",
-                             w0=None, compression=None) -> EngineProgram:
+                             w0=None, compression=None,
+                             topology=None) -> EngineProgram:
     """Named-vmap grid engine.  State: w_blocks (Q, m_q).
 
     Requires P | m_q (pre-pad with ``partition(..., m_multiple=P*Q)``).
@@ -180,23 +182,24 @@ def radisa_simulated_program(loss: Loss, data: DoublyPartitioned,
     key0 = jax.random.PRNGKey(cfg.seed)
     x_parts = (data.cols, data.vals) if sparse else (data.x_blocks,)
     gdata = (key0, *x_parts, data.y_blocks, data.mask)
-    step = grid_program(cellprog, Pn, Qn, compression=compression)
+    step = grid_program(cellprog, Pn, Qn, compression=compression,
+                        topology=topology)
 
     w_init = (jnp.zeros((Qn, data.m_q)) if w0 is None
               else data.w_to_blocks(jnp.asarray(w0)))
     full0, unwrap, acct = grid_bind_state(cellprog, gdata, w_init,
                                           Pn=Pn, Qn=Qn,
-                                          compression=compression)
+                                          compression=compression,
+                                          topology=topology)
     local = grid_program(cellprog, Pn, Qn, comm_local=True)
-    ef_names = (compression.stateful_names(cellprog.schedule)
-                if compression is not None else ())
+    wrapped = full0 is not w_init
     return EngineProgram(
         state=full0,
         step=lambda t, s: step(t, gdata, s),
         w_of=lambda s: data.w_from_blocks(unwrap(s)),
         comm_bytes=acct,
         local_step=lambda t, s: local(t, gdata, unwrap(s)),
-        ef_of=(lambda s: s[1]) if ef_names else None)
+        ef_of=(lambda s: s[1]) if wrapped else None)
 
 
 def radisa_simulated(loss_name: str, data: DoublyPartitioned,
@@ -279,11 +282,14 @@ def make_radisa_step_sparse(loss: Loss, mesh, cfg: RADiSAConfig, *, n: int,
 def radisa_shard_map_program(loss: Loss, sdata, cfg: RADiSAConfig, *,
                              local_backend: str = "ref",
                              w0=None, staleness: int = 0,
-                             compression=None) -> EngineProgram:
+                             compression=None, overlap: bool = False,
+                             topology=None) -> EngineProgram:
     """Mesh engine.  State: (w (m_pad,) sharded over model, comm_state).
     ``sdata`` is a :class:`ShardMapData` or :class:`SparseShardMapData`;
     ``staleness=tau > 0`` selects the bounded-staleness async policy;
-    ``compression`` routes the declared collectives through codecs."""
+    ``compression`` routes the declared collectives through codecs;
+    ``overlap``/``topology`` select the overlap engine's donated ring
+    dispatch and the hierarchical pod-split reduction."""
     from .util import axes_size
     sparse = isinstance(sdata, SparseShardMapData)
     Pn = axes_size(sdata.mesh, sdata.data_axis)
@@ -298,17 +304,22 @@ def radisa_shard_map_program(loss: Loss, sdata, cfg: RADiSAConfig, *,
     step, comm0, acct = mesh_program(
         cellprog, sdata.mesh, mdata, w_init,
         data_axis=sdata.data_axis, model_axis=sdata.model_axis,
-        staleness=staleness, compression=compression)
+        staleness=staleness, compression=compression,
+        overlap=overlap, topology=topology)
     local = mesh_local_step(cellprog, sdata.mesh,
                             data_axis=sdata.data_axis,
                             model_axis=sdata.model_axis)
+    is_overlap = bool(overlap) and staleness > 0
     return EngineProgram(
         state=(w_init, comm0),
         step=lambda t, s: step(t, mdata, s),
         w_of=lambda s: s[0][: sdata.m],
         comm_bytes=acct,
         local_step=lambda t, s: local(t, mdata, s[0]),
-        ef_of=(lambda s: s[1]["ef"]) if "ef" in comm0 else None)
+        ef_of=(lambda s: s[1]["ef"]) if "ef" in comm0 else None,
+        staleness=staleness, overlap=is_overlap,
+        sync_of=(lambda s: s[0]) if is_overlap else None,
+        donated=is_overlap and overlap_donates())
 
 
 def radisa_distributed(loss_name: str, mesh, x, y, mask, cfg: RADiSAConfig,

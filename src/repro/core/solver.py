@@ -7,15 +7,22 @@ This module provides that story once:
 
   * a :class:`Solver` protocol with a registry --
     ``get_solver("d3ca" | "radisa" | "admm")`` returns the solver class;
-  * four orthogonal knobs threaded end-to-end:
-      - ``engine="simulated" | "shard_map" | "async"``  -- vmap grid on
-        one device, one block per device on a (data=P, model=Q) mesh
-        with synchronous reductions, or the same mesh execution with
-        bounded-staleness reductions (``"sync"`` is accepted as an
+  * orthogonal knobs threaded end-to-end:
+      - ``engine="simulated" | "shard_map" | "async" | "overlap"`` --
+        vmap grid on one device, one block per device on a
+        (data=P, model=Q) mesh with synchronous reductions, the same
+        mesh execution with bounded-staleness reductions, or the
+        communication-overlap engine (async consumption contract plus
+        donated in-flight reduction slots and selective host syncs so
+        the local solve overlaps the wire; ``"sync"`` is accepted as an
         alias for ``"shard_map"``);
-      - ``staleness=tau``  -- async engine only: every collective the
-        solver's CommSchedule declares is applied with delay tau
+      - ``staleness=tau``  -- async/overlap engines: every collective
+        the solver's CommSchedule declares is applied with delay tau
         (tau = 0 reproduces the sync engine bit for bit);
+      - ``topology="pods=G[:codec]"``  -- hierarchical topology-aware
+        reductions: full-precision psum within each of G pods,
+        codec-compressed (with error feedback) across pods, on both
+        the grid and mesh engines;
       - ``local_backend="ref" | "pallas"``    -- pure-jnp cell-local
         solver vs the Pallas TPU kernels (interpret mode on CPU), used
         inside the vmap grid and inside each shard_map cell alike;
@@ -28,8 +35,12 @@ This module provides that story once:
         (``"int8"``, ``"fp8"``, ``"topk:0.1"``, or per-collective
         ``"w_contrib=int8,dalpha=identity"``) with error feedback;
         ``None`` builds the exact uncompressed program, and the
-        identity codec is bit-identical to it.  Every program reports
-        exact bytes-on-wire (``SolveResult.comm_bytes`` + cumulative
+        identity codec is bit-identical to it.  ``"adaptive..."``
+        specs build a :class:`~repro.core.compress.CompressionSchedule`
+        -- staged codec switching (top-k early, int8 near convergence)
+        driven by the observed ``rel_opt`` slope, each stage a
+        warm-started program rebuild.  Every program reports exact
+        bytes-on-wire (``SolveResult.comm_bytes`` + cumulative
         ``comm_bytes`` per history entry);
   * a shared outer driver: objective / duality-gap history, early
     stopping, warm starts from a previous ``w`` / ``alpha``.
@@ -56,7 +67,8 @@ from typing import Any, Callable, Dict, List, Optional, Type
 
 from .admm import (ADMMConfig, admm_shard_map_program, admm_simulated_program,
                    make_admm_step)
-from .compress import as_policy
+from .comm_model import as_topology
+from .compress import CompressionSchedule, as_compression
 from .d3ca import (D3CAConfig, d3ca_shard_map_program, d3ca_simulated_program,
                    make_d3ca_step)
 from .engines import (EngineProgram, drive, prepare_shard_map,
@@ -68,7 +80,7 @@ from .radisa import (RADiSAConfig, make_radisa_step,
 from .reference import rel_opt
 from .util import axes_size
 
-ENGINES = ("simulated", "shard_map", "async")
+ENGINES = ("simulated", "shard_map", "async", "overlap")
 #: "sync" names today's synchronous mesh policy explicitly (the
 #: CommSchedule terminology); it is the same engine as "shard_map".
 ENGINE_ALIASES = {"sync": "shard_map"}
@@ -93,7 +105,8 @@ class SolveResult:
     local_backend: str
     block_format: str = "dense"
     staleness: int = 0
-    compression: Optional[str] = None   # canonical policy spec, or None
+    compression: Optional[str] = None   # canonical policy/schedule spec
+    topology: Optional[str] = None      # canonical topology spec, or None
     #: exact per-step wire accounting of the declared collectives (see
     #: repro.core.compress.wire_accounting); history entries carry the
     #: cumulative "comm_bytes" derived from it
@@ -130,7 +143,7 @@ class Solver:
 
     def __init__(self, engine: str = "simulated", local_backend: str = "ref",
                  block_format: str = "dense", staleness: int = 0,
-                 compression=None):
+                 compression=None, topology=None):
         engine = ENGINE_ALIASES.get(engine, engine)
         if engine not in ENGINES:
             raise ValueError(f"engine={engine!r}; expected one of {ENGINES}")
@@ -143,26 +156,44 @@ class Solver:
         staleness = int(staleness)
         if staleness < 0:
             raise ValueError(f"staleness={staleness} must be >= 0 (the "
-                             "reduction delay tau of the async engine)")
-        if staleness > 0 and engine != "async":
+                             "reduction delay tau of the async/overlap "
+                             "engines)")
+        if staleness > 0 and engine not in ("async", "overlap"):
             raise ValueError(
-                f"staleness={staleness} needs engine='async'; the "
-                f"{engine!r} engine applies every reduction synchronously. "
-                "Pass engine='async' (staleness=0 there reproduces "
+                f"staleness={staleness} needs engine='async' or "
+                f"engine='overlap'; the {engine!r} engine applies every "
+                "reduction synchronously.  Pass engine='async' or "
+                "engine='overlap' (staleness=0 on either reproduces "
                 "'shard_map' exactly).")
         self.engine = engine
         self.local_backend = local_backend
         self.block_format = block_format
         self.staleness = staleness
-        #: normalized CompressionPolicy (None = no compression machinery
-        #: at all -- the engines build the exact uncompressed program).
-        #: Validated against the solver's declared CommSchedule when the
-        #: program is built.
-        self.compression = as_policy(compression)
+        #: normalized CompressionPolicy or CompressionSchedule (None =
+        #: no compression machinery at all -- the engines build the
+        #: exact uncompressed program).  Validated against the solver's
+        #: declared CommSchedule when the program is built.
+        self.compression = as_compression(compression)
+        #: hierarchical reduction topology (None = flat reductions)
+        self.topology = as_topology(topology)
+        #: current CompressionSchedule stage (policies are per-stage)
+        self._stage = 0
 
     @property
     def compression_spec(self) -> Optional[str]:
         return self.compression.spec if self.compression is not None else None
+
+    @property
+    def active_policy(self):
+        """The CompressionPolicy the *current* program runs under: the
+        schedule's current stage, or the fixed policy, or None."""
+        if isinstance(self.compression, CompressionSchedule):
+            return self.compression.stages[self._stage]
+        return self.compression
+
+    @property
+    def topology_spec(self) -> Optional[str]:
+        return self.topology.spec if self.topology is not None else None
 
     # ---- subclass hooks ---------------------------------------------------
     def _simulated_program(self, loss, data, cfg, w0, alpha0) -> EngineProgram:
@@ -190,11 +221,15 @@ class Solver:
         cfg = cfg if cfg is not None else self.config_cls()
         w0, alpha0 = _unpack_warm_start(warm_start)
         sparse = self.block_format == "sparse"
+        topo = self.topology
+        pods = topo.pods if topo is not None else 1
         if not sparse and hasattr(X, "toarray"):
             X = X.toarray()       # CSR input under block_format="dense"
         if self.engine == "simulated":
             if P is None or Q is None:
                 raise ValueError("engine='simulated' needs P and Q")
+            if pods > 1 and P % pods:
+                raise ValueError(f"topology pods={pods} must divide P={P}")
             if sparse:
                 data = partition_sparse(X, y, P, Q, m_multiple=P * Q)
             else:
@@ -204,8 +239,20 @@ class Solver:
             if P is None or Q is None:
                 raise ValueError(f"engine={self.engine!r} needs a mesh "
                                  "or P and Q")
-            from repro.launch.mesh import make_grid_mesh
-            mesh = make_grid_mesh(P, Q)
+            from repro.launch.mesh import make_grid_mesh, make_mesh
+            if pods > 1:
+                # hierarchical reductions want the pod split as a real
+                # mesh axis: (pod=G, data=P/G, model=Q)
+                if P % pods:
+                    raise ValueError(f"topology pods={pods} must divide "
+                                     f"P={P}")
+                mesh = make_mesh((pods, P // pods, Q),
+                                 ("pod", "data", "model"))
+                data_axis = ("pod", "data")
+            else:
+                mesh = make_grid_mesh(P, Q)
+        elif pods > 1 and data_axis == "data" and "pod" in mesh.axis_names:
+            data_axis = ("pod", "data")   # pod-split mesh supplied directly
         Pn = axes_size(mesh, data_axis)
         Qn = axes_size(mesh, model_axis)
         if (P is not None and P != Pn) or (Q is not None and Q != Qn):
@@ -227,6 +274,73 @@ class Solver:
         order of preference: relative optimality vs ``f_star``; the duality
         gap (dual solvers); the relative objective change between iterates.
         ``callback(t, w, alpha)`` fires every iteration.
+
+        Under an adaptive :class:`CompressionSchedule` the solve runs as
+        a sequence of warm-started stages -- one program build per codec
+        stage, advanced when the convergence metric's log10 slope
+        flattens below the schedule's ``slope_tol`` -- and the merged
+        history tags every entry with ``stage`` and ``codec``.
+        """
+        cfg = cfg if cfg is not None else self.config_cls()
+        sched = (self.compression
+                 if isinstance(self.compression, CompressionSchedule)
+                 else None)
+        if sched is None:
+            res, _ = self._solve_stage(
+                loss_name, X, y, P=P, Q=Q, cfg=cfg, mesh=mesh,
+                warm_start=warm_start, tol=tol, f_star=f_star,
+                record_history=record_history, callback=callback,
+                tracer=tracer, registry=registry)
+            return res
+        history: List[Dict[str, float]] = []
+        warm = warm_start
+        iters_done = 0
+        time_off, bytes_off = 0.0, 0
+        res = None
+        try:
+            for si in range(len(sched.stages)):
+                remaining = cfg.outer_iters - iters_done
+                if remaining <= 0:
+                    break
+                self._stage = si
+                last = si == len(sched.stages) - 1
+                stage_cfg = dataclasses.replace(cfg, outer_iters=remaining)
+                res, advanced = self._solve_stage(
+                    loss_name, X, y, P=P, Q=Q, cfg=stage_cfg, mesh=mesh,
+                    warm_start=warm, tol=tol, f_star=f_star,
+                    record_history=record_history, callback=callback,
+                    tracer=tracer, registry=registry,
+                    advance=None if last else sched,
+                    iter_offset=iters_done, time_offset=time_off,
+                    bytes_offset=bytes_off, stage=si)
+                history.extend(res.history)
+                iters_done += res.iters
+                if res.history:
+                    time_off = res.history[-1]["time_s"]
+                    bytes_off = res.history[-1].get("comm_bytes", bytes_off)
+                warm = res
+                if res.converged or not advanced:
+                    break
+        finally:
+            self._stage = 0
+        return dataclasses.replace(res, history=history, iters=iters_done,
+                                   compression=sched.spec)
+
+    def _solve_stage(self, loss_name: str, X, y, *, P: int = None,
+                     Q: int = None, cfg=None, mesh=None, warm_start=None,
+                     tol: Optional[float] = None,
+                     f_star: Optional[float] = None,
+                     record_history: bool = True,
+                     callback: Optional[Callable] = None,
+                     tracer=None, registry=None,
+                     advance=None, iter_offset: int = 0,
+                     time_offset: float = 0.0, bytes_offset: int = 0,
+                     stage: Optional[int] = None):
+        """One program build + outer loop.  Returns ``(result,
+        advanced)`` where ``advanced`` reports an adaptive-schedule
+        stage switch (``advance.should_advance`` fired on the observed
+        convergence metric; the result is then a warm-start point, not
+        a converged solve).
 
         Telemetry (both default off; the untimed path is the exact
         legacy loop, bit-identical results):
@@ -257,6 +371,7 @@ class Solver:
         timed = tr.enabled or reg is not None
         loss = get_loss(loss_name)
         cfg = cfg if cfg is not None else self.config_cls()
+        policy = self.active_policy
         labels = {"solver": self.name, "engine": self.engine}
         with tr.span("solve", loss=loss_name, **labels):
             with tr.span("data_prep"):
@@ -266,8 +381,8 @@ class Solver:
             if timed:
                 with tr.span("calibrate"):
                     split = calibrate_phases(prog)
-                if self.compression is not None:
-                    codec_s = bench_codecs(self.compression,
+                if policy is not None:
+                    codec_s = bench_codecs(policy,
                                            prog.comm_bytes or {})
                     for cname, secs in codec_s.items():
                         if reg is not None:
@@ -278,8 +393,10 @@ class Solver:
             lam = cfg.lam
             history: List[Dict[str, float]] = []
             need_obs = (record_history or callback is not None
-                        or tol is not None)
+                        or tol is not None or advance is not None)
             prev_f = [None]
+            advanced = [False]
+            metric_vals: List[float] = []
             bytes_per_step = (prog.comm_bytes or {}).get("bytes_per_step")
             t0 = time.perf_counter()
             last_phase: Dict[str, float] = {}
@@ -291,6 +408,9 @@ class Solver:
                     att = split.attribute(step_s)
                     last_phase["local_s"] = att["local_s"]
                     last_phase["comm_s"] = att["comm_s"]
+                    for key in ("comm_exposed_s", "comm_hidden_s"):
+                        if key in att:
+                            last_phase[key] = att[key]
                     tr.record("local_solve", t_begin, att["local_s"], iter=t)
                     off = t_begin + att["local_s"]
                     for name, secs in att["collectives"].items():
@@ -303,6 +423,10 @@ class Solver:
                             last_phase["local_s"])
                         reg.histogram("solver/comm_s", **labels).observe(
                             last_phase["comm_s"])
+                        if "comm_exposed_s" in last_phase:
+                            reg.histogram("solver/comm_exposed_s",
+                                          **labels).observe(
+                                last_phase["comm_exposed_s"])
                     if bytes_per_step is not None:
                         reg.counter("solver/comm_bytes", **labels).inc(
                             bytes_per_step)
@@ -314,14 +438,19 @@ class Solver:
                 w = prog.w_of(state)
                 alpha = prog.alpha_of(state) if prog.alpha_of else None
                 f = float(loss.objective(X, y, w, lam))
-                entry = {"iter": t, "time_s": time.perf_counter() - t0,
+                entry = {"iter": t + iter_offset,
+                         "time_s": time.perf_counter() - t0 + time_offset,
                          "objective": f}
+                if stage is not None:
+                    entry["stage"] = stage
+                    entry["codec"] = policy.spec if policy is not None \
+                        else None
                 if timed:
                     entry.update(last_phase)
                 if bytes_per_step is not None:
                     # cumulative bytes-on-wire after t outer steps (every
                     # declared collective launches once per step)
-                    entry["comm_bytes"] = bytes_per_step * t
+                    entry["comm_bytes"] = bytes_offset + bytes_per_step * t
                 if alpha is not None:
                     entry["duality_gap"] = float(
                         f - loss.dual_objective(X, y, alpha, lam))
@@ -358,7 +487,7 @@ class Solver:
                 if record_history:
                     history.append(entry)
                 if callback is not None:
-                    callback(t, w, alpha)
+                    callback(t + iter_offset, w, alpha)
                 stop = False
                 if tol is not None:
                     if f_star is not None:
@@ -368,22 +497,30 @@ class Solver:
                     elif prev_f[0] is not None:
                         stop = abs(f - prev_f[0]) <= tol * max(1.0, abs(f))
                 prev_f[0] = f
+                if advance is not None and not stop:
+                    metric_vals.append(entry.get("rel_opt", f))
+                    if advance.should_advance(metric_vals):
+                        advanced[0] = True
+                        stop = True
                 return stop
 
             state, iters, stopped = drive(
                 prog, cfg.outer_iters, observe,
                 tracer=tr if tr.enabled else None,
                 on_step=on_step if timed else None)
-            return SolveResult(
+            res = SolveResult(
                 w=prog.w_of(state),
                 alpha=prog.alpha_of(state) if prog.alpha_of else None,
-                history=history, iters=iters, converged=stopped,
+                history=history, iters=iters,
+                converged=stopped and not advanced[0],
                 solver=self.name, engine=self.engine,
                 local_backend=self.local_backend,
                 block_format=self.block_format,
                 staleness=self.staleness,
-                compression=self.compression_spec,
+                compression=policy.spec if policy is not None else None,
+                topology=self.topology_spec,
                 comm_bytes=prog.comm_bytes)
+            return res, advanced[0]
 
 
 # ---------------------------------------------------------------------------
@@ -423,7 +560,8 @@ class D3CASolver(Solver):
         return d3ca_simulated_program(loss, data, cfg,
                                       local_backend=self.local_backend,
                                       w0=w0, alpha0=alpha0,
-                                      compression=self.compression)
+                                      compression=self.active_policy,
+                                      topology=self.topology)
 
     def _shard_map_program(self, loss, sdata, cfg, w0, alpha0,
                            staleness: int = 0):
@@ -431,7 +569,9 @@ class D3CASolver(Solver):
                                       local_backend=self.local_backend,
                                       w0=w0, alpha0=alpha0,
                                       staleness=staleness,
-                                      compression=self.compression)
+                                      compression=self.active_policy,
+                                      overlap=self.engine == "overlap",
+                                      topology=self.topology)
 
 
 @register_solver
@@ -444,14 +584,17 @@ class RADiSASolver(Solver):
         return radisa_simulated_program(loss, data, cfg,
                                         local_backend=self.local_backend,
                                         w0=w0,
-                                        compression=self.compression)
+                                        compression=self.active_policy,
+                                        topology=self.topology)
 
     def _shard_map_program(self, loss, sdata, cfg, w0, alpha0,
                            staleness: int = 0):
         return radisa_shard_map_program(loss, sdata, cfg,
                                         local_backend=self.local_backend,
                                         w0=w0, staleness=staleness,
-                                        compression=self.compression)
+                                        compression=self.active_policy,
+                                        overlap=self.engine == "overlap",
+                                        topology=self.topology)
 
 
 @register_solver
@@ -463,10 +606,13 @@ class ADMMSolver(Solver):
 
     def _simulated_program(self, loss, data, cfg, w0, alpha0):
         return admm_simulated_program(loss, data, cfg, w0=w0,
-                                      compression=self.compression)
+                                      compression=self.active_policy,
+                                      topology=self.topology)
 
     def _shard_map_program(self, loss, sdata, cfg, w0, alpha0,
                            staleness: int = 0):
         return admm_shard_map_program(loss, sdata, cfg, w0=w0,
                                       staleness=staleness,
-                                      compression=self.compression)
+                                      compression=self.active_policy,
+                                      overlap=self.engine == "overlap",
+                                      topology=self.topology)

@@ -36,6 +36,16 @@ dataset under any (engine, local_backend) pair:
   PYTHONPATH=src python -m repro.launch.optimize \\
       --solver radisa --compression "dw=topk:0.1,z=identity"
 
+  # communication overlap: dispatch reductions asynchronously and hide
+  # them behind tau steps of local solve (--staleness 0 is bit-identical
+  # to shard_map); --topology splits the reductions into full-precision
+  # intra-pod + codec-compressed cross-pod tiers; adaptive compression
+  # switches codec stages as convergence flattens
+  PYTHONPATH=src python -m repro.launch.optimize \\
+      --solver d3ca --mesh 4x2 --engine overlap --staleness 2 \\
+      --topology "pods=2:int8" --compression "adaptive" \\
+      --force-host-devices 8
+
 Prints one line per outer iteration (objective, duality gap when the
 solver has a dual, relative optimality when --ref-epochs > 0) and a
 final JSON summary.
@@ -63,22 +73,34 @@ def build_parser():
     ap.add_argument("--solver", default="d3ca",
                     help="d3ca | radisa | admm (see get_solver)")
     ap.add_argument("--engine", default="simulated",
-                    choices=["simulated", "shard_map", "sync", "async"],
+                    choices=["simulated", "shard_map", "sync", "async",
+                             "overlap"],
                     help="simulated = vmap grid on one device; shard_map "
                          "(alias: sync) = one block per device, synchronous "
                          "reductions; async = same mesh with "
-                         "bounded-staleness reductions (--staleness)")
+                         "bounded-staleness reductions (--staleness); "
+                         "overlap = async dispatch with donated in-flight "
+                         "reduction slots so the local solve hides the "
+                         "wire")
     ap.add_argument("--staleness", type=int, default=0, metavar="TAU",
-                    help="async engine only: apply every declared "
+                    help="async/overlap engines: apply every declared "
                          "reduction with delay TAU outer iterations "
                          "(0 = synchronous, identical to shard_map)")
     ap.add_argument("--compression", default=None, metavar="SPEC",
                     help="compress the declared collectives: a codec for "
                          "all of them ('int8', 'fp8', 'topk:0.1', "
-                         "'identity') or per-collective "
-                         "('w_contrib=int8,dalpha=identity'); codecs "
-                         "carry error feedback, and the summary reports "
-                         "exact bytes-on-wire (default: no compression)")
+                         "'identity'), per-collective "
+                         "('w_contrib=int8,dalpha=identity'), or an "
+                         "adaptive schedule "
+                         "('adaptive[:topk:0.25->int8][@slope=..]') that "
+                         "switches codec stages as convergence flattens; "
+                         "codecs carry error feedback, and the summary "
+                         "reports exact bytes-on-wire (default: no "
+                         "compression)")
+    ap.add_argument("--topology", default=None, metavar="SPEC",
+                    help="hierarchical reductions, e.g. 'pods=2:int8': "
+                         "full-precision psum within each pod, "
+                         "codec-compressed across pods (default: flat)")
     ap.add_argument("--backend", default="ref", choices=["ref", "pallas"],
                     help="cell-local solver backend")
     ap.add_argument("--block-format", default="dense",
@@ -131,11 +153,11 @@ def main(argv=None):
     if args.staleness < 0:
         ap.error(f"--staleness {args.staleness} is negative; the reduction "
                  "delay tau must be >= 0 (0 = synchronous)")
-    if args.staleness > 0 and args.engine != "async":
+    if args.staleness > 0 and args.engine not in ("async", "overlap"):
         ap.error(f"--staleness {args.staleness} only works with "
-                 f"--engine async; --engine {args.engine} applies every "
-                 "reduction synchronously (pass --engine async, or drop "
-                 "--staleness)")
+                 f"--engine async or --engine overlap; --engine "
+                 f"{args.engine} applies every reduction synchronously "
+                 "(pass --engine async/overlap, or drop --staleness)")
 
     if args.force_host_devices:
         if "jax" in sys.modules:
@@ -186,15 +208,18 @@ def main(argv=None):
     cls = get_solver(args.solver)
     solver = cls(engine=args.engine, local_backend=args.backend,
                  block_format=args.block_format, staleness=args.staleness,
-                 compression=args.compression)
+                 compression=args.compression, topology=args.topology)
     cfg_kw = {"lam": args.lam, "outer_iters": args.iters}
     if args.solver == "admm":
         cfg_kw["rho"] = args.lam
     cfg = cls.config_cls(**cfg_kw)
 
-    stale = f" staleness={args.staleness}" if args.engine == "async" else ""
+    stale = (f" staleness={args.staleness}"
+             if args.engine in ("async", "overlap") else "")
     comp = (f" compression={solver.compression_spec}"
             if solver.compression is not None else "")
+    if solver.topology is not None:
+        comp += f" topology={solver.topology_spec}"
     print(f"[optimize] {args.solver} engine={args.engine}{stale}{comp} "
           f"backend={args.backend} block_format={args.block_format} "
           f"grid={P}x{Q} "
@@ -232,9 +257,15 @@ def main(argv=None):
         loc = sum(h["local_s"] for h in phased)
         com = sum(h["comm_s"] for h in phased)
         hst = sum(h["host_s"] for h in phased)
-        print(f"[optimize] phases: local {100 * loc / tot:.1f}% / "
-              f"comm {100 * com / tot:.1f}% / host {100 * hst / tot:.1f}% "
-              f"of {tot:.3f}s measured")
+        line = (f"[optimize] phases: local {100 * loc / tot:.1f}% / "
+                f"comm {100 * com / tot:.1f}% / host "
+                f"{100 * hst / tot:.1f}% of {tot:.3f}s measured")
+        if any("comm_exposed_s" in h for h in phased):
+            exp = sum(h.get("comm_exposed_s", 0.0) for h in phased)
+            hid = sum(h.get("comm_hidden_s", 0.0) for h in phased)
+            line += (f" (comm exposed {100 * exp / tot:.1f}% / "
+                     f"hidden {100 * hid / tot:.1f}%)")
+        print(line)
 
     summary = {
         "solver": res.solver, "engine": res.engine,
@@ -247,6 +278,7 @@ def main(argv=None):
         "rel_opt": res.history[-1].get("rel_opt") if res.history else None,
         "total_s": res.history[-1]["time_s"] if res.history else None,
         "compression": res.compression,
+        "topology": res.topology,
         "comm_bytes_per_step": (res.comm_bytes or {}).get("bytes_per_step"),
         "comm_bytes_total": (res.history[-1].get("comm_bytes")
                              if res.history else None),

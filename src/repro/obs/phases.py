@@ -23,6 +23,15 @@ timed steps of each variant); :meth:`PhaseSplit.attribute` then prices
 every subsequent iteration from its measured ``step_s`` alone, so the
 steady-state tracing overhead stays at host-timer resolution.
 
+Overlap-aware attribution: programs built by the overlap engine
+(``EngineProgram.overlap`` with ``staleness = tau > 0``) consume each
+reduction tau steps after dispatch, so up to tau steps of local solve
+can hide the wire.  For those programs :meth:`PhaseSplit.attribute`
+further splits ``comm_s`` into ``comm_hidden_s`` (overlapped with the
+local solve, up to ``tau * local_s``) and ``comm_exposed_s`` (the
+remainder that extends the critical path) via
+:func:`repro.core.comm_model.overlap_split`.
+
 :func:`bench_codecs` microbenchmarks each compressed collective's
 encode/decode path on a representative payload (per-codec cost the
 fig_compress sweep reports next to the byte savings).
@@ -55,18 +64,28 @@ class PhaseSplit:
     #: calibration measurements, for provenance
     step_s: float
     local_s: float
+    #: reduction delay tau of the program (0 = synchronous)
+    staleness: int = 0
+    #: True for overlap-engine programs: comm_s further splits into
+    #: hidden (overlapped with local solve) and exposed shares
+    overlap: bool = False
 
     def attribute(self, step_s: float) -> dict:
         """Split one measured step duration into phases::
 
             {"local_s": ..., "comm_s": ...,
+             ["comm_hidden_s": ..., "comm_exposed_s": ...,]
              "collectives": {name: seconds}}
         """
         local = step_s * self.local_frac
         comm = max(step_s - local, 0.0)
-        return {"local_s": local, "comm_s": comm,
-                "collectives": {name: comm * share
-                                for name, share in self.comm_shares.items()}}
+        out = {"local_s": local, "comm_s": comm,
+               "collectives": {name: comm * share
+                               for name, share in self.comm_shares.items()}}
+        if self.overlap and self.staleness > 0:
+            from repro.core.comm_model import overlap_split
+            out.update(overlap_split(comm, local, self.staleness))
+        return out
 
 
 def calibrate_phases(prog, *, reps: int = 3) -> Optional[PhaseSplit]:
@@ -83,9 +102,22 @@ def calibrate_phases(prog, *, reps: int = 3) -> Optional[PhaseSplit]:
         return None
     state = prog.state
     import jax
-    jax.block_until_ready(prog.step(1, state))        # compile + warm
+    donated = bool(getattr(prog, "donated", False))
+    if donated:
+        # the overlap engine's jitted step donates its state operand on
+        # accelerators; re-stepping from the saved state0 would read
+        # freed buffers, so every calibration call gets its own copy
+        # (made outside the timed region)
+        import jax.numpy as jnp
+        copies = [jax.tree_util.tree_map(jnp.copy, state)
+                  for _ in range(reps + 1)]
+        pool = iter(copies)
+        jax.block_until_ready(prog.step(1, next(pool)))   # compile + warm
+        step_s = _timeit(lambda: prog.step(1, next(pool)), reps)
+    else:
+        jax.block_until_ready(prog.step(1, state))        # compile + warm
+        step_s = _timeit(lambda: prog.step(1, state), reps)
     jax.block_until_ready(local_step(1, state))
-    step_s = _timeit(lambda: prog.step(1, state), reps)
     local_s = _timeit(lambda: local_step(1, state), reps)
     local_frac = min(local_s / step_s, 1.0) if step_s > 0 else 1.0
 
@@ -100,7 +132,9 @@ def calibrate_phases(prog, *, reps: int = 3) -> Optional[PhaseSplit]:
     else:
         shares = {}
     return PhaseSplit(local_frac=local_frac, comm_shares=shares,
-                      step_s=step_s, local_s=local_s)
+                      step_s=step_s, local_s=local_s,
+                      staleness=int(getattr(prog, "staleness", 0)),
+                      overlap=bool(getattr(prog, "overlap", False)))
 
 
 def bench_codecs(policy, acct: dict, *, reps: int = 3) -> Dict[str, float]:

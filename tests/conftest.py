@@ -8,7 +8,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 def pytest_configure(config):
     # CI splits tier1 into a matrix over the engines/policies:
-    #   -m "not shard_map and not async_engine and not compression"
+    #   -m "not shard_map and not async_engine and not compression and
+    #       not overlap"
     #                       -> everything single-device (simulated split)
     #   -m shard_map        -> the subprocess suites that force a device
     #                          grid (shard_map split)
@@ -16,6 +17,8 @@ def pytest_configure(config):
     #                          suites (async split)
     #   -m compression      -> the compressed-reduction subprocess suites
     #                          (compression split)
+    #   -m overlap          -> the communication-overlap engine's
+    #                          subprocess suites (overlap split)
     config.addinivalue_line(
         "markers",
         "shard_map: exercises the shard_map engine in a subprocess with a "
@@ -34,3 +37,7 @@ def pytest_configure(config):
         "obs: telemetry-subsystem integration tests that run real solves "
         "under a tracer/registry (own CI matrix leg; the pure tracer/"
         "registry unit tests stay in the simulated split)")
+    config.addinivalue_line(
+        "markers",
+        "overlap: exercises the communication-overlap engine in a "
+        "subprocess with a forced multi-device grid (own CI matrix leg)")

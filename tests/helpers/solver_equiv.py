@@ -20,6 +20,16 @@ Three modes, selected by argv[1] (default "sync"):
     reports exactly the uncompressed bytes; compression composes with
     the async engine's staleness rings; and EF-int8 D3CA reaches the
     uncompressed duality gap within 2x the iterations.
+  * ``overlap`` -- the communication-overlap contract: for all three
+    solvers x both block formats (and the pallas backend),
+    engine="overlap" with staleness=0 is BIT-identical (diff 0.0) to
+    engine="shard_map", and at staleness=2 its trajectory equals
+    engine="async" at the same tau (overlap changes wall-clock, never
+    numerics).  Composition: overlap + int8 at tau=2 equals async +
+    int8 at tau=2 bit for bit (EF residuals ride the dispatch step);
+    wire accounting is additive (sync == async == overlap byte totals
+    for the identity wire); and a hierarchical topology run
+    (pods=2:int8) under overlap still converges.
 
 Executed as a subprocess by tests/test_solver.py / test_compress.py
 (the device count must be fixed before jax initializes).  Prints
@@ -98,6 +108,98 @@ def main_async():
     f_end = res.history[-1]["objective"]
     print(f"radisa_tau2_objective {f_end:.4f} (zero-w {f0:.4f})")
     if not f_end < f0:
+        fails += 1
+    raise SystemExit(fails)
+
+
+def main_overlap():
+    """overlap engine: tau=0 == shard_map bit for bit; tau=2 == async
+    at equal tau; codec composition; additive wire accounting."""
+    lam = 1.0
+    X, y = make_svm_data(120, 42, seed=1)
+
+    fails = 0
+
+    def check_zero(name, a, b):
+        nonlocal fails
+        d = float(jnp.abs(a - b).max())
+        print(f"{name} {d:.3e}")
+        if d != 0.0:
+            fails += 1
+
+    cases = [
+        ("d3ca", D3CAConfig(lam=lam, outer_iters=3, local_steps=12)),
+        ("radisa", RADiSAConfig(lam=lam, gamma=0.03, outer_iters=3, L=12)),
+        ("admm", ADMMConfig(lam=lam, rho=lam, outer_iters=4)),
+    ]
+    for block_format in ("dense", "sparse"):
+        for name, cfg in cases:
+            kw = dict(block_format=block_format)
+            rs = get_solver(name)(engine="shard_map", **kw).solve(
+                "hinge", X, y, P=Pn, Q=Qn, cfg=cfg, record_history=False)
+            r0 = get_solver(name)(engine="overlap", staleness=0, **kw).solve(
+                "hinge", X, y, P=Pn, Q=Qn, cfg=cfg, record_history=False)
+            check_zero(f"{name}_{block_format}_tau0_w", rs.w, r0.w)
+            if rs.alpha is not None:
+                check_zero(f"{name}_{block_format}_tau0_alpha",
+                           rs.alpha, r0.alpha)
+            ra = get_solver(name)(engine="async", staleness=2, **kw).solve(
+                "hinge", X, y, P=Pn, Q=Qn, cfg=cfg, record_history=False)
+            ro = get_solver(name)(engine="overlap", staleness=2, **kw).solve(
+                "hinge", X, y, P=Pn, Q=Qn, cfg=cfg, record_history=False)
+            check_zero(f"{name}_{block_format}_tau2_w", ra.w, ro.w)
+            # additive wire accounting: re-timing consumption never
+            # changes what goes on the wire
+            if (rs.comm_bytes["bytes_per_step"]
+                    != ro.comm_bytes["bytes_per_step"]
+                    or ra.comm_bytes["bytes_per_step"]
+                    != ro.comm_bytes["bytes_per_step"]):
+                print(f"{name}_{block_format}_bytes MISMATCH "
+                      f"sync={rs.comm_bytes['bytes_per_step']} "
+                      f"async={ra.comm_bytes['bytes_per_step']} "
+                      f"overlap={ro.comm_bytes['bytes_per_step']}")
+                fails += 1
+
+    # the pallas local backend runs inside overlap cells unchanged
+    cfg = D3CAConfig(lam=lam, outer_iters=3, local_steps=12)
+    rs = get_solver("d3ca")(engine="shard_map",
+                            local_backend="pallas").solve(
+        "hinge", X, y, P=Pn, Q=Qn, cfg=cfg, record_history=False)
+    r0 = get_solver("d3ca")(engine="overlap", staleness=0,
+                            local_backend="pallas").solve(
+        "hinge", X, y, P=Pn, Q=Qn, cfg=cfg, record_history=False)
+    check_zero("d3ca_pallas_tau0_w", rs.w, r0.w)
+
+    # codec composition: the EF residual lives with the DISPATCH step,
+    # so overlap+int8 must equal async+int8 at equal tau bit for bit
+    ra = get_solver("d3ca")(engine="async", staleness=2,
+                            compression="int8").solve(
+        "hinge", X, y, P=Pn, Q=Qn, cfg=cfg, record_history=False)
+    ro = get_solver("d3ca")(engine="overlap", staleness=2,
+                            compression="int8").solve(
+        "hinge", X, y, P=Pn, Q=Qn, cfg=cfg, record_history=False)
+    check_zero("d3ca_tau2_int8_w", ra.w, ro.w)
+
+    # hierarchical topology under overlap: pods=2, int8 across pods
+    # with error feedback -- still closes the duality gap
+    r = get_solver("d3ca")(engine="overlap", staleness=2,
+                           topology="pods=2:int8").solve(
+        "hinge", X, y, P=Pn, Q=Qn,
+        cfg=D3CAConfig(lam=lam, outer_iters=12))
+    gap = r.history[-1]["duality_gap"]
+    print(f"d3ca_overlap_tau2_hier_gap {gap:.3e}")
+    if not gap < 0.5:
+        fails += 1
+    # ...and hierarchical identity matches the flat overlap run up to
+    # f32 reassociation (the two-level psum reorders the sum)
+    rf = get_solver("d3ca")(engine="overlap", staleness=2).solve(
+        "hinge", X, y, P=Pn, Q=Qn, cfg=cfg, record_history=False)
+    rh = get_solver("d3ca")(engine="overlap", staleness=2,
+                            topology="pods=2").solve(
+        "hinge", X, y, P=Pn, Q=Qn, cfg=cfg, record_history=False)
+    d = float(jnp.abs(rf.w - rh.w).max())
+    print(f"d3ca_hier_identity_vs_flat_w {d:.3e}")
+    if not d < 1e-5:
         fails += 1
     raise SystemExit(fails)
 
@@ -264,5 +366,7 @@ if __name__ == "__main__":
         main_async()
     elif mode == "compress":
         main_compress()
+    elif mode == "overlap":
+        main_overlap()
     else:
         main()

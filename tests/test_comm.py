@@ -1,6 +1,8 @@
 """Engine API v2: CommSchedule declaration contract, collective
-execution under named-vmap grids, and the StaleComm FIFO semantics
-(value applied at t is the reduction computed at max(1, t - tau)).
+execution under named-vmap grids, the StaleComm FIFO semantics
+(value applied at t is the reduction computed at max(1, t - tau)),
+the OverlapComm executor (identical consumption contract, overlapped
+wire), and the hierarchical two-level reduction (set_topology).
 
 Everything here runs on ONE device: the grid engine uses named vmap
 axes, and the mesh/staleness tests use a 1x1 mesh (collectives become
@@ -10,7 +12,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.comm import Collective, CommSchedule, StaleComm, SyncComm
+from repro.core.comm import (Collective, CommSchedule, OverlapComm,
+                             StaleComm, SyncComm, hier_ef_names)
+from repro.core.comm_model import Topology
+from repro.core.compress import get_codec
 from repro.core.engines import CellProgram, grid_program, mesh_program
 
 
@@ -162,6 +167,164 @@ def test_stale_comm_rejects_negative_tau():
                   {"data": 1, "model": 1}, tau=-1, t=1)
 
 
+def test_stale_warmup_pins_first_reduction():
+    """Warm-up contract (see the StaleComm docstring): at t = 1 every
+    ring slot is seeded with the FIRST reduction, so steps 1..tau+1 all
+    consume step 1's value -- never zeros from initialization, never a
+    partially-filled ring."""
+    tau = 3
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    data = jnp.ones((1,))
+    step, comm0, _ = mesh_program(_delay_program(), mesh, data,
+                                  jnp.zeros((1,)), staleness=tau)
+    state = (jnp.zeros((1,)), comm0)
+    seen = []
+    for t in range(1, tau + 3):
+        state = step(t, data, state)
+        seen.append(float(state[0][0]))
+    # steps 1..tau+1 consume step 1's value; tau+2 consumes step 2's
+    assert seen[:tau + 1] == [1.0] * (tau + 1)
+    assert seen[tau + 1] == 2.0
+
+
+# ---------------------------------------------------------------------------
+# OverlapComm: same consumption contract, overlapped wire
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tau", [0, 2])
+def test_overlap_comm_matches_stale_delay(tau):
+    """The overlap engine changes wall-clock, never numerics: at every
+    tau its per-step outputs equal StaleComm's bit for bit (tau = 0 is
+    the sync engine)."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    data = jnp.ones((1,))
+    state0 = jnp.zeros((1,))
+    step_s, comm_s, _ = mesh_program(_delay_program(), mesh, data, state0,
+                                     staleness=tau)
+    step_o, comm_o, _ = mesh_program(_delay_program(), mesh, data, state0,
+                                     staleness=tau, overlap=True)
+    assert jax.tree_util.tree_structure(comm_s) \
+        == jax.tree_util.tree_structure(comm_o)
+    ss, so = (state0, comm_s), (state0, comm_o)
+    for t in range(1, 8):
+        ss, so = step_s(t, data, ss), step_o(t, data, so)
+        assert float(ss[0][0]) == float(so[0][0]), t
+
+
+def test_overlap_comm_class_contract():
+    kw = dict(tau=2, t=1)
+    oc = OverlapComm(CommSchedule(), {"data": ("d",), "model": ("m",)},
+                     {"data": 1, "model": 1}, **kw)
+    assert oc.overlap and isinstance(oc, StaleComm)
+    stale = StaleComm(CommSchedule(), {"data": ("d",), "model": ("m",)},
+                      {"data": 1, "model": 1}, **kw)
+    assert not getattr(stale, "overlap", False)
+
+
+def test_wire_bytes_additive_across_executors():
+    """Byte accounting is additive, not policy-dependent: the staleness
+    ring only re-times consumption, so sync / stale / overlap report
+    identical totals for the identity wire."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    data = jnp.ones((1,))
+    state0 = jnp.zeros((1,))
+    accts = {}
+    for label, kw in (("sync", dict(staleness=0)),
+                      ("stale", dict(staleness=2)),
+                      ("overlap", dict(staleness=2, overlap=True))):
+        _, _, acct = mesh_program(_delay_program(), mesh, data, state0, **kw)
+        accts[label] = acct
+    base = accts["sync"]
+    for label, acct in accts.items():
+        assert acct["bytes_per_step"] == base["bytes_per_step"], label
+        assert acct["bytes_per_step"] == acct["uncompressed_bytes_per_step"]
+        assert {n: c["bytes_per_step"]
+                for n, c in acct["collectives"].items()} \
+            == {n: c["bytes_per_step"]
+                for n, c in base["collectives"].items()}, label
+
+
+# ---------------------------------------------------------------------------
+# hierarchical two-level reduction (set_topology)
+# ---------------------------------------------------------------------------
+
+def _hier_run(cell, pods, per_pod, payload):
+    """Run `cell(x)` under a (pod, d) two-level named-vmap split."""
+    return jax.vmap(jax.vmap(cell, axis_name="d"),
+                    axis_name="pod")(payload.reshape(pods, per_pod))
+
+
+def test_hierarchical_psum_matches_flat():
+    """identity topology codec: intra-pod psum + cross-pod psum == the
+    flat psum over all cells (up to f32 reassociation)."""
+    sched = CommSchedule().psum("s", axis="data").pmean("m", axis="data")
+    axis_map = {"data": ("pod", "d"), "model": ()}
+    sizes = {"data": 8, "model": 1}
+    vals = jnp.arange(8.0) + 0.25
+
+    def cell(x):
+        comm = SyncComm(sched, axis_map, sizes)
+        comm.set_topology(Topology(pods=2), get_codec("identity"))
+        out = comm("s", x), comm("m", x)
+        comm.finalize()
+        return out
+
+    s, m = _hier_run(cell, 2, 4, vals)
+    np.testing.assert_allclose(np.asarray(s).ravel(),
+                               float(vals.sum()), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(m).ravel(),
+                               float(vals.mean()), rtol=1e-6)
+
+
+def test_hierarchical_stateful_codec_threads_ef():
+    """A stateful cross-pod codec consumes hier_ef_in and emits
+    hier_ef_out; a missing residual is a loud KeyError."""
+    sched = CommSchedule().psum("s", axis="data")
+    axis_map = {"data": ("pod", "d"), "model": ()}
+    sizes = {"data": 4, "model": 1}
+    codec = get_codec("int8")
+    assert codec.stateful
+    assert hier_ef_names(sched, Topology(pods=2, codec="int8")) == ("s",)
+    assert hier_ef_names(sched, Topology(pods=2)) == ()        # stateless
+    assert hier_ef_names(sched, None) == ()
+
+    def cell(x, ef):
+        comm = SyncComm(sched, axis_map, sizes)
+        comm.set_topology(Topology(pods=2, codec="int8"), codec,
+                          ef={"s": ef})
+        out = comm("s", x)
+        comm.finalize()
+        return out, comm.hier_ef_out["s"]
+
+    vals = jnp.arange(4.0)
+    out, ef_out = jax.vmap(jax.vmap(cell, axis_name="d"),
+                           axis_name="pod")(
+        vals.reshape(2, 2), jnp.zeros((2, 2)))
+    assert jnp.isfinite(out).all() and ef_out.shape == (2, 2)
+
+    def cell_no_ef(x):
+        comm = SyncComm(sched, axis_map, sizes)
+        comm.set_topology(Topology(pods=2, codec="int8"), codec)
+        return comm("s", x)
+
+    with pytest.raises(KeyError, match="error-feedback residual"):
+        jax.vmap(jax.vmap(cell_no_ef, axis_name="d"),
+                 axis_name="pod")(vals.reshape(2, 2))
+
+
+def test_hierarchical_needs_two_level_axis_split():
+    sched = CommSchedule().psum("s", axis="data")
+
+    def cell(x):
+        comm = SyncComm(sched, {"data": ("d",), "model": ()},
+                        {"data": 2, "model": 1})
+        comm.set_topology(Topology(pods=2), get_codec("identity"))
+        return comm("s", x)
+
+    with pytest.raises(ValueError, match="two-level axis split"):
+        jax.vmap(cell, axis_name="d")(jnp.ones((2,)))
+
+
 # ---------------------------------------------------------------------------
 # grid executor: dim-specs drive replication/unreplication
 # ---------------------------------------------------------------------------
@@ -198,6 +361,7 @@ def test_solver_staleness_validation():
     from repro.core import get_solver
     cls = get_solver("d3ca")
     assert cls(engine="async", staleness=3).staleness == 3
+    assert cls(engine="overlap", staleness=3).staleness == 3
     assert cls(engine="sync").engine == "shard_map"     # alias
     with pytest.raises(ValueError, match="must be >= 0"):
         cls(engine="async", staleness=-1)
@@ -205,3 +369,19 @@ def test_solver_staleness_validation():
         cls(engine="shard_map", staleness=2)
     with pytest.raises(ValueError, match="needs engine='async'"):
         cls(engine="simulated", staleness=1)
+
+
+def test_solver_topology_validation():
+    from repro.core import get_solver
+    from repro.data import make_svm_data
+    cls = get_solver("d3ca")
+    s = cls(engine="overlap", staleness=2, topology="pods=2:int8")
+    assert s.topology.pods == 2 and s.topology_spec == "pods=2:int8:ring"
+    assert cls().topology is None and cls().topology_spec is None
+    with pytest.raises(ValueError, match="spec"):
+        cls(topology="2pods")
+    # pod count must divide P at program-build time
+    X, y = make_svm_data(24, 8, seed=0)
+    bad = cls(engine="simulated", topology="pods=2")
+    with pytest.raises(ValueError, match="divide"):
+        bad.program("hinge", X, y, P=3, Q=1)

@@ -247,3 +247,17 @@ def test_async_tau0_matches_shard_map_and_tau2_converges():
                                       "solver_equiv.py"), "async"],
         env=ENV, timeout=600, capture_output=True, text=True, cwd=ROOT)
     assert r.returncode == 0, r.stdout + r.stderr
+
+
+@pytest.mark.overlap
+def test_overlap_tau0_bitidentical_and_tau2_matches_async():
+    """Communication-overlap contract: overlap(staleness=0) is
+    BIT-identical (diff 0.0) to shard_map for all solvers x block
+    formats x backends; at staleness=2 the trajectory equals the async
+    engine's; int8 composition and hierarchical topology runs hold (see
+    helpers/solver_equiv.py, mode 'overlap')."""
+    r = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "helpers",
+                                      "solver_equiv.py"), "overlap"],
+        env=ENV, timeout=600, capture_output=True, text=True, cwd=ROOT)
+    assert r.returncode == 0, r.stdout + r.stderr
