@@ -253,6 +253,11 @@ def compare(fresh: dict, baseline: dict, threshold: float,
     return failures, lines
 
 
+DEFAULT_ONLINE_BASELINE = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "baselines",
+    "BENCH_online_quick.json")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fresh", default=os.path.join(ROOT, "BENCH_core.json"))
@@ -262,6 +267,13 @@ def main(argv=None):
     ap.add_argument("--comm-threshold", type=float, default=None,
                     help="fail when a cell's normalized exposed-comm "
                          "share grows beyond this (default: --threshold)")
+    ap.add_argument("--online-fresh",
+                    default=os.path.join(ROOT, "BENCH_online.json"),
+                    help="benchmarks.online_bench --quick payload; gated "
+                         "against --online-baseline when the file exists "
+                         "(skipped with a note otherwise, so the core "
+                         "gate keeps working standalone)")
+    ap.add_argument("--online-baseline", default=DEFAULT_ONLINE_BASELINE)
     args = ap.parse_args(argv)
 
     fresh = load(args.fresh)
@@ -275,6 +287,24 @@ def main(argv=None):
           f" {baseline.get('provenance', {}).get('date', '?')})")
     for line in lines:
         print(line)
+
+    # online-service gate: same normalized-ratio machinery over the
+    # online_bench quick cells (s_per_iter = seconds per update pass)
+    if os.path.exists(args.online_fresh):
+        ofresh = load(args.online_fresh)
+        obase = load(args.online_baseline)
+        ofails, olines = compare(ofresh, obase, args.threshold,
+                                 comm_threshold=args.comm_threshold)
+        failures.extend(f"[online] {f}" for f in ofails)
+        print(f"[check_regression] online fresh={args.online_fresh} "
+              f"baseline={args.online_baseline}")
+        for line in olines:
+            print(line)
+    else:
+        print(f"[check_regression] online: no {args.online_fresh}; "
+              "skipping the online-service gate (run "
+              "benchmarks.online_bench --quick to produce it)")
+
     if failures:
         print(f"[check_regression] FAIL ({len(failures)}):",
               file=sys.stderr)

@@ -1,0 +1,165 @@
+"""Online service benchmark: staleness vs throughput under mixed load.
+
+Drives the streaming service (``repro.online``) with an interleaved
+train/score workload at several ingest rates and measures what the
+paper's batch benchmarks cannot: how stale the *served* model runs when
+updates and scoring contend, and how update throughput scales with the
+batch the admission queue coalesces.
+
+    PYTHONPATH=src python -m benchmarks.online_bench [--quick]
+
+Emits ``BENCH_online.json`` (repo root by default):
+
+  * ``cells`` -- one per (solver, engine, load level) with
+    ``s_per_iter`` (seconds per warm-started gated update pass, the
+    same field name the regression gate keys on), rows/s absorbed,
+    swap latency, and the staleness percentiles observed at score time;
+  * ``trace`` -- the staleness-vs-throughput curve: one point per load
+    level (ingest rows/s attempted vs staleness p50/p90 at the scorer);
+  * a provenance stamp (``benchmarks.common.provenance``) so
+    ``benchmarks.check_regression`` can gate the quick cells against
+    ``benchmarks/baselines/BENCH_online_quick.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if ROOT not in sys.path:
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core import D3CAConfig  # noqa: E402
+from repro.obs import Registry  # noqa: E402
+from repro.online import OnlineConfig, OnlineSolverService  # noqa: E402
+
+try:
+    from .common import provenance, save_result
+except ImportError:                     # `python benchmarks/online_bench.py`
+    from common import provenance, save_result
+
+
+def _stream(rng, b, m, w_star):
+    X = rng.normal(size=(b, m)).astype(np.float32)
+    y = np.where(X @ w_star >= 0, 1.0, -1.0).astype(np.float32)
+    return X, y
+
+
+def bench_load(*, m, capacity, P, Q, batch, rounds, passes, score_batch,
+               engine="simulated", backend="ref", seed=0):
+    """One mixed-load cell: ``rounds`` of submit -> update -> score.
+
+    Returns the cell dict.  ``s_per_iter`` is seconds per update pass
+    (median), staleness is sampled right before every score call --
+    i.e. the age of the model a request actually hits.
+    """
+    import time
+
+    rng = np.random.default_rng(seed)
+    w_star = np.linspace(-1.0, 1.0, m).astype(np.float32)
+    reg = Registry()
+    svc = OnlineSolverService(
+        OnlineConfig(m=m, capacity=capacity, P=P, Q=Q,
+                     solver_cfg=D3CAConfig(lam=1e-2), passes=passes,
+                     engine=engine, local_backend=backend,
+                     queue_capacity=0),
+        registry=reg)
+    # warm the jit cache so compile time doesn't pollute the cells
+    svc.submit(*_stream(rng, batch, m, w_star))
+    svc.run_pending()
+    svc.score(_stream(rng, score_batch, m, w_star)[0])
+
+    update_s, stale_s = [], []
+    t_start = time.perf_counter()
+    for _ in range(rounds):
+        svc.submit(*_stream(rng, batch, m, w_star))
+        t0 = time.perf_counter()
+        svc.run_pending()
+        update_s.append(time.perf_counter() - t0)
+        stale_s.append(svc.staleness_s)     # age the next request sees
+        svc.score(_stream(rng, score_batch, m, w_star)[0])
+    wall = time.perf_counter() - t_start
+
+    snap = reg.snapshot()
+    swap = next((h for k, h in snap["histograms"].items()
+                 if k.startswith("online/swap_s")), {})
+    u = np.asarray(update_s)
+    st = np.asarray(stale_s)
+    return {
+        "s_per_iter": float(np.median(u)),
+        "update_p90_s": float(np.percentile(u, 90)),
+        "rows_per_update": batch,
+        "train_rows_per_s": float(batch * rounds / u.sum()),
+        "ingest_rows_per_s_attempted": float(batch * rounds / wall),
+        "staleness_p50_s": float(np.percentile(st, 50)),
+        "staleness_p90_s": float(np.percentile(st, 90)),
+        "swap_p50_s": float(swap.get("p50", 0.0)),
+        "score_rows_per_s": float(svc.scorer.rows_per_sec),
+        "version": int(svc.book.current().version),
+        "version_lag": int(svc.version_lag),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small instance + fewer rounds (the CI gate "
+                         "compares quick runs only)")
+    ap.add_argument("--out", default=os.path.join(ROOT,
+                                                  "BENCH_online.json"))
+    ap.add_argument("--engine", default="simulated",
+                    choices=["simulated", "shard_map"])
+    ap.add_argument("--backend", default="ref", choices=["ref", "pallas"])
+    args = ap.parse_args(argv)
+
+    if args.quick:
+        m, capacity, rounds, passes, score_batch = 24, 96, 4, 1, 64
+        loads = [8, 24]
+    else:
+        m, capacity, rounds, passes, score_batch = 64, 512, 10, 2, 256
+        loads = [8, 32, 128]
+    P, Q = 2, 2
+
+    cells, trace = {}, []
+    for batch in loads:
+        key = f"d3ca/{args.engine}/{args.backend}/batch{batch}"
+        cell = bench_load(m=m, capacity=capacity, P=P, Q=Q, batch=batch,
+                          rounds=rounds, passes=passes,
+                          score_batch=score_batch, engine=args.engine,
+                          backend=args.backend)
+        cells[key] = cell
+        trace.append({
+            "load_rows_per_round": batch,
+            "ingest_rows_per_s": cell["ingest_rows_per_s_attempted"],
+            "train_rows_per_s": cell["train_rows_per_s"],
+            "staleness_p50_s": cell["staleness_p50_s"],
+            "staleness_p90_s": cell["staleness_p90_s"],
+        })
+        print(f"{key}: {cell['s_per_iter'] * 1e3:.1f} ms/update, "
+              f"{cell['train_rows_per_s']:.0f} rows/s trained, "
+              f"staleness p50 {cell['staleness_p50_s'] * 1e3:.1f} ms "
+              f"p90 {cell['staleness_p90_s'] * 1e3:.1f} ms")
+
+    out = {
+        "m": m, "capacity": capacity, "P": P, "Q": Q,
+        "rounds": rounds, "passes": passes, "score_batch": score_batch,
+        "note": "s_per_iter = seconds per warm-started gated update "
+                "pass; staleness sampled at score time under the "
+                "interleaved train/score load",
+        "provenance": provenance(args.quick),
+        "cells": cells,
+        "trace": trace,
+    }
+    with open(args.out, "w") as fh:
+        json.dump(out, fh, indent=1)
+    save_result("BENCH_online", out)
+    print(f"wrote {args.out}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

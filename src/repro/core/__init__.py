@@ -18,6 +18,7 @@ from .partition import (DoublyPartitioned, SparseDoublyPartitioned,
 from .radisa import (RADiSAConfig, make_radisa_step, make_radisa_step_sparse,
                      radisa_distributed, radisa_simulated)
 from .reference import duality_gap, objective, rel_opt, serial_sdca
+from .sfk import SFKConfig, make_sfk_step, sfk_simulated
 from .solver import (BLOCK_FORMATS, ENGINES, LOCAL_BACKENDS, SolveResult,
                      Solver, available_solvers, get_solver, register_solver)
 
@@ -41,6 +42,7 @@ __all__ = [
     "RADiSAConfig", "make_radisa_step", "make_radisa_step_sparse",
     "radisa_distributed", "radisa_simulated",
     "duality_gap", "objective", "rel_opt", "serial_sdca",
+    "SFKConfig", "make_sfk_step", "sfk_simulated",
     "BLOCK_FORMATS", "ENGINES", "LOCAL_BACKENDS", "SolveResult", "Solver",
     "available_solvers", "get_solver", "register_solver",
 ]

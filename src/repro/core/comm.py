@@ -119,6 +119,7 @@ class CommSchedule:
 
     @property
     def names(self) -> Tuple[str, ...]:
+        """The declared collective names, in declaration order."""
         return tuple(self._points)
 
 
@@ -148,6 +149,23 @@ class Comm:
 
     # -- cell-facing API -----------------------------------------------------
     def __call__(self, name: str, value):
+        """Execute the declared collective ``name`` on ``value``.
+
+        Args:
+          name: a collective declared in this executor's CommSchedule.
+          value: the cell's per-step payload (any array).
+
+        Returns:
+          The reduction result under this executor's policy --
+          psum/pmean keep the payload shape, allgather prepends the
+          axis extent; staleness executors may return a prior step's
+          reduction.
+
+        Raises:
+          KeyError: when ``name`` was never declared in the schedule.
+          ValueError: when the cell executes the same point twice in
+            one outer step.
+        """
         point = self.schedule[name]
         if name in self._executed:
             raise ValueError(f"reduction {name!r} executed twice in one "

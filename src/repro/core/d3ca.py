@@ -60,12 +60,22 @@ def d3ca_schedule() -> CommSchedule:
 
 def d3ca_cell_program(loss: Loss, cfg: D3CAConfig, *, n: int, n_p: int,
                       m_q: Optional[int] = None, sparse: bool = False,
-                      local_backend: str = "ref") -> CellProgram:
+                      local_backend: str = "ref",
+                      gated: bool = False) -> CellProgram:
     """The ONE D3CA program every engine executes.
 
-    Per-cell data: ``(key0, x_b[, vals_b], y_b, mask_b)`` -- an
+    Per-cell data: ``(key0, x_b[, vals_b], y_b, mask_b[, gate_b])`` -- an
     (n_p, m_q) dense block or an (n_p, k) padded-ELL cols/vals pair.
     Per-cell state: ``(alpha_b (n_p,), w_b (m_q,))``.
+
+    ``gated=True`` appends a per-row activity gate ``gate_b (n_p,)`` to
+    the data tuple: the local SDCA epoch masks its coordinate updates by
+    ``mask_b * gate_b``, so rows gated off never move their dual, while
+    the step-9 primal-dual map still sums EVERY row's alpha (the model
+    stays exact for the whole dataset).  A gate of all ones is
+    bit-identical to the ungated program.  This is the incremental
+    online-update path: warm-started passes touch only the cells whose
+    row partition received new observations.
     """
     lam = cfg.lam
     steps = cfg.local_steps or n_p
@@ -74,13 +84,14 @@ def d3ca_cell_program(loss: Loss, cfg: D3CAConfig, *, n: int, n_p: int,
 
     def cell(comm, t, data, state):
         if sparse:
-            key0, cols_b, vals_b, y_b, mask_b = data
+            key0, cols_b, vals_b, y_b, mask_b, *rest = data
             x_parts = (cols_b, vals_b)
             local = local_sdca_sparse
         else:
-            key0, x_b, y_b, mask_b = data
+            key0, x_b, y_b, mask_b, *rest = data
             x_parts = (x_b,)
             local = local_sdca
+        step_mask = mask_b * rest[0] if gated else mask_b
         a_b, w_b = state
         Pn = comm.axis_size("data")
         Qn = comm.axis_size("model")
@@ -88,7 +99,7 @@ def d3ca_cell_program(loss: Loss, cfg: D3CAConfig, *, n: int, n_p: int,
         key_t = jax.random.fold_in(key0, t)
         p = comm.axis_index("data")
         key_p = jax.random.fold_in(key_t, p)   # coordinate order per p
-        dalpha = local(loss, *x_parts, y_b, mask_b, a_b, w_b,
+        dalpha = local(loss, *x_parts, y_b, step_mask, a_b, w_b,
                        lam=lam, n=n, Q=Qn, steps=steps, key=key_p,
                        step_mode=cfg.step_mode, beta=beta,
                        backend=local_backend)
@@ -103,7 +114,8 @@ def d3ca_cell_program(loss: Loss, cfg: D3CAConfig, *, n: int, n_p: int,
 
     x_specs = ((("data", "model"), ("data", "model")) if sparse
                else (("data", "model"),))
-    data_specs = ((),) + x_specs + (("data",), ("data",))
+    gate_specs = ((("data",),) if gated else ())
+    data_specs = ((),) + x_specs + (("data",), ("data",)) + gate_specs
     state_specs = (("data",), ("model",))
     return CellProgram(d3ca_schedule(), cell, data_specs, state_specs)
 
@@ -115,22 +127,29 @@ def d3ca_cell_program(loss: Loss, cfg: D3CAConfig, *, n: int, n_p: int,
 def d3ca_simulated_program(loss: Loss, data: DoublyPartitioned,
                            cfg: D3CAConfig, *, local_backend: str = "ref",
                            w0=None, alpha0=None,
-                           compression=None, topology=None) -> EngineProgram:
+                           compression=None, topology=None,
+                           row_gate=None) -> EngineProgram:
     """Named-vmap grid engine.  State: (alpha (P, n_p), w_blocks (Q, m_q)).
 
     ``data`` may be a dense :class:`DoublyPartitioned` or a sparse
     :class:`SparseDoublyPartitioned` (padded-ELL cells); the cell
     program is the same one the mesh engines run.  ``compression`` (a
     CompressionPolicy) routes both collectives through their codecs and
-    adds the error-feedback residuals to the engine state."""
+    adds the error-feedback residuals to the engine state.
+    ``row_gate`` ((n,) of 0/1) builds the gated incremental program:
+    dual updates are restricted to gated-on rows (see
+    :func:`d3ca_cell_program`)."""
     sparse = isinstance(data, SparseDoublyPartitioned)
     Pn, Qn = data.P, data.Q
     cellprog = d3ca_cell_program(loss, cfg, n=data.n, n_p=data.n_p,
                                  m_q=data.m_q, sparse=sparse,
-                                 local_backend=local_backend)
+                                 local_backend=local_backend,
+                                 gated=row_gate is not None)
     key0 = jax.random.PRNGKey(cfg.seed)
     x_parts = (data.cols, data.vals) if sparse else (data.x_blocks,)
-    gdata = (key0, *x_parts, data.y_blocks, data.mask)
+    gate_parts = (() if row_gate is None
+                  else (data.alpha_to_blocks(jnp.asarray(row_gate)),))
+    gdata = (key0, *x_parts, data.y_blocks, data.mask, *gate_parts)
     step = grid_program(cellprog, Pn, Qn, compression=compression,
                         topology=topology)
 
@@ -219,7 +238,7 @@ def d3ca_shard_map_program(loss: Loss, sdata, cfg: D3CAConfig,
                            *, local_backend: str = "ref",
                            w0=None, alpha0=None, staleness: int = 0,
                            compression=None, overlap: bool = False,
-                           topology=None) -> EngineProgram:
+                           topology=None, row_gate=None) -> EngineProgram:
     """Mesh engine.  State: ((alpha (n_pad,), w (m_pad,)), comm_state),
     all sharded (comm_state carries staleness rings and/or EF
     residuals).  ``sdata`` is a :class:`ShardMapData` or
@@ -228,15 +247,19 @@ def d3ca_shard_map_program(loss: Loss, sdata, cfg: D3CAConfig,
     ``compression`` routes both collectives through their codecs;
     ``overlap=True`` dispatches reductions into donated ring slots and
     awaits them tau steps later (the overlap engine); ``topology``
-    enables the hierarchical two-level reduction (pod-split mesh)."""
+    enables the hierarchical two-level reduction (pod-split mesh);
+    ``row_gate`` ((n,) of 0/1) builds the gated incremental program
+    (see :func:`d3ca_cell_program`)."""
     sparse = isinstance(sdata, SparseShardMapData)
     cellprog = d3ca_cell_program(
         loss, cfg, n=sdata.n, n_p=sdata.n_p,
         m_q=sdata.m_q if sparse else None, sparse=sparse,
-        local_backend=local_backend)
+        local_backend=local_backend, gated=row_gate is not None)
     key0 = jax.random.PRNGKey(cfg.seed)
     x_parts = (sdata.cols, sdata.vals) if sparse else (sdata.x,)
-    mdata = (key0, *x_parts, sdata.y, sdata.mask)
+    gate_parts = (() if row_gate is None
+                  else (sdata.pad_alpha(jnp.asarray(row_gate)),))
+    mdata = (key0, *x_parts, sdata.y, sdata.mask, *gate_parts)
     alpha_init = (sdata.zeros_data() if alpha0 is None
                   else sdata.pad_alpha(alpha0))
     w_init = sdata.zeros_model() if w0 is None else sdata.pad_w(w0)

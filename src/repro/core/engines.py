@@ -59,12 +59,28 @@ from .util import as_axes, axes_size, pvary, shard_map
 
 @dataclasses.dataclass
 class EngineProgram:
-    """One algorithm bound to one engine: state + step + extractors."""
+    """One algorithm bound to one engine: state + step + extractors.
 
-    state: Any                                    # initial state pytree
-    step: Callable[[int, Any], Any]               # (t, state) -> state
-    w_of: Callable[[Any], jnp.ndarray]            # state -> global w (m,)
-    alpha_of: Optional[Callable[[Any], jnp.ndarray]] = None  # -> alpha (n,)
+    The uniform handle ``Solver.program`` returns and ``drive`` runs.
+
+    Attributes:
+      state: the initial engine-state pytree (blocked iterates plus any
+        communication state -- staleness rings, EF residuals).
+      step: jitted ``(t, state) -> state`` advancing one outer
+        iteration; ``t`` is the 1-based iteration counter.
+      w_of: ``state -> (m,)`` -- the assembled global primal iterate
+        (trimmed of any grid padding).
+      alpha_of: ``state -> (n,)`` global dual, or None for primal-only
+        solvers.
+
+    The remaining fields are engine metadata the driver and telemetry
+    key off (documented inline below).
+    """
+
+    state: Any
+    step: Callable[[int, Any], Any]
+    w_of: Callable[[Any], jnp.ndarray]
+    alpha_of: Optional[Callable[[Any], jnp.ndarray]] = None
     #: exact per-step wire accounting of the program's declared
     #: collectives (see ``repro.core.compress.wire_accounting``); None
     #: for programs built outside the generic executors

@@ -1,0 +1,290 @@
+"""SFK -- the stochastic Fang--Klabjan scheme (arXiv 1803.11287).
+
+Fang & Klabjan's follow-up to the source paper targets the streaming
+regime: observations keep arriving, so a full anchor-gradient pass over
+every row per outer iteration (RADiSA) is wasted work.  Their sampling
+scheme keeps the doubly distributed P x Q layout but makes the outer
+iteration *stochastic in the observations*: every round, each row
+partition draws a uniform random subset of its local rows, the anchor
+gradient becomes an unbiased minibatch estimate over just that subset,
+and the local variance-reduced inner loop only moves on sampled rows.
+
+Per outer iteration t, each cell (p, q):
+
+  1. draws the row subsample ``S_p(t)`` (Bernoulli ``sample_frac``;
+     the PRNG key is folded by (t, p) only, so all Q feature blocks of
+     one row partition agree on the subset -- the same trick D3CA uses
+     for its coordinate order);
+  2. anchor inner products ``z = psum_q x_b @ w_b`` (every row, exact:
+     margins are cheap, gradients are not);
+  3. minibatch anchor gradient ``mu = psum_p g(z)|_S @ x_b / (n * s)``
+     -- dividing by the *expected* sample count ``n * sample_frac``
+     keeps the estimate unbiased and engine-independent;
+  4. L local SVRG-style steps on a randomly assigned disjoint feature
+     sub-block (shared permutation, exactly RADiSA's recombination),
+     with the row mask restricted to ``S_p(t)``: unsampled rows
+     contribute only the anchor-drift term, sampled rows the full
+     variance-reduced correction;
+  5. disjoint sub-block deltas are concatenated by ``psum_p``.
+
+The whole scheme is ONE :class:`~repro.core.engines.CellProgram` with
+the same CommSchedule shape as RADiSA::
+
+    CommSchedule().psum("z", axis="model")
+                  .psum("grad", axis="data")
+                  .psum("dw", axis="data")
+
+so every engine (simulated / shard_map / async / overlap), both local
+backends (the SVRG Pallas kernel runs unchanged -- sampling only edits
+the row mask) and both block formats execute it via the generic
+executors, and the full equivalence grid of the other three solvers
+applies verbatim.
+
+Approximation note: PAPERS.md carries only the title/abstract of
+arXiv 1803.11287, so this module implements the *scheme* -- per-round
+uniform observation subsampling feeding a variance-reduced doubly
+distributed update -- not a line-by-line transcription of their
+pseudocode.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .comm import CommSchedule
+from .engines import (CellProgram, EngineProgram, SparseShardMapData,
+                      drive_with_callback, grid_bind_state, grid_program,
+                      mesh_local_step, mesh_program, mesh_step_fn,
+                      overlap_donates)
+from .local import local_svrg, local_svrg_sparse
+from .losses import Loss, get_loss
+from .partition import (DoublyPartitioned, SparseDoublyPartitioned,
+                        ell_gather, ell_scatter_add)
+from .radisa import _check_subblocks
+
+
+@dataclasses.dataclass(frozen=True)
+class SFKConfig:
+    """Knobs of the stochastic Fang--Klabjan solver.
+
+    Attributes:
+      lam: global L2 regularization strength.
+      L: inner SVRG steps per outer iteration (default: n_p).
+      gamma: step-size constant; eta_t = gamma / (1 + sqrt(t - 1)).
+      sample_frac: per-round Bernoulli row-sampling probability in
+        (0, 1]; 1.0 degenerates to a full-gradient RADiSA-style round.
+      outer_iters: outer iterations T.
+      seed: PRNG seed (drives sampling, sub-block permutation and the
+        inner-loop row draws identically under every engine).
+    """
+    lam: float = 1e-3
+    L: int | None = None
+    gamma: float = 1.0
+    sample_frac: float = 0.5
+    outer_iters: int = 20
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 < self.sample_frac <= 1.0:
+            raise ValueError(f"sample_frac={self.sample_frac} must be in "
+                             "(0, 1]")
+
+    def eta(self, t):
+        return self.gamma / (1.0 + jnp.sqrt(jnp.maximum(t - 1.0, 0.0)))
+
+
+def sfk_schedule() -> CommSchedule:
+    """SFK's three reduction points (same shape as RADiSA's: the
+    sampling scheme changes what feeds the wire, not the wire)."""
+    return (CommSchedule()
+            .psum("z", axis="model")
+            .psum("grad", axis="data")
+            .psum("dw", axis="data"))
+
+
+def sfk_cell_program(loss: Loss, cfg: SFKConfig, *, n: int, n_p: int,
+                     m_q: int, sparse: bool = False,
+                     local_backend: str = "ref") -> CellProgram:
+    """The ONE SFK program every engine executes.
+
+    Per-cell data: ``(key0, x_b[, vals_b], y_b, mask_b)``; per-cell
+    state: ``w_b (m_q,)``.  Requires P | m_q (the unified Solver API
+    pads the feature dimension to a multiple of P*Q).
+    """
+    lam = cfg.lam
+    L = cfg.L or n_p
+
+    def cell(comm, t, data, state):
+        if sparse:
+            key0, cols_b, vals_b, y_b, mask_b = data
+            x_parts = (cols_b, vals_b)
+            local = local_svrg_sparse
+        else:
+            key0, x_b, y_b, mask_b = data
+            x_parts = (x_b,)
+            local = local_svrg
+        w_b = state
+        Pn = comm.axis_size("data")
+        Qn = comm.axis_size("model")
+        m_sub = m_q // Pn
+        eta = cfg.eta(t)
+        key_t = jax.random.fold_in(key0, t)
+        p = comm.axis_index("data")
+        q = comm.axis_index("model")
+        # (1) row subsample S_p(t): folded by (t, p) ONLY, so every
+        # feature block of partition p draws the same subset
+        key_s = jax.random.fold_in(jax.random.fold_in(key_t, 2), p)
+        smask = mask_b * (jax.random.uniform(key_s, mask_b.shape)
+                          < cfg.sample_frac).astype(mask_b.dtype)
+        # (2) anchor inner products (exact, every row)
+        z_local = (ell_gather(w_b, cols_b, vals_b) if sparse
+                   else x_b @ w_b)
+        z = comm("z", z_local)                               # (n_p,)
+        # (3) unbiased minibatch anchor gradient over the sample
+        gz = loss.grad(z, y_b) * smask
+        gcol = (ell_scatter_add(m_q, cols_b, vals_b, gz) if sparse
+                else gz @ x_b)
+        mu = comm("grad", gcol) / (n * cfg.sample_frac) + lam * w_b
+        # (4) disjoint sub-block assignment + local inner loop on S_p(t)
+        perm = jax.random.permutation(jax.random.fold_in(key_t, 0), Pn)
+        key_pq = jax.random.fold_in(jax.random.fold_in(key_t, 1),
+                                    p * Qn + q)
+        lo = perm[p] * m_sub
+        w_anchor = jax.lax.dynamic_slice(w_b, (lo,), (m_sub,))
+        mu_sub = jax.lax.dynamic_slice(mu, (lo,), (m_sub,))
+        w_new = local(loss, *x_parts, y_b, smask, z, w_anchor, mu_sub,
+                      lam=lam, L=L, eta=eta, key=key_pq, lo=lo,
+                      backend=local_backend)
+        # (5) concatenate disjoint sub-block deltas
+        delta = jnp.zeros_like(w_b)
+        delta = jax.lax.dynamic_update_slice(delta, w_new - w_anchor, (lo,))
+        return w_b + comm("dw", delta)
+
+    x_specs = ((("data", "model"), ("data", "model")) if sparse
+               else (("data", "model"),))
+    data_specs = ((),) + x_specs + (("data",), ("data",))
+    state_specs = ("model",)
+    return CellProgram(sfk_schedule(), cell, data_specs, state_specs)
+
+
+# ----------------------------------------------------------------------------
+# simulated grid engine
+# ----------------------------------------------------------------------------
+
+def sfk_simulated_program(loss: Loss, data: DoublyPartitioned,
+                          cfg: SFKConfig, *, local_backend: str = "ref",
+                          w0=None, compression=None,
+                          topology=None) -> EngineProgram:
+    """Named-vmap grid engine.  State: w_blocks (Q, m_q).
+
+    Requires P | m_q (pre-pad with ``partition(..., m_multiple=P*Q)``);
+    ``data`` may be dense or sparse (padded-ELL cells); ``compression``
+    routes the three declared collectives through their policy codecs.
+    """
+    sparse = isinstance(data, SparseDoublyPartitioned)
+    Pn, Qn = data.P, data.Q
+    _check_subblocks(data.m_q, Pn, False)
+    cellprog = sfk_cell_program(loss, cfg, n=data.n, n_p=data.n_p,
+                                m_q=data.m_q, sparse=sparse,
+                                local_backend=local_backend)
+    key0 = jax.random.PRNGKey(cfg.seed)
+    x_parts = (data.cols, data.vals) if sparse else (data.x_blocks,)
+    gdata = (key0, *x_parts, data.y_blocks, data.mask)
+    step = grid_program(cellprog, Pn, Qn, compression=compression,
+                        topology=topology)
+
+    w_init = (jnp.zeros((Qn, data.m_q)) if w0 is None
+              else data.w_to_blocks(jnp.asarray(w0)))
+    full0, unwrap, acct = grid_bind_state(cellprog, gdata, w_init,
+                                          Pn=Pn, Qn=Qn,
+                                          compression=compression,
+                                          topology=topology)
+    local = grid_program(cellprog, Pn, Qn, comm_local=True)
+    wrapped = full0 is not w_init
+    return EngineProgram(
+        state=full0,
+        step=lambda t, s: step(t, gdata, s),
+        w_of=lambda s: data.w_from_blocks(unwrap(s)),
+        comm_bytes=acct,
+        local_step=lambda t, s: local(t, gdata, unwrap(s)),
+        ef_of=(lambda s: s[1]) if wrapped else None)
+
+
+def sfk_simulated(loss_name: str, data: DoublyPartitioned, cfg: SFKConfig,
+                  callback=None, local_backend: str = "ref"):
+    """Convenience driver for the grid engine.  Returns the final w."""
+    prog = sfk_simulated_program(get_loss(loss_name), data, cfg,
+                                 local_backend=local_backend)
+    state = drive_with_callback(prog, cfg.outer_iters, callback)
+    return prog.w_of(state)
+
+
+# ----------------------------------------------------------------------------
+# mesh engines (shard_map sync + bounded-staleness async + overlap)
+# ----------------------------------------------------------------------------
+
+def make_sfk_step(loss: Loss, mesh, cfg: SFKConfig, *, n: int, n_p: int,
+                  m_q: int, data_axis: str = "data",
+                  model_axis: str = "model", local_backend: str = "ref"):
+    """Build the jitted distributed SFK outer step (sync reductions).
+
+    Layouts: x (n, m) sharded (data, model); y/mask (n,) (data,);
+    w (m,) (model,) replicated over data.
+    """
+    from .util import axes_size
+    Pn = axes_size(mesh, data_axis)
+    _check_subblocks(m_q, Pn, False)
+    cellprog = sfk_cell_program(loss, cfg, n=n, n_p=n_p, m_q=m_q,
+                                local_backend=local_backend)
+    run = mesh_step_fn(cellprog, mesh, data_axis=data_axis,
+                       model_axis=model_axis)
+
+    def step(t, key0, x, y, mask, w):
+        w_new, _ = run(t, (key0, x, y, mask), w, {})
+        return w_new
+
+    return jax.jit(step)
+
+
+def sfk_shard_map_program(loss: Loss, sdata, cfg: SFKConfig, *,
+                          local_backend: str = "ref", w0=None,
+                          staleness: int = 0, compression=None,
+                          overlap: bool = False,
+                          topology=None) -> EngineProgram:
+    """Mesh engine.  State: (w (m_pad,) sharded over model, comm_state).
+    ``staleness=tau > 0`` selects the bounded-staleness async policy;
+    ``overlap``/``topology`` select donated-ring dispatch and the
+    hierarchical pod-split reduction -- identical contracts to the
+    other three solvers."""
+    from .util import axes_size
+    sparse = isinstance(sdata, SparseShardMapData)
+    Pn = axes_size(sdata.mesh, sdata.data_axis)
+    _check_subblocks(sdata.m_q, Pn, False)
+    cellprog = sfk_cell_program(
+        loss, cfg, n=sdata.n, n_p=sdata.n_p, m_q=sdata.m_q, sparse=sparse,
+        local_backend=local_backend)
+    key0 = jax.random.PRNGKey(cfg.seed)
+    x_parts = (sdata.cols, sdata.vals) if sparse else (sdata.x,)
+    mdata = (key0, *x_parts, sdata.y, sdata.mask)
+    w_init = sdata.zeros_model() if w0 is None else sdata.pad_w(w0)
+    step, comm0, acct = mesh_program(
+        cellprog, sdata.mesh, mdata, w_init,
+        data_axis=sdata.data_axis, model_axis=sdata.model_axis,
+        staleness=staleness, compression=compression,
+        overlap=overlap, topology=topology)
+    local = mesh_local_step(cellprog, sdata.mesh,
+                            data_axis=sdata.data_axis,
+                            model_axis=sdata.model_axis)
+    is_overlap = bool(overlap) and staleness > 0
+    return EngineProgram(
+        state=(w_init, comm0),
+        step=lambda t, s: step(t, mdata, s),
+        w_of=lambda s: s[0][: sdata.m],
+        comm_bytes=acct,
+        local_step=lambda t, s: local(t, mdata, s[0]),
+        ef_of=(lambda s: s[1]["ef"]) if "ef" in comm0 else None,
+        staleness=staleness, overlap=is_overlap,
+        sync_of=(lambda s: s[0]) if is_overlap else None,
+        donated=is_overlap and overlap_donates())

@@ -1,12 +1,14 @@
-"""Unified solver framework: one API over D3CA / RADiSA / ADMM.
+"""Unified solver framework: one API over D3CA / RADiSA / SFK / ADMM.
 
-The paper's three doubly distributed optimizers share one P x Q execution
+The paper's three doubly distributed optimizers -- plus the stochastic
+Fang--Klabjan scheme of the follow-up paper -- share one P x Q execution
 story (the way CoCoA frames local solvers as pluggable subproblems and
 SCOPE separates the outer cooperative loop from the local computation).
 This module provides that story once:
 
   * a :class:`Solver` protocol with a registry --
-    ``get_solver("d3ca" | "radisa" | "admm")`` returns the solver class;
+    ``get_solver("d3ca" | "radisa" | "sfk" | "admm")`` returns the
+    solver class;
   * orthogonal knobs threaded end-to-end:
       - ``engine="simulated" | "shard_map" | "async" | "overlap"`` --
         vmap grid on one device, one block per device on a
@@ -78,6 +80,8 @@ from .partition import partition, partition_sparse
 from .radisa import (RADiSAConfig, make_radisa_step,
                      radisa_shard_map_program, radisa_simulated_program)
 from .reference import rel_opt
+from .sfk import (SFKConfig, make_sfk_step, sfk_shard_map_program,
+                  sfk_simulated_program)
 from .util import axes_size
 
 ENGINES = ("simulated", "shard_map", "async", "overlap")
@@ -140,6 +144,9 @@ class Solver:
     #: ADMM's inner solve is a cached Cholesky; it accepts the knob but
     #: has no kernel to dispatch to.
     uses_local_backend: bool = True
+    #: True when the solver's cell program accepts a per-row activity
+    #: gate (the incremental online-update path; D3CA only).
+    supports_row_gate: bool = False
 
     def __init__(self, engine: str = "simulated", local_backend: str = "ref",
                  block_format: str = "dense", staleness: int = 0,
@@ -206,7 +213,8 @@ class Solver:
     # ---- program construction --------------------------------------------
     def program(self, loss_name: str, X, y, *, P: int = None, Q: int = None,
                 cfg=None, mesh=None, warm_start=None,
-                data_axis="data", model_axis: str = "model") -> EngineProgram:
+                data_axis="data", model_axis: str = "model",
+                row_gate=None) -> EngineProgram:
         """Bind the solver to data under the configured engine/backend.
 
         Pads the feature dimension to a multiple of P*Q (identically for
@@ -216,9 +224,38 @@ class Solver:
         :class:`~repro.data.sparse.CSRMatrix` ``X`` and never
         materializes the dense matrix; dense ``X`` is converted cell by
         cell.  ``block_format="dense"`` densifies a CSR input.
+
+        Args:
+          loss_name: a key of :data:`repro.core.losses.LOSSES`.
+          X, y: the (n, m) training matrix and (n,) labels.
+          P, Q: observation/feature partition counts (required unless a
+            ``mesh`` carrying both axes is given).
+          cfg: the solver's config dataclass (``config_cls()`` default).
+          mesh: an explicit jax mesh for the mesh engines.
+          warm_start: a :class:`SolveResult`, a ``(w, alpha)`` tuple, or
+            a bare ``w`` to initialize the iterates from.
+          data_axis, model_axis: mesh axis names.
+          row_gate: optional (n,) 0/1 per-row activity gate restricting
+            dual updates to gated-on rows -- the incremental
+            online-update path.  Only solvers with
+            ``supports_row_gate`` accept it.
+
+        Returns:
+          An :class:`EngineProgram` ready for :func:`engines.drive`.
+
+        Raises:
+          ValueError: on a missing grid spec, a mesh/grid mismatch, an
+            unsupported ``row_gate``, or a topology that does not
+            divide P.
         """
         loss = get_loss(loss_name)
         cfg = cfg if cfg is not None else self.config_cls()
+        if row_gate is not None and not self.supports_row_gate:
+            raise ValueError(
+                f"solver {self.name!r} has no incremental row-gate path; "
+                "gated warm-started passes are a dual-solver feature "
+                "(use 'd3ca')")
+        gate_kw = {} if row_gate is None else {"row_gate": row_gate}
         w0, alpha0 = _unpack_warm_start(warm_start)
         sparse = self.block_format == "sparse"
         topo = self.topology
@@ -234,7 +271,8 @@ class Solver:
                 data = partition_sparse(X, y, P, Q, m_multiple=P * Q)
             else:
                 data = partition(X, y, P, Q, m_multiple=P * Q)
-            return self._simulated_program(loss, data, cfg, w0, alpha0)
+            return self._simulated_program(loss, data, cfg, w0, alpha0,
+                                           **gate_kw)
         if mesh is None:
             if P is None or Q is None:
                 raise ValueError(f"engine={self.engine!r} needs a mesh "
@@ -261,7 +299,7 @@ class Solver:
         sdata = prep(mesh, X, y, data_axis=data_axis,
                      model_axis=model_axis, m_multiple=Pn * Qn)
         return self._shard_map_program(loss, sdata, cfg, w0, alpha0,
-                                       staleness=self.staleness)
+                                       staleness=self.staleness, **gate_kw)
 
     # ---- the shared outer driver ------------------------------------------
     def solve(self, loss_name: str, X, y, *, P: int = None, Q: int = None,
@@ -269,10 +307,12 @@ class Solver:
               tol: Optional[float] = None, f_star: Optional[float] = None,
               record_history: bool = True,
               callback: Optional[Callable] = None,
-              tracer=None, registry=None) -> SolveResult:
-        """Run the solver.  Early stopping (when ``tol`` is given) uses, in
-        order of preference: relative optimality vs ``f_star``; the duality
-        gap (dual solvers); the relative objective change between iterates.
+              tracer=None, registry=None, row_gate=None) -> SolveResult:
+        """Run the solver.
+
+        Early stopping (when ``tol`` is given) uses, in order of
+        preference: relative optimality vs ``f_star``; the duality gap
+        (dual solvers); the relative objective change between iterates.
         ``callback(t, w, alpha)`` fires every iteration.
 
         Under an adaptive :class:`CompressionSchedule` the solve runs as
@@ -280,6 +320,24 @@ class Solver:
         stage, advanced when the convergence metric's log10 slope
         flattens below the schedule's ``slope_tol`` -- and the merged
         history tags every entry with ``stage`` and ``codec``.
+
+        Args:
+          loss_name, X, y, P, Q, cfg, mesh, warm_start, row_gate: see
+            :meth:`program`.
+          tol: early-stopping tolerance (None disables early stopping).
+          f_star: reference optimum enabling the ``rel_opt`` history
+            field and rel-opt early stopping.
+          record_history: collect per-iteration history entries.
+          callback: ``callback(t, w, alpha)`` per outer iteration.
+          tracer: a :class:`repro.obs.Tracer` (enables the timed path).
+          registry: a :class:`repro.obs.Registry` for per-iter metrics.
+
+        Returns:
+          A :class:`SolveResult`.
+
+        Raises:
+          ValueError: propagated from :meth:`program` (bad grid spec,
+            unsupported ``row_gate``, ...).
         """
         cfg = cfg if cfg is not None else self.config_cls()
         sched = (self.compression
@@ -290,7 +348,7 @@ class Solver:
                 loss_name, X, y, P=P, Q=Q, cfg=cfg, mesh=mesh,
                 warm_start=warm_start, tol=tol, f_star=f_star,
                 record_history=record_history, callback=callback,
-                tracer=tracer, registry=registry)
+                tracer=tracer, registry=registry, row_gate=row_gate)
             return res
         history: List[Dict[str, float]] = []
         warm = warm_start
@@ -309,7 +367,7 @@ class Solver:
                     loss_name, X, y, P=P, Q=Q, cfg=stage_cfg, mesh=mesh,
                     warm_start=warm, tol=tol, f_star=f_star,
                     record_history=record_history, callback=callback,
-                    tracer=tracer, registry=registry,
+                    tracer=tracer, registry=registry, row_gate=row_gate,
                     advance=None if last else sched,
                     iter_offset=iters_done, time_offset=time_off,
                     bytes_offset=bytes_off, stage=si)
@@ -326,13 +384,57 @@ class Solver:
         return dataclasses.replace(res, history=history, iters=iters_done,
                                    compression=sched.spec)
 
+    def update(self, loss_name: str, X, y, *, touched, warm_start,
+               P: int = None, Q: int = None, cfg=None, mesh=None,
+               passes: int = 1, tracer=None, registry=None,
+               record_history: bool = True) -> SolveResult:
+        """Incremental-update entry point for the online service.
+
+        Runs ``passes`` warm-started outer iterations in which dual
+        updates are restricted to the ``touched`` rows (the cells whose
+        row partition received new observations); every other row's
+        alpha is frozen, but the primal-dual map still sums the full
+        dual, so the returned ``w`` is exact for the whole buffer.
+
+        Args:
+          loss_name, X, y, P, Q, cfg, mesh: see :meth:`solve`.  ``X``
+            is the full observation buffer (constant shape across
+            updates keeps the jit cache warm).
+          touched: integer row indices that may move their dual.
+          warm_start: the previous iterates (required -- an incremental
+            update without a warm start is just a truncated cold
+            solve).
+          passes: warm-started outer iterations over the touched cells.
+          tracer, registry: see :meth:`solve`.
+
+        Returns:
+          A :class:`SolveResult` whose ``w``/``alpha`` fold the new
+          observations into the previous model.
+
+        Raises:
+          ValueError: when this solver has no row-gate path
+            (``supports_row_gate`` is False) or ``warm_start`` is None.
+        """
+        if warm_start is None:
+            raise ValueError("incremental update needs warm_start=(w, "
+                             "alpha); for a cold model run solve()")
+        import numpy as np
+        gate = np.zeros((X.shape[0],), dtype=np.float32)
+        gate[np.asarray(touched, dtype=np.int64)] = 1.0
+        cfg = cfg if cfg is not None else self.config_cls()
+        cfg = dataclasses.replace(cfg, outer_iters=int(passes))
+        return self.solve(loss_name, X, y, P=P, Q=Q, cfg=cfg, mesh=mesh,
+                          warm_start=warm_start, row_gate=gate,
+                          tracer=tracer, registry=registry,
+                          record_history=record_history)
+
     def _solve_stage(self, loss_name: str, X, y, *, P: int = None,
                      Q: int = None, cfg=None, mesh=None, warm_start=None,
                      tol: Optional[float] = None,
                      f_star: Optional[float] = None,
                      record_history: bool = True,
                      callback: Optional[Callable] = None,
-                     tracer=None, registry=None,
+                     tracer=None, registry=None, row_gate=None,
                      advance=None, iter_offset: int = 0,
                      time_offset: float = 0.0, bytes_offset: int = 0,
                      stage: Optional[int] = None):
@@ -376,7 +478,8 @@ class Solver:
         with tr.span("solve", loss=loss_name, **labels):
             with tr.span("data_prep"):
                 prog = self.program(loss_name, X, y, P=P, Q=Q, cfg=cfg,
-                                    mesh=mesh, warm_start=warm_start)
+                                    mesh=mesh, warm_start=warm_start,
+                                    row_gate=row_gate)
             split = None
             if timed:
                 with tr.span("calibrate"):
@@ -524,20 +627,28 @@ class Solver:
 
 
 # ---------------------------------------------------------------------------
-# the three solvers
+# the four solvers
 # ---------------------------------------------------------------------------
 
 _REGISTRY: Dict[str, Type[Solver]] = {}
 
 
 def register_solver(cls: Type[Solver]) -> Type[Solver]:
+    """Class decorator adding a :class:`Solver` subclass to the registry
+    under its ``name`` attribute.  Returns the class unchanged, so it
+    stacks with other decorators."""
     _REGISTRY[cls.name] = cls
     return cls
 
 
 def get_solver(name: str) -> Type[Solver]:
     """Look up a solver class by name; instantiate with
-    ``get_solver(name)(engine=..., local_backend=...)``."""
+    ``get_solver(name)(engine=..., local_backend=...)``.
+
+    Raises:
+      KeyError: for an unregistered name (the message lists what IS
+        registered).
+    """
     try:
         return _REGISTRY[name]
     except KeyError:
@@ -546,6 +657,8 @@ def get_solver(name: str) -> Type[Solver]:
 
 
 def available_solvers():
+    """Sorted names of every registered solver
+    (``["admm", "d3ca", "radisa", "sfk"]``)."""
     return sorted(_REGISTRY)
 
 
@@ -554,24 +667,28 @@ class D3CASolver(Solver):
     name = "d3ca"
     config_cls = D3CAConfig
     has_dual = True
+    supports_row_gate = True                   # incremental online updates
     make_step = staticmethod(make_d3ca_step)   # for dry-run lowering
 
-    def _simulated_program(self, loss, data, cfg, w0, alpha0):
+    def _simulated_program(self, loss, data, cfg, w0, alpha0,
+                           row_gate=None):
         return d3ca_simulated_program(loss, data, cfg,
                                       local_backend=self.local_backend,
                                       w0=w0, alpha0=alpha0,
                                       compression=self.active_policy,
-                                      topology=self.topology)
+                                      topology=self.topology,
+                                      row_gate=row_gate)
 
     def _shard_map_program(self, loss, sdata, cfg, w0, alpha0,
-                           staleness: int = 0):
+                           staleness: int = 0, row_gate=None):
         return d3ca_shard_map_program(loss, sdata, cfg,
                                       local_backend=self.local_backend,
                                       w0=w0, alpha0=alpha0,
                                       staleness=staleness,
                                       compression=self.active_policy,
                                       overlap=self.engine == "overlap",
-                                      topology=self.topology)
+                                      topology=self.topology,
+                                      row_gate=row_gate)
 
 
 @register_solver
@@ -595,6 +712,33 @@ class RADiSASolver(Solver):
                                         compression=self.active_policy,
                                         overlap=self.engine == "overlap",
                                         topology=self.topology)
+
+
+@register_solver
+class SFKSolver(Solver):
+    """Stochastic Fang--Klabjan sampling scheme (arXiv 1803.11287): a
+    primal solver whose outer iteration subsamples the observations --
+    minibatch anchor gradients plus variance-reduced local steps on the
+    sampled rows only (see :mod:`repro.core.sfk`)."""
+    name = "sfk"
+    config_cls = SFKConfig
+    make_step = staticmethod(make_sfk_step)
+
+    def _simulated_program(self, loss, data, cfg, w0, alpha0):
+        return sfk_simulated_program(loss, data, cfg,
+                                     local_backend=self.local_backend,
+                                     w0=w0,
+                                     compression=self.active_policy,
+                                     topology=self.topology)
+
+    def _shard_map_program(self, loss, sdata, cfg, w0, alpha0,
+                           staleness: int = 0):
+        return sfk_shard_map_program(loss, sdata, cfg,
+                                     local_backend=self.local_backend,
+                                     w0=w0, staleness=staleness,
+                                     compression=self.active_policy,
+                                     overlap=self.engine == "overlap",
+                                     topology=self.topology)
 
 
 @register_solver

@@ -1,0 +1,40 @@
+"""repro.online -- streaming observations into warm-started doubly
+distributed solves behind the live scorer.
+
+The paper's solvers are batch algorithms: P x Q grid, fixed (X, y),
+outer iterations to convergence.  This package turns them into a
+service.  New observations arrive as requests, pass an admission queue
+(bounded; shed on overload), land in a fixed-capacity ring buffer
+sharded into the same P x Q grid, and trigger *incremental* updates:
+warm-started, row-gated solver passes (``Solver.update``) that only
+move the dual of the touched cells while the primal stays exact for
+the whole window.  Meanwhile ``LinearScorer`` keeps serving the last
+published model from a versioned snapshot swapped in atomically (and,
+optionally, persisted through ``repro.checkpoint`` for crash
+recovery).
+
+Modules:
+  * ``queue``    -- :class:`AdmissionQueue`: bounded ingest,
+                    reject-on-full, FIFO drain-coalescing
+  * ``store``    -- :class:`GridStore`: constant-shape observation ring
+                    sharded into P row slabs; reports touched rows
+  * ``snapshot`` -- :class:`ModelSnapshot` / :class:`SnapshotBook`:
+                    atomic publish/read hand-off + checkpoint-backed
+                    durability and recovery
+  * ``service``  -- :class:`OnlineSolverService`: the whole loop, with
+                    tracer spans and staleness/throughput metrics
+
+See docs/architecture.md for where this sits in the stack and
+docs/consistency.md for the snapshot-staleness guarantees.
+"""
+from .queue import AdmissionQueue, QueueFullError
+from .service import OnlineConfig, OnlineSolverService
+from .snapshot import ModelSnapshot, SnapshotBook
+from .store import GridStore
+
+__all__ = [
+    "AdmissionQueue", "QueueFullError",
+    "OnlineConfig", "OnlineSolverService",
+    "ModelSnapshot", "SnapshotBook",
+    "GridStore",
+]

@@ -1,0 +1,271 @@
+"""The online learning service: stream observations into warm-started
+doubly distributed solves behind the live scorer.
+
+Request lifecycle (each arrow is a tracer span and a metrics site):
+
+    submit() ──▶ AdmissionQueue ──▶ run_pending():
+                   (shed on full)     online/ingest   GridStore.insert
+                                      online/update   Solver.update
+                                                      (gated, warm-started)
+                                      online/swap     SnapshotBook.publish
+                                                      LinearScorer.update_weights
+    score() ──▶ LinearScorer (current snapshot; staleness accounted)
+
+The solver side reuses the repo's whole stack: ``Solver.update`` runs
+``passes`` warm-started outer iterations of the configured solver
+(gated D3CA by default) in which only the rows the new batch landed on
+may move their dual, through whichever engine x backend x block-format
+cell the service was configured with.  Scoring never blocks on
+training: the scorer reads the last *published* weights, swapped in by
+one atomic reference assignment, and the gap between "what the scorer
+serves" and "what the stream has seen" is exported as the staleness
+gauge and version lag.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from ..core.solver import get_solver
+from ..obs import NULL_TRACER, Registry, as_tracer
+from ..serve.scoring import LinearScorer
+from .queue import AdmissionQueue
+from .snapshot import SnapshotBook
+from .store import GridStore
+
+
+@dataclasses.dataclass(frozen=True)
+class OnlineConfig:
+    """Static configuration of an :class:`OnlineSolverService`.
+
+    Attributes:
+      m: feature dimension of the stream.
+      capacity: observation window (GridStore rows; rounded up so P
+        divides it).
+      P, Q: solver grid.
+      loss: loss name (see ``repro.core.losses``).
+      solver: registry name; must support row gating (``d3ca``).
+      engine / local_backend / block_format / staleness / compression /
+        topology: the usual solver knobs, threaded verbatim.
+      solver_cfg: optional solver config (its ``outer_iters`` is
+        overridden by ``passes`` for each update).
+      passes: warm-started outer iterations per drained batch.
+      queue_capacity: admission bound in pending observation rows.
+      max_update_rows: cap on rows drained into one update pass.
+    """
+    m: int
+    capacity: int = 512
+    P: int = 2
+    Q: int = 2
+    loss: str = "hinge"
+    solver: str = "d3ca"
+    engine: str = "simulated"
+    local_backend: str = "ref"
+    block_format: str = "dense"
+    staleness: int = 0
+    compression: Optional[str] = None
+    topology: Optional[str] = None
+    solver_cfg: Optional[object] = None
+    passes: int = 1
+    queue_capacity: int = 4096
+    max_update_rows: Optional[int] = None
+
+
+class OnlineSolverService:
+    """Ties admission, the observation store, the incremental solver,
+    snapshot publication, and the live scorer into one object.
+
+    Args:
+      config: an :class:`OnlineConfig`.
+      mesh: jax mesh for non-simulated engines (and grid-sharded
+        scoring); None runs the simulated engine and a single-device
+        scorer.
+      manager: optional :class:`~repro.checkpoint.manager.
+        CheckpointManager` -- when given, every published version is
+        persisted and :meth:`recover` can resume after a crash.
+      tracer: a :class:`repro.obs.Tracer` (spans ``online/ingest``,
+        ``online/update``, ``online/swap``, ``online/score``).
+      registry: a :class:`repro.obs.Registry`.  The service exports
+        counters ``online/ingested`` / ``online/updates`` /
+        ``online/scored`` / ``online/rejected``, gauges
+        ``online/staleness_s`` (age of the served snapshot) and
+        ``online/version_lag`` (admitted observations the served model
+        has not seen), and histograms ``online/update_s`` /
+        ``online/swap_s``.
+      clock: injectable wall-clock for staleness math (tests freeze it).
+    """
+
+    def __init__(self, config: OnlineConfig, *, mesh=None, manager=None,
+                 tracer=None, registry: Optional[Registry] = None,
+                 clock=time.monotonic):
+        solver_cls = get_solver(config.solver)
+        if not solver_cls.supports_row_gate:
+            raise ValueError(
+                f"solver {config.solver!r} has no incremental row-gate "
+                "path; the online service needs one (use 'd3ca')")
+        self.config = config
+        self.mesh = mesh
+        self.tracer = as_tracer(tracer) if tracer is not None else NULL_TRACER
+        self.registry = registry if registry is not None else Registry()
+        self.clock = clock
+        self.solver = solver_cls(
+            engine=config.engine, local_backend=config.local_backend,
+            block_format=config.block_format, staleness=config.staleness,
+            compression=config.compression, topology=config.topology)
+        self.queue = AdmissionQueue(capacity=config.queue_capacity)
+        self.store = GridStore(config.m, config.capacity,
+                               config.P, config.Q)
+        cap = self.store.capacity
+        self.book = SnapshotBook(np.zeros((config.m,), np.float32),
+                                 np.zeros((cap,), np.float32),
+                                 manager=manager, clock=clock)
+        self.scorer = LinearScorer(np.zeros((config.m,), np.float32),
+                                   mesh, loss=config.loss)
+        self._labels = {"solver": config.solver, "engine": config.engine}
+        self.last_result = None
+
+    # ------------------------------------------------------------------
+    # ingest
+    # ------------------------------------------------------------------
+    def submit(self, X, y) -> int:
+        """Admit an observation batch (may raise
+        :class:`~repro.online.queue.QueueFullError` -- callers retry or
+        shed; the counters record either way)."""
+        with self.tracer.span("online/ingest", rows=int(np.shape(X)[0])):
+            try:
+                seq = self.queue.submit(X, y)
+            except Exception:
+                self.registry.counter("online/rejected", **self._labels)\
+                    .inc(int(np.shape(X)[0]))
+                raise
+        self.registry.counter("online/ingested", **self._labels)\
+            .inc(int(np.shape(X)[0]))
+        self._gauge_staleness()
+        return seq
+
+    # ------------------------------------------------------------------
+    # update
+    # ------------------------------------------------------------------
+    def run_pending(self) -> Optional[int]:
+        """Drain the queue and fold the batch into the model.
+
+        One call = at most one warm-started gated solver pass over the
+        touched cells, then one atomic snapshot publish + scorer swap.
+
+        Returns:
+          The new snapshot version, or None when nothing was pending.
+        """
+        batch = self.queue.drain(self.config.max_update_rows)
+        if batch is None:
+            return None
+        Xb, yb, seq = batch
+        cur = self.book.current()
+        with self.tracer.span("online/update", rows=len(yb)):
+            t0 = self.clock()
+            touched = self.store.insert(Xb, yb)
+            warm = (cur.w, cur.alpha)
+            res = self.solver.update(
+                self.config.loss, self.store.X, self.store.y,
+                touched=touched, warm_start=warm,
+                P=self.config.P, Q=self.config.Q,
+                cfg=self.config.solver_cfg, mesh=self.mesh,
+                passes=self.config.passes,
+                tracer=(self.tracer if self.tracer is not NULL_TRACER
+                        else None),
+                registry=self.registry, record_history=False)
+            self.registry.histogram("online/update_s", **self._labels)\
+                .observe(self.clock() - t0)
+        with self.tracer.span("online/swap"):
+            t0 = self.clock()
+            snap = self.book.publish(np.asarray(res.w),
+                                     np.asarray(res.alpha), seq)
+            self.scorer.update_weights(snap.w, version=snap.version)
+            self.registry.histogram("online/swap_s", **self._labels)\
+                .observe(self.clock() - t0)
+        self.registry.counter("online/updates", **self._labels).inc()
+        self.last_result = res
+        self._gauge_staleness()
+        return snap.version
+
+    def drain_all(self) -> int:
+        """Run update passes until the queue is empty; returns the
+        number of passes run."""
+        n = 0
+        while self.run_pending() is not None:
+            n += 1
+        return n
+
+    # ------------------------------------------------------------------
+    # serve
+    # ------------------------------------------------------------------
+    def score(self, X) -> np.ndarray:
+        """Margins under the currently served snapshot (never blocks on
+        a concurrent update pass)."""
+        with self.tracer.span("online/score", rows=int(np.shape(X)[0])):
+            out = self.scorer.score(X)
+        self.registry.counter("online/scored", **self._labels)\
+            .inc(int(np.shape(X)[0]))
+        self._gauge_staleness()
+        return out
+
+    def predict(self, X) -> np.ndarray:
+        """Labels / probabilities under the served snapshot."""
+        out = self.scorer.predict(X)
+        self.registry.counter("online/scored", **self._labels)\
+            .inc(int(np.shape(X)[0]))
+        self._gauge_staleness()
+        return out
+
+    # ------------------------------------------------------------------
+    # bookkeeping
+    # ------------------------------------------------------------------
+    def _gauge_staleness(self):
+        cur = self.book.current()
+        self.registry.gauge("online/staleness_s", **self._labels)\
+            .set(self.clock() - cur.trained_at)
+        self.registry.gauge("online/version_lag", **self._labels)\
+            .set(self.queue.seq - cur.trained_seq)
+
+    @property
+    def staleness_s(self) -> float:
+        """Age of the snapshot the scorer is serving."""
+        return self.clock() - self.book.current().trained_at
+
+    @property
+    def version_lag(self) -> int:
+        """Admitted observations the served model has not absorbed."""
+        return self.queue.seq - self.book.current().trained_seq
+
+    def recover(self) -> Optional[int]:
+        """Restore the newest persisted snapshot (see
+        :meth:`SnapshotBook.recover`) and point the scorer at it.
+
+        Returns the recovered version, or None without a manager /
+        checkpoints."""
+        cap = self.store.capacity
+        snap = self.book.recover(np.zeros((self.config.m,), np.float32),
+                                 np.zeros((cap,), np.float32))
+        if snap is None:
+            return None
+        self.scorer.update_weights(snap.w, version=snap.version)
+        return snap.version
+
+    def stats(self) -> dict:
+        """One-call service summary (counters + staleness + store)."""
+        cur = self.book.current()
+        return {
+            "version": cur.version,
+            "trained_seq": cur.trained_seq,
+            "ingested": self.queue.admitted,
+            "rejected": self.queue.rejected,
+            "pending_rows": self.queue.pending_rows,
+            "version_lag": self.version_lag,
+            "staleness_s": self.staleness_s,
+            "store_filled": self.store.filled,
+            "store_capacity": self.store.capacity,
+            "rows_scored": self.scorer.rows_scored,
+            "score_rows_per_sec": self.scorer.rows_per_sec,
+        }

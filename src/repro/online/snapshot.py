@@ -1,0 +1,140 @@
+"""Versioned model snapshots with an atomic publish/read hand-off.
+
+``SnapshotBook`` is the synchronization point between the update path
+(one writer) and the scoring path (many readers): ``publish`` builds an
+immutable :class:`ModelSnapshot` off to the side and swaps the current
+reference under a lock, so ``current()`` always returns a *complete*
+(version, w, alpha, trained_seq, trained_at) tuple -- readers see the
+old snapshot or the new one, never a mix.  Durability reuses
+``repro.checkpoint.manager``: each published version is written as
+checkpoint ``step_<version>`` via the manager's write-to-tmp +
+atomic-rename protocol, so a crash mid-publish can never corrupt the
+latest on-disk snapshot (tests/test_checkpoint.py pins this), and
+``recover`` restores the newest complete version after a restart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Optional
+
+import numpy as np
+
+from ..checkpoint.manager import CheckpointManager
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSnapshot:
+    """One immutable published model version.
+
+    Attributes:
+      version: monotone snapshot version (0 is the initial zero model).
+      w: (m,) weights.
+      alpha: (capacity,) dual iterate carried for the next warm start
+        (None for primal-only solvers).
+      trained_seq: stream sequence number the model has absorbed --
+        ``ingested_seq - trained_seq`` is the version lag.
+      trained_at: publish wall-clock (the staleness zero point).
+    """
+    version: int
+    w: np.ndarray
+    alpha: Optional[np.ndarray]
+    trained_seq: int
+    trained_at: float
+
+
+class SnapshotBook:
+    """Single-writer / many-reader registry of model snapshots.
+
+    Args:
+      w0: (m,) initial weights (version 0).
+      alpha0: optional initial dual.
+      manager: optional :class:`CheckpointManager`; when given, every
+        publish persists the snapshot as checkpoint step ``version``
+        (synchronously by default -- see ``async_persist``).
+      async_persist: hand the disk write to the manager's background
+        thread so ``publish`` only blocks for the reference swap.
+      clock: injectable time source (tests freeze it).
+    """
+
+    def __init__(self, w0, alpha0=None, *,
+                 manager: Optional[CheckpointManager] = None,
+                 async_persist: bool = True, clock=time.monotonic):
+        self._lock = threading.Lock()
+        self._manager = manager
+        self._async = async_persist
+        self._clock = clock
+        self._current = ModelSnapshot(
+            version=0, w=np.asarray(w0, np.float32),
+            alpha=None if alpha0 is None else np.asarray(alpha0, np.float32),
+            trained_seq=0, trained_at=clock())
+
+    def current(self) -> ModelSnapshot:
+        """The latest published snapshot (always complete)."""
+        with self._lock:
+            return self._current
+
+    def publish(self, w, alpha, trained_seq: int) -> ModelSnapshot:
+        """Publish a new version; returns the new snapshot.
+
+        The snapshot (and, when persistence is on, its on-disk
+        checkpoint handoff) is prepared BEFORE the reference swap, so
+        the swap itself is one assignment under the lock.
+        """
+        with self._lock:
+            version = self._current.version + 1
+        snap = ModelSnapshot(
+            version=version, w=np.asarray(w, np.float32),
+            alpha=None if alpha is None else np.asarray(alpha, np.float32),
+            trained_seq=int(trained_seq), trained_at=self._clock())
+        if self._manager is not None:
+            tree = {"w": snap.w,
+                    "trained_seq": np.asarray(snap.trained_seq, np.int64)}
+            if snap.alpha is not None:
+                tree["alpha"] = snap.alpha
+            if self._async:
+                self._manager.save_async(version, tree)
+            else:
+                self._manager.save(version, tree)
+        with self._lock:
+            self._current = snap
+        return snap
+
+    def flush(self):
+        """Block until any background persist completed (surfacing its
+        error, if one failed)."""
+        if self._manager is not None:
+            self._manager.wait()
+
+    def recover(self, like_w, like_alpha=None) -> Optional[ModelSnapshot]:
+        """Restore the newest complete on-disk version (crash recovery).
+
+        Incomplete writes (leftover ``.tmp`` directories from a crash
+        mid-publish) are invisible to the manager's ``latest_step``, so
+        recovery lands on the newest snapshot that finished its atomic
+        rename.
+
+        Args:
+          like_w: (m,) template array fixing the weight shape/dtype.
+          like_alpha: optional dual template (omit for primal-only).
+
+        Returns:
+          The recovered snapshot (now current), or None when no
+          complete checkpoint exists (the book keeps version 0).
+        """
+        if self._manager is None or self._manager.latest_step() is None:
+            return None
+        like = {"w": np.asarray(like_w, np.float32),
+                "trained_seq": np.asarray(0, np.int64)}
+        if like_alpha is not None:
+            like["alpha"] = np.asarray(like_alpha, np.float32)
+        step, tree = self._manager.restore(like)
+        snap = ModelSnapshot(
+            version=int(step), w=np.asarray(tree["w"]),
+            alpha=(np.asarray(tree["alpha"]) if "alpha" in tree else None),
+            trained_seq=int(tree["trained_seq"]),
+            trained_at=self._clock())
+        with self._lock:
+            self._current = snap
+        return snap

@@ -1,0 +1,104 @@
+"""Fixed-capacity observation store sharded into the P x Q grid.
+
+The streaming solver needs constant array shapes -- a growing n would
+recompile the solver program on every batch.  ``GridStore`` therefore
+pre-allocates a ``capacity``-row buffer (rounded up so P divides it),
+fills it sequentially, and wraps around ring-buffer style once full
+(oldest observations are overwritten; the effective training window is
+the last ``capacity`` rows of the stream).
+
+Because the solver partitions rows into P contiguous slabs of
+``n_p = capacity / P`` rows, a batch written at the ring cursor lands
+in one or two adjacent row partitions -- exactly the "touched cells"
+set the incremental gated D3CA pass is restricted to.  ``insert``
+returns the touched row indices so the service can build the gate.
+
+Rows never written stay all-zero with ``filled_mask == 0``; the
+service always gates them off (their dual is frozen at zero and a
+zero-feature row contributes nothing to w), so passing the full buffer
+to the solver is safe.  The one caveat is normalization: the solver's
+1/n objective scaling counts ``capacity`` rows, so until the buffer
+fills, the effective regularization is ``lam * capacity / filled``
+relative to the filled-rows problem.  Deliberate: shapes stay
+constant, and the bias decays to zero as the buffer fills.
+"""
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+
+
+def _ceil_to(x: int, k: int) -> int:
+    return (x + k - 1) // k * k
+
+
+class GridStore:
+    """Ring buffer of the last ``capacity`` stream observations.
+
+    Args:
+      m: feature dimension.
+      capacity: observation window size (rounded up to a multiple of P).
+      P, Q: the solver grid this buffer will be partitioned into.
+    """
+
+    def __init__(self, m: int, capacity: int, P: int, Q: int):
+        self.m = int(m)
+        self.P = int(P)
+        self.Q = int(Q)
+        self.capacity = _ceil_to(int(capacity), self.P)
+        self.n_p = self.capacity // self.P
+        self.X = np.zeros((self.capacity, self.m), np.float32)
+        self.y = np.zeros((self.capacity,), np.float32)
+        self.filled_mask = np.zeros((self.capacity,), np.float32)
+        self._cursor = 0          # next slot to write (ring)
+        self._written = 0         # total rows ever written
+        self._lock = threading.Lock()
+
+    def insert(self, Xb, yb) -> np.ndarray:
+        """Write a batch at the ring cursor.
+
+        Args:
+          Xb: (b, m) rows; b may exceed capacity (only the last
+            ``capacity`` rows survive, matching ring semantics).
+          yb: (b,) labels.
+
+        Returns:
+          The touched row indices (np.int64, sorted, unique) -- the
+          gate set for the next incremental pass.
+
+        Raises:
+          ValueError: on a feature-dimension mismatch.
+        """
+        Xb = np.asarray(Xb, np.float32)
+        yb = np.asarray(yb, np.float32)
+        if Xb.ndim != 2 or Xb.shape[1] != self.m:
+            raise ValueError(f"expected (b, {self.m}); got {Xb.shape}")
+        b = Xb.shape[0]
+        if b > self.capacity:       # only the tail survives a giant batch
+            Xb, yb, b = Xb[-self.capacity:], yb[-self.capacity:], \
+                self.capacity
+        with self._lock:
+            idx = (self._cursor + np.arange(b)) % self.capacity
+            self.X[idx] = Xb
+            self.y[idx] = yb
+            self.filled_mask[idx] = 1.0
+            self._cursor = int((self._cursor + b) % self.capacity)
+            self._written += b
+        return np.unique(idx)
+
+    def touched_partitions(self, rows: np.ndarray) -> np.ndarray:
+        """Row partitions (p indices) a set of row indices lands in."""
+        return np.unique(np.asarray(rows) // self.n_p)
+
+    @property
+    def filled(self) -> int:
+        """Rows holding a real observation (<= capacity)."""
+        with self._lock:
+            return int(self.filled_mask.sum())
+
+    @property
+    def written(self) -> int:
+        """Total rows ever written (>= filled once the ring wraps)."""
+        with self._lock:
+            return self._written

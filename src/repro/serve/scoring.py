@@ -70,12 +70,41 @@ class LinearScorer:
             self._m_pad = len(np.asarray(w))
             self._fn = jax.jit(lambda x, wv: x @ wv)
         self.m = len(np.asarray(w))
-        wp = np.zeros((self._m_pad,), np.float32)
-        wp[: self.m] = np.asarray(w, np.float32)
-        self.w = jnp.asarray(wp)
+        self.w = self._pad(w)
+        self.w_version = 0
         # row bucket: fixed compiled shape; default one grid row per call
         self.bucket = bucket if bucket is not None else max(self.P, 64)
         self.bucket = _ceil_to(self.bucket, self.P)
+
+    def _pad(self, w):
+        wp = np.zeros((self._m_pad,), np.float32)
+        wp[: self.m] = np.asarray(w, np.float32)
+        return jnp.asarray(wp)
+
+    def update_weights(self, w, version: Optional[int] = None):
+        """Swap in a new model snapshot without recompiling.
+
+        The padded device array is built first and the ``self.w``
+        reference swapped in one assignment, so a concurrent
+        :meth:`score` call always reads a complete weight vector --
+        either the old snapshot or the new one, never a mix.  This is
+        the serving half of the online service's atomic hand-off.
+
+        Args:
+          w: (m,) new weights (same m the scorer was built with).
+          version: optional snapshot version recorded as
+            ``self.w_version`` for staleness introspection.
+
+        Raises:
+          ValueError: on a length mismatch with the compiled m.
+        """
+        if len(np.asarray(w)) != self.m:
+            raise ValueError(f"expected ({self.m},) weights; got "
+                             f"{np.asarray(w).shape}")
+        w_new = self._pad(w)         # build off to the side...
+        self.w = w_new               # ...then one atomic reference swap
+        if version is not None:
+            self.w_version = version
 
     def score(self, X) -> np.ndarray:
         """Margins x . w for a (B, m) request batch (any B)."""
@@ -85,12 +114,13 @@ class LinearScorer:
         B = X.shape[0]
         out = np.empty((B,), np.float32)
         t0 = self.clock()
+        w = self.w    # one snapshot read: a whole batch scores one version
         for lo in range(0, B, self.bucket):
             chunk = X[lo: lo + self.bucket]
             pad = np.zeros((self.bucket, self._m_pad), np.float32)
             pad[: len(chunk), : self.m] = chunk
             margins = np.asarray(
-                jax.block_until_ready(self._fn(jnp.asarray(pad), self.w)))
+                jax.block_until_ready(self._fn(jnp.asarray(pad), w)))
             out[lo: lo + len(chunk)] = margins[: len(chunk)]
         self.seconds += self.clock() - t0
         self.rows_scored += B

@@ -41,3 +41,8 @@ def pytest_configure(config):
         "markers",
         "overlap: exercises the communication-overlap engine in a "
         "subprocess with a forced multi-device grid (own CI matrix leg)")
+    config.addinivalue_line(
+        "markers",
+        "online: online-service integration tests that run real "
+        "warm-started incremental solves (own CI matrix leg; the pure "
+        "queue/store/snapshot unit tests stay in the simulated split)")

@@ -41,8 +41,9 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax
 import jax.numpy as jnp
 
-from repro.core import (ADMMConfig, D3CAConfig, RADiSAConfig, get_loss,
-                        get_solver, make_radisa_step, objective)
+from repro.core import (ADMMConfig, D3CAConfig, RADiSAConfig, SFKConfig,
+                        get_loss, get_solver, make_radisa_step,
+                        objective)
 from repro.data import make_svm_data
 
 Pn, Qn = 4, 2
@@ -65,6 +66,7 @@ def main_async():
     cases = [
         ("d3ca", D3CAConfig(lam=lam, outer_iters=3, local_steps=12)),
         ("radisa", RADiSAConfig(lam=lam, gamma=0.03, outer_iters=3, L=12)),
+        ("sfk", SFKConfig(lam=lam, gamma=0.03, outer_iters=3, L=12)),
         ("admm", ADMMConfig(lam=lam, rho=lam, outer_iters=4)),
     ]
     for block_format in ("dense", "sparse"):
@@ -130,6 +132,7 @@ def main_overlap():
     cases = [
         ("d3ca", D3CAConfig(lam=lam, outer_iters=3, local_steps=12)),
         ("radisa", RADiSAConfig(lam=lam, gamma=0.03, outer_iters=3, L=12)),
+        ("sfk", SFKConfig(lam=lam, gamma=0.03, outer_iters=3, L=12)),
         ("admm", ADMMConfig(lam=lam, rho=lam, outer_iters=4)),
     ]
     for block_format in ("dense", "sparse"):
@@ -223,6 +226,7 @@ def main_compress():
     cases = [
         ("d3ca", D3CAConfig(lam=lam, outer_iters=3, local_steps=12)),
         ("radisa", RADiSAConfig(lam=lam, gamma=0.03, outer_iters=3, L=12)),
+        ("sfk", SFKConfig(lam=lam, gamma=0.03, outer_iters=3, L=12)),
         ("admm", ADMMConfig(lam=lam, rho=lam, outer_iters=4)),
     ]
     for block_format in ("dense", "sparse"):
@@ -317,6 +321,7 @@ def main():
         ("radisa", RADiSAConfig(lam=lam, gamma=0.03, outer_iters=3, L=12)),
         ("radisa_avg", RADiSAConfig(lam=lam, gamma=0.03, outer_iters=3,
                                     L=12, variant="avg")),
+        ("sfk", SFKConfig(lam=lam, gamma=0.03, outer_iters=3, L=12)),
         ("admm", ADMMConfig(lam=lam, rho=lam, outer_iters=4)),
     ]
     for label, cfg in cases:

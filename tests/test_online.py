@@ -1,0 +1,304 @@
+"""Online learning service: admission, the grid ring store, the gated
+incremental solver path, atomic snapshot hand-off under concurrent
+scoring, staleness accounting, and the end-to-end service loop.
+
+The pure queue/store/snapshot unit tests run in the simulated CI split;
+the tests that drive real warm-started solves carry the ``online``
+marker (their own matrix leg)."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import D3CAConfig, get_solver, objective
+from repro.data import make_svm_data
+from repro.online import (AdmissionQueue, GridStore, OnlineConfig,
+                          OnlineSolverService, QueueFullError, SnapshotBook)
+
+LAM = 1e-2
+RNG = np.random.default_rng(3)
+
+
+def _stream(b, m, rng=RNG):
+    X = rng.normal(size=(b, m)).astype(np.float32)
+    w_star = np.linspace(-1.0, 1.0, m)
+    y = np.where(X @ w_star >= 0, 1.0, -1.0).astype(np.float32)
+    return X, y
+
+
+# ---------------------------------------------------------------------------
+# admission queue
+# ---------------------------------------------------------------------------
+
+def test_queue_admits_and_coalesces_fifo():
+    q = AdmissionQueue(capacity=100)
+    X1, y1 = _stream(4, 3)
+    X2, y2 = _stream(6, 3)
+    assert q.submit(X1, y1) == 4
+    assert q.submit(X2, y2) == 10
+    assert q.pending_rows == 10
+    X, y, seq = q.drain()
+    assert X.shape == (10, 3) and seq == 10 and q.pending_rows == 0
+    np.testing.assert_array_equal(X[:4], X1)      # FIFO order preserved
+    np.testing.assert_array_equal(X[4:], X2)
+    assert q.drain() is None
+
+
+def test_queue_sheds_on_overflow_without_partial_admission():
+    q = AdmissionQueue(capacity=10)
+    q.submit(*_stream(8, 2))
+    with pytest.raises(QueueFullError):
+        q.submit(*_stream(4, 2))                  # 8 + 4 > 10: shed whole
+    assert q.pending_rows == 8 and q.rejected == 4 and q.admitted == 8
+    q.submit(*_stream(2, 2))                      # exactly to the brim is ok
+    assert q.pending_rows == 10
+
+
+def test_queue_drain_respects_max_rows():
+    q = AdmissionQueue(capacity=0)                # unbounded
+    for _ in range(5):
+        q.submit(*_stream(4, 2))
+    X, _, seq = q.drain(max_rows=7)               # whole batches: 4 + 4
+    assert X.shape[0] == 8 and seq == 8 and q.pending_rows == 12
+
+
+def test_queue_rejects_mismatched_shapes():
+    q = AdmissionQueue()
+    with pytest.raises(ValueError):
+        q.submit(np.zeros((4, 3)), np.zeros((5,)))
+
+
+# ---------------------------------------------------------------------------
+# grid ring store
+# ---------------------------------------------------------------------------
+
+def test_store_rounds_capacity_and_tracks_touched_rows():
+    st = GridStore(m=4, capacity=10, P=4, Q=2)
+    assert st.capacity == 12 and st.n_p == 3      # rounded so P divides
+    touched = st.insert(*_stream(5, 4))
+    np.testing.assert_array_equal(touched, np.arange(5))
+    assert set(st.touched_partitions(touched)) == {0, 1}
+    assert st.filled == 5
+
+
+def test_store_ring_wraps_and_overwrites_oldest():
+    st = GridStore(m=2, capacity=8, P=2, Q=1)
+    st.insert(*_stream(6, 2))
+    touched = st.insert(*_stream(4, 2))           # wraps: rows 6,7,0,1
+    np.testing.assert_array_equal(touched, [0, 1, 6, 7])
+    assert st.filled == 8 and st.written == 10
+    Xg, _ = _stream(20, 2, np.random.default_rng(7))
+    touched = st.insert(Xg, np.ones(20, np.float32))
+    assert len(touched) == 8                      # giant batch: tail only
+    assert st.filled == 8 and st.written == 18
+    # the buffer now holds exactly the last `capacity` rows of the batch
+    order = np.argsort((np.arange(8) - st._cursor) % 8)
+    np.testing.assert_array_equal(st.X[order], Xg[-8:])
+
+
+def test_store_rejects_wrong_width():
+    st = GridStore(m=3, capacity=4, P=2, Q=2)
+    with pytest.raises(ValueError):
+        st.insert(np.zeros((2, 5)), np.zeros(2))
+
+
+# ---------------------------------------------------------------------------
+# snapshot book: atomic hand-off + persistence (checkpoint crash cases
+# live in test_checkpoint.py)
+# ---------------------------------------------------------------------------
+
+def test_snapshot_publish_is_atomic_under_concurrent_reads():
+    book = SnapshotBook(np.zeros(4), np.zeros(6))
+    stop = threading.Event()
+    torn = []
+
+    def reader():
+        while not stop.is_set():
+            s = book.current()
+            if not (np.all(s.w == s.version) and s.trained_seq == s.version):
+                torn.append(s.version)
+
+    threads = [threading.Thread(target=reader) for _ in range(3)]
+    for th in threads:
+        th.start()
+    for v in range(1, 200):
+        book.publish(np.full(4, float(v)), np.zeros(6), v)
+    stop.set()
+    for th in threads:
+        th.join()
+    assert torn == []
+    assert book.current().version == 199
+
+
+def test_snapshot_recover_roundtrip(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    mgr = CheckpointManager(str(tmp_path), keep_n=2)
+    book = SnapshotBook(np.zeros(3), np.zeros(4), manager=mgr,
+                        async_persist=False)
+    book.publish(np.full(3, 1.0), np.full(4, 0.5), trained_seq=7)
+    book.publish(np.full(3, 2.0), np.full(4, 1.5), trained_seq=11)
+    fresh = SnapshotBook(np.zeros(3), np.zeros(4), manager=mgr)
+    snap = fresh.recover(np.zeros(3), np.zeros(4))
+    assert snap.version == 2 and snap.trained_seq == 11
+    np.testing.assert_array_equal(snap.w, np.full(3, 2.0))
+    np.testing.assert_array_equal(snap.alpha, np.full(4, 1.5))
+    # without a manager there is nothing to recover
+    assert SnapshotBook(np.zeros(3)).recover(np.zeros(3)) is None
+
+
+# ---------------------------------------------------------------------------
+# the gated incremental solver path (real solves: own CI leg)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.online
+def test_gate_all_ones_matches_ungated_bit_for_bit():
+    X, y = make_svm_data(48, 12, seed=2)
+    cfg = D3CAConfig(lam=LAM, outer_iters=3, local_steps=8)
+    s = get_solver("d3ca")()
+    plain = s.solve("hinge", X, y, P=2, Q=2, cfg=cfg, record_history=False)
+    gated = s.solve("hinge", X, y, P=2, Q=2, cfg=cfg, record_history=False,
+                    row_gate=np.ones(48, np.float32))
+    np.testing.assert_array_equal(np.asarray(plain.w), np.asarray(gated.w))
+    np.testing.assert_array_equal(np.asarray(plain.alpha),
+                                  np.asarray(gated.alpha))
+
+
+@pytest.mark.online
+def test_gate_freezes_untouched_duals_exactly():
+    X, y = make_svm_data(48, 12, seed=2)
+    cfg = D3CAConfig(lam=LAM, outer_iters=2, local_steps=8)
+    s = get_solver("d3ca")()
+    base = s.solve("hinge", X, y, P=2, Q=2, cfg=cfg, record_history=False)
+    touched = np.arange(36, 48)                   # last partition only
+    res = s.update("hinge", X, y, touched=touched,
+                   warm_start=(base.w, base.alpha), P=2, Q=2, cfg=cfg,
+                   passes=2, record_history=False)
+    a0 = np.asarray(base.alpha)
+    a1 = np.asarray(res.alpha)
+    untouched = np.setdiff1d(np.arange(48), touched)
+    np.testing.assert_array_equal(a1[untouched], a0[untouched])
+    assert np.any(a1[touched] != a0[touched])     # gated-on rows moved
+
+
+@pytest.mark.online
+def test_row_gate_rejected_by_primal_only_solvers():
+    X, y = make_svm_data(24, 8, seed=0)
+    for name in ("radisa", "sfk", "admm"):
+        with pytest.raises(ValueError, match="row-gate"):
+            get_solver(name)().solve("hinge", X, y, P=2, Q=2,
+                                     row_gate=np.ones(24, np.float32))
+    with pytest.raises(ValueError, match="warm_start"):
+        get_solver("d3ca")().update("hinge", X, y, touched=[0],
+                                    warm_start=None, P=2, Q=2)
+
+
+# ---------------------------------------------------------------------------
+# the service loop (real solves: own CI leg)
+# ---------------------------------------------------------------------------
+
+def _service(**kw):
+    from repro.obs import Registry
+    reg = Registry()
+    cfg = OnlineConfig(m=10, capacity=32, P=2, Q=2,
+                       solver_cfg=D3CAConfig(lam=LAM, local_steps=8),
+                       passes=2, **kw)
+    return OnlineSolverService(cfg, registry=reg), reg
+
+
+@pytest.mark.online
+def test_service_end_to_end_improves_and_tracks_lag():
+    svc, reg = _service()
+    assert svc.run_pending() is None              # nothing pending
+    for _ in range(4):
+        svc.submit(*_stream(8, 10))
+        assert svc.version_lag > 0                # admitted, not trained
+        svc.run_pending()
+        assert svc.version_lag == 0
+    assert svc.book.current().version == 4
+    mask = svc.store.filled_mask > 0
+    w = svc.book.current().w
+    f_w = objective("hinge", svc.store.X[mask], svc.store.y[mask], w, LAM)
+    f_0 = objective("hinge", svc.store.X[mask], svc.store.y[mask],
+                    np.zeros(10), LAM)
+    assert f_w < f_0                              # the model learned
+    # the scorer serves the published version
+    assert svc.scorer.w_version == 4
+    Xs, ys = _stream(64, 10)
+    assert np.mean(svc.predict(Xs) * ys > 0) > 0.6
+    snap = reg.snapshot()
+    c = {k.split("{")[0]: v for k, v in snap["counters"].items()}
+    assert c["online/ingested"] == 32 and c["online/updates"] == 4
+    assert c["online/scored"] == 64
+    g = {k.split("{")[0]: v for k, v in snap["gauges"].items()}
+    assert g["online/version_lag"] == 0
+    assert g["online/staleness_s"] >= 0
+    h = {k.split("{")[0]: v for k, v in snap["histograms"].items()}
+    assert h["online/update_s"]["count"] == 4
+    assert h["online/swap_s"]["count"] == 4
+
+
+@pytest.mark.online
+def test_service_sheds_load_and_counts_rejections():
+    svc, reg = _service(queue_capacity=8)
+    svc.submit(*_stream(8, 10))
+    with pytest.raises(QueueFullError):
+        svc.submit(*_stream(4, 10))
+    assert svc.stats()["rejected"] == 4
+    snap = reg.snapshot()
+    c = {k.split("{")[0]: v for k, v in snap["counters"].items()}
+    assert c["online/rejected"] == 4
+
+
+@pytest.mark.online
+def test_service_rejects_solvers_without_row_gate():
+    with pytest.raises(ValueError, match="row-gate"):
+        OnlineSolverService(OnlineConfig(m=4, solver="radisa"))
+
+
+@pytest.mark.online
+def test_scorer_swap_is_atomic_under_concurrent_scoring():
+    """update_weights while score() runs in other threads: every margin
+    batch must be consistent with ONE published version, never a mix."""
+    from repro.serve.scoring import LinearScorer
+    m = 6
+    scorer = LinearScorer(np.full(m, 1.0), None)
+    X = np.eye(m, dtype=np.float32)               # margins == w exactly
+    stop = threading.Event()
+    torn = []
+
+    def reader():
+        while not stop.is_set():
+            margins = scorer.score(X)
+            if len(set(np.round(margins, 6))) != 1:
+                torn.append(margins.copy())
+
+    threads = [threading.Thread(target=reader) for _ in range(2)]
+    for th in threads:
+        th.start()
+    for v in range(2, 200):
+        scorer.update_weights(np.full(m, float(v)), version=v)
+    stop.set()
+    for th in threads:
+        th.join()
+    assert torn == [], f"mixed-version batches: {torn[:3]}"
+    assert scorer.w_version == 199
+
+
+@pytest.mark.online
+def test_service_recover_after_restart(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    cfg = OnlineConfig(m=10, capacity=32, P=2, Q=2,
+                       solver_cfg=D3CAConfig(lam=LAM, local_steps=8))
+    svc = OnlineSolverService(cfg, manager=CheckpointManager(str(tmp_path)))
+    svc.submit(*_stream(8, 10))
+    svc.run_pending()
+    svc.book.flush()
+    w = np.asarray(svc.book.current().w)
+
+    svc2 = OnlineSolverService(cfg, manager=CheckpointManager(str(tmp_path)))
+    assert svc2.recover() == 1
+    np.testing.assert_array_equal(np.asarray(svc2.book.current().w), w)
+    assert svc2.scorer.w_version == 1
+    # and the recovered alpha warm-starts the next update
+    svc2.submit(*_stream(8, 10))
+    assert svc2.run_pending() == 2

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (ADMMConfig, D3CAConfig, RADiSAConfig,
+from repro.core import (ADMMConfig, D3CAConfig, RADiSAConfig, SFKConfig,
                         available_solvers, get_solver, objective,
                         serial_sdca)
 from repro.core.local import local_sdca, local_svrg
@@ -37,7 +37,7 @@ def problem():
 # ---------------------------------------------------------------------------
 
 def test_registry():
-    assert available_solvers() == ["admm", "d3ca", "radisa"]
+    assert available_solvers() == ["admm", "d3ca", "radisa", "sfk"]
     for name in available_solvers():
         cls = get_solver(name)
         assert cls.name == name
@@ -81,6 +81,7 @@ def test_pallas_logistic_raises(problem):
     ("radisa", RADiSAConfig(lam=LAM, gamma=0.03, outer_iters=3, L=12)),
     ("radisa", RADiSAConfig(lam=LAM, gamma=0.03, outer_iters=3, L=12,
                             variant="avg")),
+    ("sfk", SFKConfig(lam=LAM, gamma=0.03, outer_iters=3, L=12)),
     ("admm", ADMMConfig(lam=LAM, rho=LAM, outer_iters=4)),
 ])
 @pytest.mark.parametrize("loss", ["hinge", "squared"])
