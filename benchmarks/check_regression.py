@@ -257,6 +257,10 @@ DEFAULT_ONLINE_BASELINE = os.path.join(
     os.path.dirname(os.path.abspath(__file__)), "baselines",
     "BENCH_online_quick.json")
 
+DEFAULT_FLEET_BASELINE = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "baselines",
+    "BENCH_fleet_quick.json")
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
@@ -274,6 +278,15 @@ def main(argv=None):
                          "(skipped with a note otherwise, so the core "
                          "gate keeps working standalone)")
     ap.add_argument("--online-baseline", default=DEFAULT_ONLINE_BASELINE)
+    ap.add_argument("--fleet-fresh",
+                    default=os.path.join(ROOT, "BENCH_fleet.json"),
+                    help="benchmarks.fleet_bench --quick payload; gated "
+                         "against --fleet-baseline when the file exists "
+                         "(skipped with a note otherwise)")
+    ap.add_argument("--fleet-baseline", default=DEFAULT_FLEET_BASELINE)
+    ap.add_argument("--fleet-min-speedup", type=float, default=3.0,
+                    help="fail when the largest fleet cell's batched-vs-"
+                         "sequential solves/s ratio drops below this")
     args = ap.parse_args(argv)
 
     fresh = load(args.fresh)
@@ -304,6 +317,37 @@ def main(argv=None):
         print(f"[check_regression] online: no {args.online_fresh}; "
               "skipping the online-service gate (run "
               "benchmarks.online_bench --quick to produce it)")
+
+    # fleet gate: the same normalized-ratio machinery over the
+    # fleet_bench quick cells (s_per_iter = fleet seconds per outer
+    # iteration over the whole batch), plus an absolute floor on the
+    # batched-vs-sequential speedup -- the subsystem's reason to exist
+    if os.path.exists(args.fleet_fresh):
+        ffresh = load(args.fleet_fresh)
+        fbase = load(args.fleet_baseline)
+        ffails, flines = compare(ffresh, fbase, args.threshold,
+                                 comm_threshold=args.comm_threshold)
+        failures.extend(f"[fleet] {f}" for f in ffails)
+        print(f"[check_regression] fleet fresh={args.fleet_fresh} "
+              f"baseline={args.fleet_baseline}")
+        for line in flines:
+            print(line)
+        big = max(ffresh.get("cells", {}).values(),
+                  key=lambda c: c.get("tenants", 0), default=None)
+        if big is not None and "speedup" in big:
+            line = (f"  fleet speedup at T={big['tenants']}: "
+                    f"{big['speedup']:.2f}x batched vs sequential")
+            if big["speedup"] < args.fleet_min_speedup:
+                failures.append(
+                    f"[fleet] speedup {big['speedup']:.2f}x at "
+                    f"T={big['tenants']} below the "
+                    f"{args.fleet_min_speedup:.1f}x floor")
+                line += f" (< {args.fleet_min_speedup:.1f}x FLOOR)"
+            print(line)
+    else:
+        print(f"[check_regression] fleet: no {args.fleet_fresh}; "
+              "skipping the fleet gate (run benchmarks.fleet_bench "
+              "--quick to produce it)")
 
     if failures:
         print(f"[check_regression] FAIL ({len(failures)}):",

@@ -1,0 +1,147 @@
+"""Fleet benchmark: batched multi-tenant solves vs a sequential loop.
+
+Measures the point of ``repro.fleet``: T independent tenant problems
+solved as ONE vmapped program (one compiled step, one collective round
+shared by all tenants) against the best sequential alternative -- a
+solo :class:`~repro.core.solver.Solver` with its compiled-program
+cache on, so the loop pays trace/compile once and the comparison
+isolates per-solve dispatch + drive-loop overhead, not compilation.
+
+    PYTHONPATH=src python -m benchmarks.fleet_bench [--quick]
+
+Emits ``BENCH_fleet.json`` (repo root by default):
+
+  * ``cells`` -- one per (solver, engine, tenant count) with
+    ``s_per_iter`` (fleet seconds per outer iteration over the whole
+    batch, the field the regression gate keys on), fleet and
+    sequential solves/s, and the speedup ratio;
+  * a provenance stamp so ``benchmarks.check_regression`` can gate the
+    quick cells against ``benchmarks/baselines/BENCH_fleet_quick.json``.
+
+The quick 32-tenant cell doubles as the PR acceptance check: fleet
+solves/s must be >= 3x the sequential loop.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if ROOT not in sys.path:
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+
+from repro.core import D3CAConfig, get_solver  # noqa: E402
+from repro.data import make_svm_data  # noqa: E402
+from repro.fleet import FleetProblem, FleetSolver, solo_config  # noqa: E402
+
+try:
+    from .common import provenance, save_result
+except ImportError:                     # `python benchmarks/fleet_bench.py`
+    from common import provenance, save_result
+
+
+def make_problems(T, n, m, loss="hinge", lam=0.5):
+    """T tenants, one shape bucket, one shared lam (so the sequential
+    baseline's program cache gets its best case: a single trace)."""
+    probs = []
+    for i in range(T):
+        X, y = make_svm_data(n, m, seed=100 + i)
+        probs.append(FleetProblem(tenant_id=f"t{i}", loss_name=loss,
+                                  X=X, y=y, lam=lam, seed=i))
+    return probs
+
+
+def bench_cell(*, solver, engine, T, n, m, P, Q, cfg, reps):
+    probs = make_problems(T, n, m)
+    fleet = FleetSolver(solver=solver, engine=engine)
+
+    def fleet_once():
+        return fleet.solve_batch(probs, P=P, Q=Q, cfg=cfg,
+                                 record_history=False)
+
+    fleet_once()                                    # compile warmup
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fleet_once()
+    fleet_s = (time.perf_counter() - t0) / reps
+
+    solo = get_solver(solver)(engine=engine, program_cache=True)
+
+    def solo_loop():
+        return [solo.solve(p.loss_name, p.X, p.y, P=P, Q=Q,
+                           cfg=solo_config(cfg, p), record_history=False)
+                for p in probs]
+
+    solo_loop()                                     # compile warmup
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        solo_loop()
+    seq_s = (time.perf_counter() - t0) / reps
+
+    return {
+        "s_per_iter": fleet_s / cfg.outer_iters,
+        "tenants": T,
+        "outer_iters": cfg.outer_iters,
+        "fleet_s": fleet_s,
+        "sequential_s": seq_s,
+        "fleet_solves_per_s": T / fleet_s,
+        "sequential_solves_per_s": T / seq_s,
+        "speedup": seq_s / fleet_s,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small instance + fewer reps (the CI gate "
+                         "compares quick runs only)")
+    ap.add_argument("--out", default=os.path.join(ROOT, "BENCH_fleet.json"))
+    ap.add_argument("--engine", default="simulated",
+                    choices=["simulated", "shard_map"])
+    args = ap.parse_args(argv)
+
+    if args.quick:
+        n, m, iters, reps = 64, 24, 6, 2
+        grid = [("d3ca", 8), ("d3ca", 32), ("radisa", 8)]
+    else:
+        n, m, iters, reps = 256, 64, 10, 3
+        grid = [("d3ca", 8), ("d3ca", 32), ("d3ca", 128), ("radisa", 32)]
+    P, Q = 2, 2
+
+    cells = {}
+    for solver, T in grid:
+        if solver == "d3ca":
+            cfg = D3CAConfig(lam=0.5, local_steps=8, outer_iters=iters)
+        else:
+            cfg = get_solver(solver).config_cls(
+                lam=0.5, gamma=0.125, L=8, outer_iters=iters)
+        key = f"{solver}/{args.engine}/T{T}"
+        cell = bench_cell(solver=solver, engine=args.engine, T=T, n=n,
+                          m=m, P=P, Q=Q, cfg=cfg, reps=reps)
+        cells[key] = cell
+        print(f"{key}: fleet {cell['fleet_solves_per_s']:.1f} solves/s "
+              f"vs sequential {cell['sequential_solves_per_s']:.1f} "
+              f"({cell['speedup']:.1f}x)")
+
+    out = {
+        "n": n, "m": m, "P": P, "Q": Q, "outer_iters": iters,
+        "reps": reps,
+        "note": "s_per_iter = fleet seconds per outer iteration over "
+                "the whole tenant batch; speedup = sequential loop "
+                "(program-cached solo solver) over fleet, same "
+                "problems",
+        "provenance": provenance(args.quick),
+        "cells": cells,
+    }
+    with open(args.out, "w") as fh:
+        json.dump(out, fh, indent=1)
+    save_result("BENCH_fleet", out)
+    print(f"wrote {args.out}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -19,6 +19,11 @@ Emits ``BENCH_online.json`` (repo root by default):
   * a provenance stamp (``benchmarks.common.provenance``) so
     ``benchmarks.check_regression`` can gate the quick cells against
     ``benchmarks/baselines/BENCH_online_quick.json``.
+
+The baseline reflects the per-update compiled-program cache in
+``Solver.update`` (one trace per (shape, config) across the whole
+stream): before it every gated update retraced, costing ~1.8 s per
+update on the quick instance; with it an update is ~20 ms.
 """
 from __future__ import annotations
 

@@ -45,9 +45,9 @@ from jax.sharding import PartitionSpec as P
 
 from .comm import CommSchedule
 from .engines import (CellProgram, EngineProgram, SparseShardMapData,
-                      drive_with_callback, grid_bind_state, grid_program,
-                      mesh_local_step, mesh_program, mesh_step_fn,
-                      overlap_donates)
+                      cached_build, drive_with_callback, grid_bind_state,
+                      grid_program, mesh_local_step, mesh_program,
+                      mesh_step_fn, overlap_donates)
 from .losses import Loss, get_loss
 from .partition import (DoublyPartitioned, SparseDoublyPartitioned,
                         ell_gather, ell_scatter_add)
@@ -92,14 +92,22 @@ def admm_schedule() -> CommSchedule:
 
 
 def admm_cell_program(loss_name: str, cfg: ADMMConfig, *, n: int, m_q: int,
-                      sparse: bool = False) -> CellProgram:
+                      sparse: bool = False,
+                      per_problem: bool = False) -> CellProgram:
     """The ONE ADMM program every engine executes.
 
     Per-cell data: ``(x_b[, vals_b], y_b, mask_b, chol_b (1, m_q, m_q))``;
     per-cell state: ``(s_b (n_p, 1), u_b (n_p, 1), w_b (m_q,))``.
+    ``per_problem=True`` appends a runtime ``n_v`` scalar to the data
+    tuple (the fleet path); per-tenant ``lam`` needs no runtime scalar
+    because it only enters through the per-tenant Cholesky factor.
     """
 
     def cell(comm, t, data, state):
+        if per_problem:
+            *data, n_t = data
+        else:
+            n_t = n
         if sparse:
             cols_b, vals_b, y_b, mask_b, chol_b = data
             matvec = lambda w: ell_gather(w, cols_b, vals_b)   # noqa: E731
@@ -110,7 +118,7 @@ def admm_cell_program(loss_name: str, cfg: ADMMConfig, *, n: int, m_q: int,
             colsum = lambda b: b @ x_b                         # noqa: E731
         s_b, u_b, w_b = state
         Qn = comm.axis_size("model")
-        c_prox = Qn / (cfg.rho * n)   # f_p carries the global 1/n factor
+        c_prox = Qn / (cfg.rho * n_t)  # f_p carries the global 1/n factor
         s_b, u_b = s_b[:, 0], u_b[:, 0]
         cvec = matvec(w_b) - u_b
         v = comm("v", cvec)
@@ -125,7 +133,8 @@ def admm_cell_program(loss_name: str, cfg: ADMMConfig, *, n: int, m_q: int,
 
     x_specs = ((("data", "model"), ("data", "model")) if sparse
                else (("data", "model"),))
-    data_specs = x_specs + (("data",), ("data",), ("model",))
+    pp_specs = (((),) if per_problem else ())
+    data_specs = x_specs + (("data",), ("data",), ("model",)) + pp_specs
     state_specs = (("data", "model"), ("data", "model"), ("model",))
     return CellProgram(admm_schedule(), cell, data_specs, state_specs)
 
@@ -160,7 +169,7 @@ def admm_setup_simulated(data, cfg: ADMMConfig):
 def admm_simulated_program(loss: Loss, data: DoublyPartitioned,
                            cfg: ADMMConfig, *, chol=None,
                            w0=None, compression=None,
-                           topology=None) -> EngineProgram:
+                           topology=None, cache=None) -> EngineProgram:
     """Named-vmap grid engine.  State: (s (P,Q,n_p,1), u (P,Q,n_p,1),
     w_blocks (Q, m_q)).  The Cholesky setup runs at build time.
     ``data`` may be dense or sparse (padded-ELL cells); ``compression``
@@ -175,8 +184,10 @@ def admm_simulated_program(loss: Loss, data: DoublyPartitioned,
     # blocked layout: one leading block axis per logical axis of the
     # dim-spec, per-cell extents in place -- chol spec is ("model",)
     gdata = (*x_parts, data.y_blocks, data.mask, chol[:, None])
-    step = grid_program(cellprog, Pn, Qn, compression=compression,
-                        topology=topology)
+    step = cached_build(cache, "step",
+                        lambda: grid_program(cellprog, Pn, Qn,
+                                             compression=compression,
+                                             topology=topology))
 
     w_init = (jnp.zeros((Qn, data.m_q)) if w0 is None
               else data.w_to_blocks(jnp.asarray(w0)))
@@ -186,7 +197,9 @@ def admm_simulated_program(loss: Loss, data: DoublyPartitioned,
                                           Pn=Pn, Qn=Qn,
                                           compression=compression,
                                           topology=topology)
-    local = grid_program(cellprog, Pn, Qn, comm_local=True)
+    local = cached_build(cache, "local",
+                         lambda: grid_program(cellprog, Pn, Qn,
+                                              comm_local=True))
     wrapped = full0 is not state0
     return EngineProgram(
         state=full0,
@@ -288,7 +301,7 @@ def admm_setup_distributed_sparse(mesh, cols, vals, m_q: int,
 def admm_shard_map_program(loss: Loss, sdata, cfg: ADMMConfig,
                            *, w0=None, staleness: int = 0,
                            compression=None, overlap: bool = False,
-                           topology=None) -> EngineProgram:
+                           topology=None, cache=None) -> EngineProgram:
     """Mesh engine.  State: ((s (n_pad, Q), u (n_pad, Q), w (m_pad,)),
     comm_state), all sharded.
 
@@ -317,14 +330,18 @@ def admm_shard_map_program(loss: Loss, sdata, cfg: ADMMConfig,
     zeros_su = jax.device_put(jnp.zeros((sdata.n_pad, sdata.Q)), su_sharding)
     w_init = sdata.zeros_model() if w0 is None else sdata.pad_w(w0)
     state0 = (zeros_su, zeros_su, w_init)
-    step, comm0, acct = mesh_program(
-        cellprog, mesh, mdata, state0,
-        data_axis=sdata.data_axis, model_axis=sdata.model_axis,
-        staleness=staleness, compression=compression,
-        overlap=overlap, topology=topology)
-    local = mesh_local_step(cellprog, mesh,
-                            data_axis=sdata.data_axis,
-                            model_axis=sdata.model_axis)
+    step, comm0, acct = cached_build(
+        cache, "step",
+        lambda: mesh_program(
+            cellprog, mesh, mdata, state0,
+            data_axis=sdata.data_axis, model_axis=sdata.model_axis,
+            staleness=staleness, compression=compression,
+            overlap=overlap, topology=topology))
+    local = cached_build(
+        cache, "local",
+        lambda: mesh_local_step(cellprog, mesh,
+                                data_axis=sdata.data_axis,
+                                model_axis=sdata.model_axis))
     is_overlap = bool(overlap) and staleness > 0
     return EngineProgram(
         state=(state0, comm0),

@@ -33,9 +33,9 @@ import jax.numpy as jnp
 
 from .comm import CommSchedule
 from .engines import (CellProgram, EngineProgram, SparseShardMapData,
-                      drive_with_callback, grid_bind_state, grid_program,
-                      mesh_local_step, mesh_program, mesh_step_fn,
-                      overlap_donates)
+                      cached_build, drive_with_callback, grid_bind_state,
+                      grid_program, mesh_local_step, mesh_program,
+                      mesh_step_fn, overlap_donates)
 from .local import local_sdca, local_sdca_sparse
 from .losses import Loss, get_loss
 from .partition import (DoublyPartitioned, SparseDoublyPartitioned,
@@ -61,7 +61,8 @@ def d3ca_schedule() -> CommSchedule:
 def d3ca_cell_program(loss: Loss, cfg: D3CAConfig, *, n: int, n_p: int,
                       m_q: Optional[int] = None, sparse: bool = False,
                       local_backend: str = "ref",
-                      gated: bool = False) -> CellProgram:
+                      gated: bool = False,
+                      per_problem: bool = False) -> CellProgram:
     """The ONE D3CA program every engine executes.
 
     Per-cell data: ``(key0, x_b[, vals_b], y_b, mask_b[, gate_b])`` -- an
@@ -76,6 +77,11 @@ def d3ca_cell_program(loss: Loss, cfg: D3CAConfig, *, n: int, n_p: int,
     bit-identical to the ungated program.  This is the incremental
     online-update path: warm-started passes touch only the cells whose
     row partition received new observations.
+
+    ``per_problem=True`` appends runtime scalars ``(lam_v, n_v)`` to the
+    data tuple and uses them in place of ``cfg.lam`` / ``n`` everywhere;
+    this is the fleet path, where the tenant vmap feeds each tenant its
+    own regularizer and sample count through the same traced program.
     """
     lam = cfg.lam
     steps = cfg.local_steps or n_p
@@ -83,6 +89,10 @@ def d3ca_cell_program(loss: Loss, cfg: D3CAConfig, *, n: int, n_p: int,
         raise ValueError("sparse D3CA cells need m_q for the scatter-add")
 
     def cell(comm, t, data, state):
+        if per_problem:
+            *data, lam_t, n_t = data
+        else:
+            lam_t, n_t = lam, n
         if sparse:
             key0, cols_b, vals_b, y_b, mask_b, *rest = data
             x_parts = (cols_b, vals_b)
@@ -95,12 +105,12 @@ def d3ca_cell_program(loss: Loss, cfg: D3CAConfig, *, n: int, n_p: int,
         a_b, w_b = state
         Pn = comm.axis_size("data")
         Qn = comm.axis_size("model")
-        beta = lam / t
+        beta = lam_t / t
         key_t = jax.random.fold_in(key0, t)
         p = comm.axis_index("data")
         key_p = jax.random.fold_in(key_t, p)   # coordinate order per p
         dalpha = local(loss, *x_parts, y_b, step_mask, a_b, w_b,
-                       lam=lam, n=n, Q=Qn, steps=steps, key=key_p,
+                       lam=lam_t, n=n_t, Q=Qn, steps=steps, key=key_p,
                        step_mode=cfg.step_mode, beta=beta,
                        backend=local_backend)
         # step 6: alpha_[p,.] += (1/P) mean_q dalpha[p, q]
@@ -109,13 +119,15 @@ def d3ca_cell_program(loss: Loss, cfg: D3CAConfig, *, n: int, n_p: int,
         am = a_new * mask_b
         contrib = (ell_scatter_add(m_q, cols_b, vals_b, am) if sparse
                    else am @ x_b)
-        w_new = comm("w_contrib", contrib) / (lam * n)
+        w_new = comm("w_contrib", contrib) / (lam_t * n_t)
         return a_new, w_new
 
     x_specs = ((("data", "model"), ("data", "model")) if sparse
                else (("data", "model"),))
     gate_specs = ((("data",),) if gated else ())
-    data_specs = ((),) + x_specs + (("data",), ("data",)) + gate_specs
+    pp_specs = (((), ()) if per_problem else ())
+    data_specs = ((),) + x_specs + (("data",), ("data",)) + gate_specs \
+        + pp_specs
     state_specs = (("data",), ("model",))
     return CellProgram(d3ca_schedule(), cell, data_specs, state_specs)
 
@@ -128,7 +140,7 @@ def d3ca_simulated_program(loss: Loss, data: DoublyPartitioned,
                            cfg: D3CAConfig, *, local_backend: str = "ref",
                            w0=None, alpha0=None,
                            compression=None, topology=None,
-                           row_gate=None) -> EngineProgram:
+                           row_gate=None, cache=None) -> EngineProgram:
     """Named-vmap grid engine.  State: (alpha (P, n_p), w_blocks (Q, m_q)).
 
     ``data`` may be a dense :class:`DoublyPartitioned` or a sparse
@@ -150,8 +162,10 @@ def d3ca_simulated_program(loss: Loss, data: DoublyPartitioned,
     gate_parts = (() if row_gate is None
                   else (data.alpha_to_blocks(jnp.asarray(row_gate)),))
     gdata = (key0, *x_parts, data.y_blocks, data.mask, *gate_parts)
-    step = grid_program(cellprog, Pn, Qn, compression=compression,
-                        topology=topology)
+    step = cached_build(cache, "step",
+                        lambda: grid_program(cellprog, Pn, Qn,
+                                             compression=compression,
+                                             topology=topology))
 
     alpha_init = (jnp.zeros((Pn, data.n_p)) if alpha0 is None
                   else data.alpha_to_blocks(jnp.asarray(alpha0)))
@@ -162,7 +176,9 @@ def d3ca_simulated_program(loss: Loss, data: DoublyPartitioned,
                                           Pn=Pn, Qn=Qn,
                                           compression=compression,
                                           topology=topology)
-    local = grid_program(cellprog, Pn, Qn, comm_local=True)
+    local = cached_build(cache, "local",
+                         lambda: grid_program(cellprog, Pn, Qn,
+                                              comm_local=True))
     wrapped = full0 is not state0
     return EngineProgram(
         state=full0,
@@ -238,7 +254,8 @@ def d3ca_shard_map_program(loss: Loss, sdata, cfg: D3CAConfig,
                            *, local_backend: str = "ref",
                            w0=None, alpha0=None, staleness: int = 0,
                            compression=None, overlap: bool = False,
-                           topology=None, row_gate=None) -> EngineProgram:
+                           topology=None, row_gate=None,
+                           cache=None) -> EngineProgram:
     """Mesh engine.  State: ((alpha (n_pad,), w (m_pad,)), comm_state),
     all sharded (comm_state carries staleness rings and/or EF
     residuals).  ``sdata`` is a :class:`ShardMapData` or
@@ -263,14 +280,18 @@ def d3ca_shard_map_program(loss: Loss, sdata, cfg: D3CAConfig,
     alpha_init = (sdata.zeros_data() if alpha0 is None
                   else sdata.pad_alpha(alpha0))
     w_init = sdata.zeros_model() if w0 is None else sdata.pad_w(w0)
-    step, comm0, acct = mesh_program(
-        cellprog, sdata.mesh, mdata, (alpha_init, w_init),
-        data_axis=sdata.data_axis, model_axis=sdata.model_axis,
-        staleness=staleness, compression=compression,
-        overlap=overlap, topology=topology)
-    local = mesh_local_step(cellprog, sdata.mesh,
-                            data_axis=sdata.data_axis,
-                            model_axis=sdata.model_axis)
+    step, comm0, acct = cached_build(
+        cache, "step",
+        lambda: mesh_program(
+            cellprog, sdata.mesh, mdata, (alpha_init, w_init),
+            data_axis=sdata.data_axis, model_axis=sdata.model_axis,
+            staleness=staleness, compression=compression,
+            overlap=overlap, topology=topology))
+    local = cached_build(
+        cache, "local",
+        lambda: mesh_local_step(cellprog, sdata.mesh,
+                                data_axis=sdata.data_axis,
+                                model_axis=sdata.model_axis))
     is_overlap = bool(overlap) and staleness > 0
     return EngineProgram(
         state=((alpha_init, w_init), comm0),

@@ -452,6 +452,22 @@ def _drop_replicas(out, state_specs):
     return jax.tree_util.tree_unflatten(treedef, kept)
 
 
+def cached_build(cache, key, build):
+    """Memoize ``build()`` under ``key`` in ``cache`` (a plain dict owned
+    by the caller); ``cache=None`` just calls ``build()``.
+
+    The program builders use this to reuse their jitted step callables
+    across repeated builds with constant shapes (the online update loop,
+    the fleet's sequential baseline): a reused ``jax.jit`` object hits
+    the compiled-executable cache instead of re-tracing from scratch.
+    """
+    if cache is None:
+        return build()
+    if key not in cache:
+        cache[key] = build()
+    return cache[key]
+
+
 def grid_program(cellprog: CellProgram, Pn: int, Qn: int, *,
                  compression=None, comm_local: bool = False,
                  topology=None):

@@ -167,6 +167,9 @@ def _log_sdca_delta(alpha, x_sq, zloc, y, lam, n, Q, beta=None, newton_iters=8):
     denom_x = x_sq if beta is None else beta
     q = jnp.maximum(denom_x, 1e-12) / (lam * n)
     eps = 1e-6
+    # padded rows carry y = 0; dividing by y would poison the masked-out
+    # delta with NaN (0 * inf), so divide by a harmless stand-in there
+    safe_y = jnp.where(y == 0, 1.0, y)
 
     def body(D, _):
         t = jnp.clip((alpha + D) * y, eps, 1.0 - eps)
@@ -176,13 +179,13 @@ def _log_sdca_delta(alpha, x_sq, zloc, y, lam, n, Q, beta=None, newton_iters=8):
         D_new = D - g / gp
         # project back so that (alpha + D) y stays inside (0, 1)
         t_new = jnp.clip((alpha + D_new) * y, eps, 1.0 - eps)
-        D_new = t_new / y - alpha
+        D_new = t_new / safe_y - alpha
         return D_new, None
 
     D0 = jnp.zeros_like(alpha)
     # start strictly inside the box
     t0 = jnp.clip((alpha + D0) * y, eps, 1.0 - eps)
-    D0 = t0 / y - alpha
+    D0 = t0 / safe_y - alpha
     D, _ = jax.lax.scan(body, D0, None, length=newton_iters)
     return D
 

@@ -38,9 +38,9 @@ import jax.numpy as jnp
 
 from .comm import CommSchedule
 from .engines import (CellProgram, EngineProgram, SparseShardMapData,
-                      drive_with_callback, grid_bind_state, grid_program,
-                      mesh_local_step, mesh_program, mesh_step_fn,
-                      overlap_donates)
+                      cached_build, drive_with_callback, grid_bind_state,
+                      grid_program, mesh_local_step, mesh_program,
+                      mesh_step_fn, overlap_donates)
 from .local import local_svrg, local_svrg_sparse
 from .losses import Loss, get_loss
 from .partition import (DoublyPartitioned, SparseDoublyPartitioned,
@@ -86,18 +86,24 @@ def _check_subblocks(m_q: int, Pn: int, avg: bool):
 
 def radisa_cell_program(loss: Loss, cfg: RADiSAConfig, *, n: int, n_p: int,
                         m_q: int, sparse: bool = False,
-                        local_backend: str = "ref") -> CellProgram:
+                        local_backend: str = "ref",
+                        per_problem: bool = False) -> CellProgram:
     """The ONE RADiSA program every engine executes.
 
     Per-cell data: ``(key0, x_b[, vals_b], y_b, mask_b)``; per-cell
     state: ``w_b (m_q,)``.  The sub-block window of the sparse cell is
     selected inside the local solver by masking entry columns (an ELL
-    row cannot be column-sliced)."""
+    row cannot be column-sliced).  ``per_problem=True`` appends runtime
+    ``(lam_v, n_v)`` scalars to the data tuple (the fleet path)."""
     lam = cfg.lam
     L = cfg.L or n_p
     avg = cfg.variant == "avg"
 
     def cell(comm, t, data, state):
+        if per_problem:
+            *data, lam_t, n_t = data
+        else:
+            lam_t, n_t = lam, n
         if sparse:
             key0, cols_b, vals_b, y_b, mask_b = data
             x_parts = (cols_b, vals_b)
@@ -120,7 +126,7 @@ def radisa_cell_program(loss: Loss, cfg: RADiSAConfig, *, n: int, n_p: int,
         gz = loss.grad(z, y_b) * mask_b
         gcol = (ell_scatter_add(m_q, cols_b, vals_b, gz) if sparse
                 else gz @ x_b)
-        mu = comm("grad", gcol) / n + lam * w_b              # (m_q,)
+        mu = comm("grad", gcol) / n_t + lam_t * w_b          # (m_q,)
         # (3) sub-block assignment (shared permutation) + local SVRG
         perm = jax.random.permutation(jax.random.fold_in(key_t, 0), Pn)
         p = comm.axis_index("data")
@@ -139,7 +145,7 @@ def radisa_cell_program(loss: Loss, cfg: RADiSAConfig, *, n: int, n_p: int,
             w_anchor = jax.lax.dynamic_slice(w_b, (lo,), (m_sub,))
             mu_sub = jax.lax.dynamic_slice(mu, (lo,), (m_sub,))
         w_new = local(loss, *x_parts, y_b, mask_b, z, w_anchor, mu_sub,
-                      lam=lam, L=L, eta=eta, key=key_pq, lo=lo_arg,
+                      lam=lam_t, L=L, eta=eta, key=key_pq, lo=lo_arg,
                       backend=local_backend)
         # (4) recombine
         if avg:
@@ -151,7 +157,8 @@ def radisa_cell_program(loss: Loss, cfg: RADiSAConfig, *, n: int, n_p: int,
 
     x_specs = ((("data", "model"), ("data", "model")) if sparse
                else (("data", "model"),))
-    data_specs = ((),) + x_specs + (("data",), ("data",))
+    pp_specs = (((), ()) if per_problem else ())
+    data_specs = ((),) + x_specs + (("data",), ("data",)) + pp_specs
     state_specs = ("model",)
     return CellProgram(radisa_schedule(cfg.variant), cell, data_specs,
                        state_specs)
@@ -165,7 +172,7 @@ def radisa_simulated_program(loss: Loss, data: DoublyPartitioned,
                              cfg: RADiSAConfig, *,
                              local_backend: str = "ref",
                              w0=None, compression=None,
-                             topology=None) -> EngineProgram:
+                             topology=None, cache=None) -> EngineProgram:
     """Named-vmap grid engine.  State: w_blocks (Q, m_q).
 
     Requires P | m_q (pre-pad with ``partition(..., m_multiple=P*Q)``).
@@ -182,8 +189,10 @@ def radisa_simulated_program(loss: Loss, data: DoublyPartitioned,
     key0 = jax.random.PRNGKey(cfg.seed)
     x_parts = (data.cols, data.vals) if sparse else (data.x_blocks,)
     gdata = (key0, *x_parts, data.y_blocks, data.mask)
-    step = grid_program(cellprog, Pn, Qn, compression=compression,
-                        topology=topology)
+    step = cached_build(cache, "step",
+                        lambda: grid_program(cellprog, Pn, Qn,
+                                             compression=compression,
+                                             topology=topology))
 
     w_init = (jnp.zeros((Qn, data.m_q)) if w0 is None
               else data.w_to_blocks(jnp.asarray(w0)))
@@ -191,7 +200,9 @@ def radisa_simulated_program(loss: Loss, data: DoublyPartitioned,
                                           Pn=Pn, Qn=Qn,
                                           compression=compression,
                                           topology=topology)
-    local = grid_program(cellprog, Pn, Qn, comm_local=True)
+    local = cached_build(cache, "local",
+                         lambda: grid_program(cellprog, Pn, Qn,
+                                              comm_local=True))
     wrapped = full0 is not w_init
     return EngineProgram(
         state=full0,
@@ -283,7 +294,7 @@ def radisa_shard_map_program(loss: Loss, sdata, cfg: RADiSAConfig, *,
                              local_backend: str = "ref",
                              w0=None, staleness: int = 0,
                              compression=None, overlap: bool = False,
-                             topology=None) -> EngineProgram:
+                             topology=None, cache=None) -> EngineProgram:
     """Mesh engine.  State: (w (m_pad,) sharded over model, comm_state).
     ``sdata`` is a :class:`ShardMapData` or :class:`SparseShardMapData`;
     ``staleness=tau > 0`` selects the bounded-staleness async policy;
@@ -301,14 +312,18 @@ def radisa_shard_map_program(loss: Loss, sdata, cfg: RADiSAConfig, *,
     x_parts = (sdata.cols, sdata.vals) if sparse else (sdata.x,)
     mdata = (key0, *x_parts, sdata.y, sdata.mask)
     w_init = sdata.zeros_model() if w0 is None else sdata.pad_w(w0)
-    step, comm0, acct = mesh_program(
-        cellprog, sdata.mesh, mdata, w_init,
-        data_axis=sdata.data_axis, model_axis=sdata.model_axis,
-        staleness=staleness, compression=compression,
-        overlap=overlap, topology=topology)
-    local = mesh_local_step(cellprog, sdata.mesh,
-                            data_axis=sdata.data_axis,
-                            model_axis=sdata.model_axis)
+    step, comm0, acct = cached_build(
+        cache, "step",
+        lambda: mesh_program(
+            cellprog, sdata.mesh, mdata, w_init,
+            data_axis=sdata.data_axis, model_axis=sdata.model_axis,
+            staleness=staleness, compression=compression,
+            overlap=overlap, topology=topology))
+    local = cached_build(
+        cache, "local",
+        lambda: mesh_local_step(cellprog, sdata.mesh,
+                                data_axis=sdata.data_axis,
+                                model_axis=sdata.model_axis))
     is_overlap = bool(overlap) and staleness > 0
     return EngineProgram(
         state=(w_init, comm0),

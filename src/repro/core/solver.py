@@ -150,7 +150,8 @@ class Solver:
 
     def __init__(self, engine: str = "simulated", local_backend: str = "ref",
                  block_format: str = "dense", staleness: int = 0,
-                 compression=None, topology=None):
+                 compression=None, topology=None,
+                 program_cache: bool = False):
         engine = ENGINE_ALIASES.get(engine, engine)
         if engine not in ENGINES:
             raise ValueError(f"engine={engine!r}; expected one of {ENGINES}")
@@ -185,6 +186,15 @@ class Solver:
         self.topology = as_topology(topology)
         #: current CompressionSchedule stage (policies are per-stage)
         self._stage = 0
+        #: reuse jitted step callables across repeated program builds
+        #: with constant shapes (always on inside :meth:`update`, where
+        #: shapes are constant by design).  Keyed on (solver, engine,
+        #: loss, cfg-minus-outer_iters, backend, format, gate-ness,
+        #: shapes, grid); bypassed under compression / topology /
+        #: staleness / overlap, whose programs carry per-build device
+        #: state (EF residuals, rings, donated buffers).
+        self.program_cache = bool(program_cache)
+        self._prog_cache: Dict = {}
 
     @property
     def compression_spec(self) -> Optional[str]:
@@ -203,12 +213,29 @@ class Solver:
         return self.topology.spec if self.topology is not None else None
 
     # ---- subclass hooks ---------------------------------------------------
-    def _simulated_program(self, loss, data, cfg, w0, alpha0) -> EngineProgram:
+    def _simulated_program(self, loss, data, cfg, w0, alpha0,
+                           cache=None) -> EngineProgram:
         raise NotImplementedError
 
     def _shard_map_program(self, loss, sdata, cfg, w0, alpha0,
-                           staleness: int = 0) -> EngineProgram:
+                           staleness: int = 0, cache=None) -> EngineProgram:
         raise NotImplementedError
+
+    def _build_cache(self, loss_name, cfg, X, P, Q, mesh, gated: bool):
+        """The per-key dict the program builders memoize their jitted
+        steps in, or None when caching is off / unsafe (compression,
+        topology, staleness and overlap programs carry per-build device
+        state -- EF residuals, staleness rings, donated ring slots)."""
+        if not self.program_cache:
+            return None
+        if (self.active_policy is not None or self.topology is not None
+                or self.staleness > 0 or self.engine == "overlap"):
+            return None
+        key = (self.name, self.engine, loss_name,
+               dataclasses.replace(cfg, outer_iters=0),
+               self.local_backend, self.block_format, gated,
+               tuple(X.shape), P, Q, mesh)
+        return self._prog_cache.setdefault(key, {})
 
     # ---- program construction --------------------------------------------
     def program(self, loss_name: str, X, y, *, P: int = None, Q: int = None,
@@ -256,6 +283,8 @@ class Solver:
                 "gated warm-started passes are a dual-solver feature "
                 "(use 'd3ca')")
         gate_kw = {} if row_gate is None else {"row_gate": row_gate}
+        cache = self._build_cache(loss_name, cfg, X, P, Q, mesh,
+                                  row_gate is not None)
         w0, alpha0 = _unpack_warm_start(warm_start)
         sparse = self.block_format == "sparse"
         topo = self.topology
@@ -272,7 +301,7 @@ class Solver:
             else:
                 data = partition(X, y, P, Q, m_multiple=P * Q)
             return self._simulated_program(loss, data, cfg, w0, alpha0,
-                                           **gate_kw)
+                                           cache=cache, **gate_kw)
         if mesh is None:
             if P is None or Q is None:
                 raise ValueError(f"engine={self.engine!r} needs a mesh "
@@ -299,7 +328,8 @@ class Solver:
         sdata = prep(mesh, X, y, data_axis=data_axis,
                      model_axis=model_axis, m_multiple=Pn * Qn)
         return self._shard_map_program(loss, sdata, cfg, w0, alpha0,
-                                       staleness=self.staleness, **gate_kw)
+                                       staleness=self.staleness,
+                                       cache=cache, **gate_kw)
 
     # ---- the shared outer driver ------------------------------------------
     def solve(self, loss_name: str, X, y, *, P: int = None, Q: int = None,
@@ -396,6 +426,11 @@ class Solver:
         alpha is frozen, but the primal-dual map still sums the full
         dual, so the returned ``w`` is exact for the whole buffer.
 
+        The compiled-program cache is always on here: the observation
+        buffer has a constant shape by design, so every update after the
+        first reuses the previously traced+compiled step instead of
+        paying the ~seconds of per-update program rebuild.
+
         Args:
           loss_name, X, y, P, Q, cfg, mesh: see :meth:`solve`.  ``X``
             is the full observation buffer (constant shape across
@@ -423,10 +458,15 @@ class Solver:
         gate[np.asarray(touched, dtype=np.int64)] = 1.0
         cfg = cfg if cfg is not None else self.config_cls()
         cfg = dataclasses.replace(cfg, outer_iters=int(passes))
-        return self.solve(loss_name, X, y, P=P, Q=Q, cfg=cfg, mesh=mesh,
-                          warm_start=warm_start, row_gate=gate,
-                          tracer=tracer, registry=registry,
-                          record_history=record_history)
+        prev_cache = self.program_cache
+        self.program_cache = True
+        try:
+            return self.solve(loss_name, X, y, P=P, Q=Q, cfg=cfg, mesh=mesh,
+                              warm_start=warm_start, row_gate=gate,
+                              tracer=tracer, registry=registry,
+                              record_history=record_history)
+        finally:
+            self.program_cache = prev_cache
 
     def _solve_stage(self, loss_name: str, X, y, *, P: int = None,
                      Q: int = None, cfg=None, mesh=None, warm_start=None,
@@ -671,16 +711,16 @@ class D3CASolver(Solver):
     make_step = staticmethod(make_d3ca_step)   # for dry-run lowering
 
     def _simulated_program(self, loss, data, cfg, w0, alpha0,
-                           row_gate=None):
+                           row_gate=None, cache=None):
         return d3ca_simulated_program(loss, data, cfg,
                                       local_backend=self.local_backend,
                                       w0=w0, alpha0=alpha0,
                                       compression=self.active_policy,
                                       topology=self.topology,
-                                      row_gate=row_gate)
+                                      row_gate=row_gate, cache=cache)
 
     def _shard_map_program(self, loss, sdata, cfg, w0, alpha0,
-                           staleness: int = 0, row_gate=None):
+                           staleness: int = 0, row_gate=None, cache=None):
         return d3ca_shard_map_program(loss, sdata, cfg,
                                       local_backend=self.local_backend,
                                       w0=w0, alpha0=alpha0,
@@ -688,7 +728,7 @@ class D3CASolver(Solver):
                                       compression=self.active_policy,
                                       overlap=self.engine == "overlap",
                                       topology=self.topology,
-                                      row_gate=row_gate)
+                                      row_gate=row_gate, cache=cache)
 
 
 @register_solver
@@ -697,21 +737,23 @@ class RADiSASolver(Solver):
     config_cls = RADiSAConfig
     make_step = staticmethod(make_radisa_step)
 
-    def _simulated_program(self, loss, data, cfg, w0, alpha0):
+    def _simulated_program(self, loss, data, cfg, w0, alpha0, cache=None):
         return radisa_simulated_program(loss, data, cfg,
                                         local_backend=self.local_backend,
                                         w0=w0,
                                         compression=self.active_policy,
-                                        topology=self.topology)
+                                        topology=self.topology,
+                                        cache=cache)
 
     def _shard_map_program(self, loss, sdata, cfg, w0, alpha0,
-                           staleness: int = 0):
+                           staleness: int = 0, cache=None):
         return radisa_shard_map_program(loss, sdata, cfg,
                                         local_backend=self.local_backend,
                                         w0=w0, staleness=staleness,
                                         compression=self.active_policy,
                                         overlap=self.engine == "overlap",
-                                        topology=self.topology)
+                                        topology=self.topology,
+                                        cache=cache)
 
 
 @register_solver
@@ -724,21 +766,21 @@ class SFKSolver(Solver):
     config_cls = SFKConfig
     make_step = staticmethod(make_sfk_step)
 
-    def _simulated_program(self, loss, data, cfg, w0, alpha0):
+    def _simulated_program(self, loss, data, cfg, w0, alpha0, cache=None):
         return sfk_simulated_program(loss, data, cfg,
                                      local_backend=self.local_backend,
                                      w0=w0,
                                      compression=self.active_policy,
-                                     topology=self.topology)
+                                     topology=self.topology, cache=cache)
 
     def _shard_map_program(self, loss, sdata, cfg, w0, alpha0,
-                           staleness: int = 0):
+                           staleness: int = 0, cache=None):
         return sfk_shard_map_program(loss, sdata, cfg,
                                      local_backend=self.local_backend,
                                      w0=w0, staleness=staleness,
                                      compression=self.active_policy,
                                      overlap=self.engine == "overlap",
-                                     topology=self.topology)
+                                     topology=self.topology, cache=cache)
 
 
 @register_solver
@@ -748,15 +790,15 @@ class ADMMSolver(Solver):
     uses_local_backend = False     # knob accepted, inner solve is Cholesky
     make_step = staticmethod(make_admm_step)
 
-    def _simulated_program(self, loss, data, cfg, w0, alpha0):
+    def _simulated_program(self, loss, data, cfg, w0, alpha0, cache=None):
         return admm_simulated_program(loss, data, cfg, w0=w0,
                                       compression=self.active_policy,
-                                      topology=self.topology)
+                                      topology=self.topology, cache=cache)
 
     def _shard_map_program(self, loss, sdata, cfg, w0, alpha0,
-                           staleness: int = 0):
+                           staleness: int = 0, cache=None):
         return admm_shard_map_program(loss, sdata, cfg, w0=w0,
                                       staleness=staleness,
                                       compression=self.active_policy,
                                       overlap=self.engine == "overlap",
-                                      topology=self.topology)
+                                      topology=self.topology, cache=cache)

@@ -1,0 +1,34 @@
+"""Multi-tenant batched solves: T independent problems, one compiled step.
+
+The fleet subsystem packs many small independent problems
+(per-tenant ``(X_t, y_t, loss, lam_t)``) into constant-shape
+tenant-major arrays and vmaps the existing per-solver
+:class:`~repro.core.engines.CellProgram` over the tenant axis *inside*
+each P x Q cell.  All tenants then share one CommSchedule round per
+collective and one compiled outer step -- amortizing both the wire and
+the trace/compile cost across the whole batch.
+
+  * :mod:`repro.fleet.batch`     -- problems, shape buckets, the tenant
+    spec transform + cell-program wrapper, stacking rules;
+  * :mod:`repro.fleet.solver`    -- :class:`FleetSolver`, the batched
+    drive loop with per-tenant convergence freezing and warm starts;
+  * :mod:`repro.fleet.scheduler` -- :class:`FleetScheduler`, admission,
+    bucketing and per-tenant result unpacking.
+"""
+from .batch import (FleetProblem, bucket_key, fleet_cell_program,
+                    solo_config, stack_grid, stack_mesh, with_tenant)
+from .scheduler import FleetScheduler
+from .solver import FLEET_ENGINES, FleetSolver
+
+__all__ = [
+    "FLEET_ENGINES",
+    "FleetProblem",
+    "FleetScheduler",
+    "FleetSolver",
+    "bucket_key",
+    "fleet_cell_program",
+    "solo_config",
+    "stack_grid",
+    "stack_mesh",
+    "with_tenant",
+]

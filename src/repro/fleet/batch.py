@@ -1,0 +1,147 @@
+"""Batching T independent problems into one tenant-major program.
+
+Three pieces live here, all engine-agnostic:
+
+  * :class:`FleetProblem` / :func:`bucket_key` -- the admission unit and
+    the shape-bucket rule.  Problems whose *padded* grid shapes agree
+    (same loss, same ``ceil_to(n, P)``, same ``ceil_to(m, P*Q)``) pack
+    into one batch; retracing is therefore bounded by the number of
+    distinct buckets, not the number of tenants.  The bucket key uses
+    the natural padded shapes of the solver framework, so a tenant's
+    block extents (``n_p``, ``m_q``) -- and with them every PRNG draw --
+    are identical inside the fleet and in a solo
+    :meth:`~repro.core.solver.Solver.solve` of the same problem.
+  * :func:`with_tenant` / :func:`fleet_cell_program` -- the spec
+    transform and cell wrapper that vmap an existing per-problem
+    :class:`~repro.core.engines.CellProgram` over a leading tenant axis
+    inside each P x Q cell.
+  * :func:`stack_grid` / :func:`stack_mesh` -- where the tenant axis
+    lands in the packed arrays under each engine's layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engines import CellProgram, _is_dimspec
+from repro.core.partition import _ceil_to
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetProblem:
+    """One tenant's problem: data, loss, regularizer, seed.
+
+    ``lam`` and ``seed`` are per-tenant (they ride through the packed
+    arrays); every other solver knob comes from the shared config of the
+    batch.  ``f_star`` (optional) enables the per-tenant ``rel_opt``
+    history field and rel-opt early stopping, exactly as in
+    :meth:`repro.core.solver.Solver.solve`.
+    """
+
+    tenant_id: str
+    loss_name: str
+    X: Any                      # (n, m) array or CSRMatrix
+    y: Any                      # (n,)
+    lam: float
+    seed: int = 0
+    f_star: Optional[float] = None
+
+    @property
+    def n(self) -> int:
+        return int(self.X.shape[0])
+
+    @property
+    def m(self) -> int:
+        return int(self.X.shape[1])
+
+
+def bucket_key(problem: FleetProblem, P: int, Q: int) -> Tuple:
+    """Shape-bucket key: problems with equal keys pack into one batch.
+
+    Uses the framework's natural padded shapes (rows to a multiple of P,
+    features to a multiple of P*Q), so bucketing never changes a
+    tenant's block extents relative to its solo solve.
+    """
+    return (problem.loss_name, _ceil_to(problem.n, P),
+            _ceil_to(problem.m, P * Q))
+
+
+def solo_config(cfg, problem: FleetProblem):
+    """The config a solo ``Solver.solve`` needs to reproduce this
+    tenant's fleet result: the shared config with the tenant's ``lam``
+    (and ``seed``, for configs that carry one) substituted in."""
+    updates = {"lam": problem.lam}
+    if hasattr(cfg, "seed"):
+        updates["seed"] = problem.seed
+    return dataclasses.replace(cfg, **updates)
+
+
+# ---------------------------------------------------------------------------
+# the tenant axis: spec transform + cell wrapper
+# ---------------------------------------------------------------------------
+
+def with_tenant(specs):
+    """Prepend an unnamed (replicated) tenant axis to every dim spec.
+
+    ``None`` entries are ignored by the grid executor's vmap in_axes
+    (membership test) and map to a replicated ``PartitionSpec`` entry on
+    the mesh -- the tenant axis is never a communication axis.
+    """
+    return jax.tree_util.tree_map(lambda ds: (None,) + tuple(ds), specs,
+                                  is_leaf=_is_dimspec)
+
+
+def named_axes(ds) -> int:
+    """Number of named (block/shard) axes of a dim spec."""
+    return sum(1 for e in tuple(ds) if e is not None)
+
+
+def stack_grid(arrs, ds):
+    """Stack per-tenant grid arrays on the tenant axis.
+
+    The grid's blocked layout keeps one leading block axis per NAMED
+    dim-spec entry, so the tenant axis lands right after them: the cell
+    then sees ``(T, ...per-cell extents)`` and the tenant vmap of
+    :func:`fleet_cell_program` peels T.
+    """
+    return jnp.stack(arrs, axis=named_axes(ds))
+
+
+def stack_mesh(arrs):
+    """Mesh arrays take the tenant axis in front: with the
+    :func:`with_tenant` spec the partition spec gains a leading ``None``
+    entry, so each device's shard is ``(T, ...per-cell extents)``."""
+    return jnp.stack(arrs, axis=0)
+
+
+def fleet_cell_program(base: CellProgram) -> CellProgram:
+    """Vmap a per-problem :class:`CellProgram` over a leading tenant axis.
+
+    The wrapped program's data tuple is ``(active, *tenant_stacked_base
+    data)`` where ``active`` ((T,) of 0/1) freezes converged tenants
+    exactly: a frozen tenant's state is carried through ``jnp.where``
+    untouched, bit for bit, while its lanes keep feeding the shared
+    collectives (harmlessly -- the where discards the result).
+
+    The comm calls inside the tenant vmap still see the named grid/mesh
+    axes (unnamed vmap batching passes named axes through), so all T
+    tenants share ONE CommSchedule round per declared collective: the
+    whole point of the fleet path.
+    """
+    def cell(comm, t, data, state):
+        active, *inner = data
+
+        def tenant(d1, s1, a1):
+            out = base.cell(comm, t, d1, s1)
+            return jax.tree_util.tree_map(
+                lambda new, old: jnp.where(a1 > 0, new, old), out, s1)
+
+        return jax.vmap(tenant)(tuple(inner), state, active)
+
+    data_specs = ((None,),) + tuple(with_tenant(ds)
+                                    for ds in base.data_specs)
+    return CellProgram(base.schedule, cell, data_specs,
+                       with_tenant(base.state_specs))

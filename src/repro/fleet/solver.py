@@ -1,0 +1,521 @@
+"""FleetSolver: T tenants, one compiled step, per-tenant results.
+
+Packs a shape bucket of :class:`~repro.fleet.batch.FleetProblem`\\ s
+into tenant-major arrays (:func:`~repro.fleet.batch.stack_grid` /
+:func:`~repro.fleet.batch.stack_mesh`), wraps the solver's per-problem
+:class:`~repro.core.engines.CellProgram` with
+:func:`~repro.fleet.batch.fleet_cell_program`, and drives the batched
+program through the *existing* executors
+(:func:`~repro.core.engines.grid_program` /
+:func:`~repro.core.engines.mesh_program`) -- no new execution machinery.
+
+Per-tenant semantics preserved relative to a solo
+:meth:`repro.core.solver.Solver.solve` of the same problem:
+
+  * block extents, padding, and every PRNG draw are identical (the
+    bucket key uses the framework's natural padded shapes);
+  * ``lam_t`` / ``n_t`` ride through the data tuple (the solvers'
+    ``per_problem=True`` path) instead of being baked into the trace;
+  * converged tenants are frozen *exactly* (state carried through
+    ``jnp.where``) at segment boundaries (every ``check_every`` outer
+    iterations), and warm starts accept the same
+    ``SolveResult | (w, alpha) | w`` forms as the solo API.
+
+Bit-equivalence caveat: XLA strength-reduces division by a
+compile-time constant into multiplication by its reciprocal.  The solo
+path bakes ``lam * n`` (and ``n * sample_frac``, ``rho * n``) as
+constants, the fleet path divides by the same values as traced
+scalars, so per-tenant results are bit-identical exactly when those
+products are powers of two and agree to float tolerance otherwise
+(docs/consistency.md, tests/test_fleet.py).
+
+Engine restriction: the fleet path supports the ``simulated`` grid and
+the synchronous ``shard_map`` mesh.  Staleness rings, the overlap
+engine's donated buffers and compression error-feedback all carry
+per-build device state that cannot hold a tenant axis; requesting them
+raises ``ValueError`` up front.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.admm import (admm_cell_program, admm_setup_distributed,
+                             admm_setup_distributed_sparse,
+                             admm_setup_simulated)
+from repro.core.d3ca import d3ca_cell_program
+from repro.core.engines import cached_build, grid_program, mesh_program
+from repro.core.losses import get_loss
+from repro.core.partition import (SparseDoublyPartitioned, _ceil_to,
+                                  partition, partition_sparse)
+from repro.core.radisa import radisa_cell_program
+from repro.core.reference import rel_opt
+from repro.core.sfk import sfk_cell_program
+from repro.core.solver import (BLOCK_FORMATS, ENGINE_ALIASES, LOCAL_BACKENDS,
+                               SolveResult, _unpack_warm_start)
+
+from .batch import FleetProblem, bucket_key, fleet_cell_program, stack_grid
+
+#: engines the fleet path supports (``"sync"`` aliases ``"shard_map"``)
+FLEET_ENGINES = ("simulated", "shard_map")
+FLEET_SOLVERS = ("d3ca", "radisa", "sfk", "admm")
+
+
+@dataclasses.dataclass
+class _Packed:
+    """One packed batch, ready to drive."""
+
+    step: Callable          # step(t, (active, *data_core), state)
+    data_core: Tuple        # tenant-stacked data tuple (minus active)
+    state: Any              # tenant-stacked engine state
+    unpack: Callable        # state -> (ws, alphas | None) per tenant
+    n_tenants: int
+
+
+class FleetSolver:
+    """Batched multi-tenant solves over one P x Q grid.
+
+    Args:
+      solver: one of ``d3ca | radisa | sfk | admm``.
+      engine: ``simulated`` (vmap grid) or ``shard_map``/``sync`` (one
+        block per device).  Async/overlap/compression/topology are
+        rejected -- see the module docstring.
+      local_backend, block_format: as in :class:`repro.core.solver.Solver`.
+    """
+
+    def __init__(self, solver: str = "d3ca", engine: str = "simulated",
+                 local_backend: str = "ref", block_format: str = "dense",
+                 staleness: int = 0, compression=None, topology=None,
+                 overlap: bool = False):
+        if solver not in FLEET_SOLVERS:
+            raise ValueError(f"solver={solver!r}; expected one of "
+                             f"{FLEET_SOLVERS}")
+        engine = ENGINE_ALIASES.get(engine, engine)
+        if engine not in FLEET_ENGINES:
+            raise ValueError(
+                f"engine={engine!r}: the fleet path runs the simulated "
+                f"grid or the synchronous mesh ({FLEET_ENGINES}); "
+                "async/overlap programs carry per-build ring state that "
+                "cannot hold a tenant axis")
+        if staleness:
+            raise ValueError("fleet solves are synchronous; staleness="
+                             f"{staleness} is not supported")
+        if compression is not None or topology is not None or overlap:
+            raise ValueError("fleet solves do not support compression, "
+                             "topology or overlap: their error-feedback/"
+                             "ring buffers are per-build device state "
+                             "with no tenant axis")
+        if local_backend not in LOCAL_BACKENDS:
+            raise ValueError(f"local_backend={local_backend!r}; expected "
+                             f"one of {LOCAL_BACKENDS}")
+        if block_format not in BLOCK_FORMATS:
+            raise ValueError(f"block_format={block_format!r}; expected "
+                             f"one of {BLOCK_FORMATS}")
+        self.solver = solver
+        self.engine = engine
+        self.local_backend = local_backend
+        self.block_format = block_format
+        # jitted batched steps, keyed on (engine, grid, padded shapes,
+        # tenant count, loss, cfg-sans-outer_iters): repeated batches of
+        # one shape bucket reuse the compiled program -- retracing is
+        # bounded by the number of distinct buckets, not solve calls
+        self._prog_cache: Dict = {}
+
+    def _prog_key(self, kind, P, Q, T, loss, cfg, *shape_bits):
+        return (kind, P, Q, T, loss.name,
+                dataclasses.replace(cfg, outer_iters=0),
+                self.local_backend, self.block_format) + shape_bits
+
+    # ------------------------------------------------------------------
+    # shared pieces
+    # ------------------------------------------------------------------
+
+    def _config(self, cfg):
+        from repro.core.solver import get_solver
+        cls = get_solver(self.solver)
+        return cfg if cfg is not None else cls.config_cls()
+
+    def _cell_program(self, loss, cfg, *, n, n_p, m_q, sparse):
+        kw = dict(n=n, n_p=n_p, m_q=m_q, sparse=sparse,
+                  local_backend=self.local_backend, per_problem=True)
+        if self.solver == "d3ca":
+            return d3ca_cell_program(loss, cfg, **kw)
+        if self.solver == "radisa":
+            return radisa_cell_program(loss, cfg, **kw)
+        if self.solver == "sfk":
+            return sfk_cell_program(loss, cfg, **kw)
+        return admm_cell_program(loss.name, cfg, n=n, m_q=m_q,
+                                 sparse=sparse, per_problem=True)
+
+    @staticmethod
+    def _repad_k(part: SparseDoublyPartitioned, k: int):
+        """Zero-pad a sparse part's ELL slot axis to a common k.
+
+        Padding slots are (col=0, val=0.0): every consumer gathers
+        (reads of w[0] scaled by 0.0) or scatter-ADDs (zero increments),
+        so a larger k never changes a result bit.
+        """
+        if part.k == k:
+            return part
+        pad = ((0, 0), (0, 0), (0, 0), (0, k - part.k))
+        return dataclasses.replace(part, cols=jnp.pad(part.cols, pad),
+                                   vals=jnp.pad(part.vals, pad))
+
+    @staticmethod
+    def _keys(problems):
+        return jnp.stack([jax.random.PRNGKey(p.seed) for p in problems])
+
+    @staticmethod
+    def _scalars(problems, parts):
+        lam = jnp.asarray([p.lam for p in problems], jnp.float32)
+        n = jnp.asarray([float(pt.n) for pt in parts], jnp.float32)
+        return lam, n
+
+    # ------------------------------------------------------------------
+    # grid packing
+    # ------------------------------------------------------------------
+
+    def _pack_grid(self, problems, P, Q, cfg, loss, w0s, a0s) -> _Packed:
+        sparse = self.block_format == "sparse"
+        if sparse:
+            parts = [partition_sparse(p.X, p.y, P, Q, m_multiple=P * Q)
+                     for p in problems]
+            kmax = max(pt.k for pt in parts)
+            parts = [self._repad_k(pt, kmax) for pt in parts]
+            x_st = (stack_grid([pt.cols for pt in parts],
+                               ("data", "model")),
+                    stack_grid([pt.vals for pt in parts],
+                               ("data", "model")))
+        else:
+            parts = [partition(p.X, p.y, P, Q, m_multiple=P * Q)
+                     for p in problems]
+            x_st = (stack_grid([pt.x_blocks for pt in parts],
+                               ("data", "model")),)
+        y_st = stack_grid([pt.y_blocks for pt in parts], ("data",))
+        mask_st = stack_grid([pt.mask for pt in parts], ("data",))
+        lam_arr, n_arr = self._scalars(problems, parts)
+        n_p, m_q = parts[0].n_p, parts[0].m_q
+
+        base = self._cell_program(loss, cfg, n=parts[0].n, n_p=n_p,
+                                  m_q=m_q, sparse=sparse)
+        key = self._prog_key("grid", P, Q, len(problems), loss, cfg,
+                             parts[0].n, n_p, m_q,
+                             kmax if sparse else None)
+        step = cached_build(
+            self._prog_cache, key,
+            lambda: grid_program(fleet_cell_program(base), P, Q))
+
+        w_st = stack_grid(
+            [jnp.zeros((Q, m_q)) if w is None
+             else parts[i].w_to_blocks(jnp.asarray(w))
+             for i, w in enumerate(w0s)], ("model",))
+
+        if self.solver == "d3ca":
+            data_core = (self._keys(problems), *x_st, y_st, mask_st,
+                         lam_arr, n_arr)
+            a_st = stack_grid(
+                [jnp.zeros((P, n_p)) if a is None
+                 else parts[i].alpha_to_blocks(jnp.asarray(a))
+                 for i, a in enumerate(a0s)], ("data",))
+            state = (a_st, w_st)
+
+            def unpack(s):
+                a_b, w_b = s
+                ws = [parts[i].w_from_blocks(w_b[:, i])
+                      for i in range(len(parts))]
+                alphas = [parts[i].alpha_from_blocks(
+                    a_b[:, i] * parts[i].mask) for i in range(len(parts))]
+                return ws, alphas
+        elif self.solver == "admm":
+            chols = [admm_setup_simulated(
+                parts[i], dataclasses.replace(cfg, lam=p.lam))
+                for i, p in enumerate(problems)]
+            chol_st = stack_grid([c[:, None] for c in chols], ("model",))
+            data_core = (*x_st, y_st, mask_st, chol_st, n_arr)
+            zeros_su = jnp.zeros((P, Q, len(problems), n_p, 1))
+            state = (zeros_su, zeros_su, w_st)
+
+            def unpack(s):
+                w_b = s[2]
+                return [parts[i].w_from_blocks(w_b[:, i])
+                        for i in range(len(parts))], None
+        else:
+            data_core = (self._keys(problems), *x_st, y_st, mask_st,
+                         lam_arr, n_arr)
+            state = w_st
+
+            def unpack(s):
+                return [parts[i].w_from_blocks(s[:, i])
+                        for i in range(len(parts))], None
+
+        return _Packed(step=step, data_core=data_core, state=state,
+                       unpack=unpack, n_tenants=len(problems))
+
+    # ------------------------------------------------------------------
+    # mesh packing
+    # ------------------------------------------------------------------
+
+    def _pack_mesh(self, problems, P, Q, cfg, loss, w0s, a0s) -> _Packed:
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as PS
+
+        from repro.launch.mesh import make_grid_mesh
+
+        mesh = make_grid_mesh(P, Q)
+
+        def put(arr, *axes):
+            return jax.device_put(jnp.asarray(arr),
+                                  NamedSharding(mesh, PS(*axes)))
+
+        sparse = self.block_format == "sparse"
+        T = len(problems)
+        n_pads = {_ceil_to(p.n, P) for p in problems}
+        m_pads = {_ceil_to(p.m, P * Q) for p in problems}
+        if len(n_pads) != 1 or len(m_pads) != 1:
+            raise ValueError("solve_batch needs a single shape bucket; "
+                             "route mixed shapes through FleetScheduler")
+        n_pad, m_pad = n_pads.pop(), m_pads.pop()
+        n_p, m_q = n_pad // P, m_pad // Q
+
+        if sparse:
+            # identical host-side bucketing to partition_sparse, then the
+            # same (P,Q,n_p,k)->(n_pad, Q*k) layout prepare_shard_map_sparse
+            # uses -- bit-for-bit the blocks a solo mesh solve sees.
+            parts = [partition_sparse(p.X, p.y, P, Q, m_multiple=P * Q)
+                     for p in problems]
+            kmax = max(pt.k for pt in parts)
+            parts = [self._repad_k(pt, kmax) for pt in parts]
+
+            def flat(a):
+                return jnp.transpose(a, (0, 2, 1, 3)).reshape(
+                    P * n_p, Q * kmax)
+            cols_st = put(jnp.stack([flat(pt.cols) for pt in parts]),
+                          None, "data", "model")
+            vals_st = put(jnp.stack([flat(pt.vals) for pt in parts]),
+                          None, "data", "model")
+            x_st = (cols_st, vals_st)
+        else:
+            parts = [partition(p.X, p.y, P, Q, m_multiple=P * Q)
+                     for p in problems]
+            xs = np.zeros((T, n_pad, m_pad), np.float32)
+            for i, p in enumerate(problems):
+                xs[i, : p.n, : p.m] = np.asarray(p.X, np.float32)
+            x_st = (put(xs, None, "data", "model"),)
+
+        ys = np.zeros((T, n_pad), np.float32)
+        masks = np.zeros((T, n_pad), np.float32)
+        for i, p in enumerate(problems):
+            ys[i, : p.n] = np.asarray(p.y, np.float32)
+            masks[i, : p.n] = 1.0
+        y_st = put(ys, None, "data")
+        mask_st = put(masks, None, "data")
+        lam_arr, n_arr = self._scalars(problems, parts)
+
+        base = self._cell_program(loss, cfg, n=problems[0].n, n_p=n_p,
+                                  m_q=m_q, sparse=sparse)
+        cellprog = fleet_cell_program(base)
+
+        def pad_stack(vals, pad_to, axes):
+            out = np.zeros((T, pad_to), np.float32)
+            for i, v in enumerate(vals):
+                if v is not None:
+                    v = np.asarray(v, np.float32)
+                    out[i, : v.shape[0]] = v
+            return put(out, None, axes)
+
+        w_init = pad_stack(w0s, m_pad, "model")
+
+        if self.solver == "d3ca":
+            mdata = (self._keys(problems), *x_st, y_st, mask_st,
+                     lam_arr, n_arr)
+            core0 = (pad_stack(a0s, n_pad, "data"), w_init)
+        elif self.solver == "admm":
+            chols = []
+            for i, p in enumerate(problems):
+                cfg_t = dataclasses.replace(cfg, lam=p.lam)
+                if sparse:
+                    chols.append(admm_setup_distributed_sparse(
+                        mesh, x_st[0][i], x_st[1][i], m_q, cfg_t))
+                else:
+                    chols.append(admm_setup_distributed(
+                        mesh, x_st[0][i], cfg_t))
+            chol_st = put(jnp.stack(chols), None, "model")
+            mdata = (*x_st, y_st, mask_st, chol_st, n_arr)
+            zeros_su = put(np.zeros((T, n_pad, Q), np.float32),
+                           None, "data", "model")
+            core0 = (zeros_su, zeros_su, w_init)
+        else:
+            mdata = (self._keys(problems), *x_st, y_st, mask_st,
+                     lam_arr, n_arr)
+            core0 = w_init
+
+        active0 = jnp.ones((T,), jnp.float32)
+        key = self._prog_key("mesh", P, Q, T, loss, cfg, n_pad, m_pad,
+                             kmax if sparse else None)
+        step, comm0 = cached_build(
+            self._prog_cache, key,
+            lambda: mesh_program(
+                cellprog, mesh, (active0, *mdata), core0,
+                data_axis="data", model_axis="model", staleness=0,
+                compression=None, overlap=False, topology=None)[:2])
+        state = (core0, comm0)
+
+        if self.solver == "d3ca":
+            def unpack(s):
+                a, w = s[0]
+                return ([w[i, : problems[i].m] for i in range(T)],
+                        [a[i, : problems[i].n] for i in range(T)])
+        elif self.solver == "admm":
+            def unpack(s):
+                w = s[0][2]
+                return [w[i, : problems[i].m] for i in range(T)], None
+        else:
+            def unpack(s):
+                w = s[0]
+                return [w[i, : problems[i].m] for i in range(T)], None
+
+        return _Packed(step=step, data_core=mdata, state=state,
+                       unpack=unpack, n_tenants=T)
+
+    # ------------------------------------------------------------------
+    # the batched drive loop
+    # ------------------------------------------------------------------
+
+    def solve_batch(self, problems: Sequence[FleetProblem], *,
+                    P: int, Q: int, cfg=None,
+                    tol: Optional[float] = None, check_every: int = 5,
+                    warm_starts: Optional[Sequence] = None,
+                    record_history: bool = True,
+                    tracer=None, registry=None) -> List[SolveResult]:
+        """Solve every problem of one shape bucket in a single batched run.
+
+        Args:
+          problems: tenants of ONE shape bucket (same loss, same padded
+            shapes -- :func:`~repro.fleet.batch.bucket_key`); mixed
+            shapes go through :class:`~repro.fleet.scheduler.FleetScheduler`.
+          P, Q: the block grid.
+          cfg: the shared solver config; its ``lam`` (and ``seed``) are
+            overridden per tenant by each problem's values.
+          tol: per-tenant early stopping, evaluated every
+            ``check_every`` outer iterations with the solo driver's
+            metric preference (rel_opt vs ``f_star``, duality gap,
+            relative objective change).  Converged tenants freeze
+            exactly; the batch stops early when all are frozen.
+          check_every: segment length between convergence checks.
+          warm_starts: optional per-tenant ``SolveResult | (w, alpha) |
+            w`` (None entries cold-start).
+          record_history: collect per-tenant history entries at segment
+            boundaries.
+          tracer / registry: :mod:`repro.obs` hooks -- spans
+            ``fleet/pack``, ``fleet/step``, ``fleet/unpack``; gauges
+            ``fleet/tenants``, ``fleet/active``, per-tenant
+            ``fleet/rel_opt``.
+
+        Returns:
+          One :class:`~repro.core.solver.SolveResult` per problem, in
+          input order.
+        """
+        from repro.obs import as_tracer
+        if not problems:
+            return []
+        keys = {bucket_key(p, P, Q) for p in problems}
+        if len(keys) != 1:
+            raise ValueError(
+                f"solve_batch got {len(keys)} shape buckets {sorted(keys)}; "
+                "pack one bucket per batch (FleetScheduler does this)")
+        tr = as_tracer(tracer)
+        reg = registry
+        cfg = self._config(cfg)
+        loss = get_loss(problems[0].loss_name)
+        check_every = max(1, int(check_every))
+        T = len(problems)
+        labels = {"solver": self.solver, "engine": self.engine}
+
+        warm = list(warm_starts) if warm_starts is not None else [None] * T
+        if len(warm) != T:
+            raise ValueError(f"warm_starts has {len(warm)} entries for "
+                             f"{T} problems")
+        w0s, a0s = zip(*[_unpack_warm_start(w) for w in warm])
+
+        with tr.span("fleet/pack", tenants=T, **labels):
+            pack = (self._pack_grid if self.engine == "simulated"
+                    else self._pack_mesh)
+            packed = pack(problems, P, Q, cfg, loss, list(w0s), list(a0s))
+        if reg is not None:
+            reg.gauge("fleet/tenants", **labels).set(T)
+
+        active = np.ones((T,), np.float32)
+        conv = [False] * T
+        iters = [0] * T
+        hist: List[List[Dict[str, float]]] = [[] for _ in range(T)]
+        prev_f: List[Optional[float]] = [None] * T
+        state = packed.state
+        outer = cfg.outer_iters
+        # with no early stopping and no history there is nothing to
+        # observe between segments: run the whole batch in one stretch
+        # (matching the solo driver, which also skips per-iteration
+        # objective evaluation in that mode)
+        observe = tol is not None or record_history
+        t = 0
+        t0 = time.perf_counter()
+        while t < outer:
+            seg_end = outer if not observe else min(t + check_every, outer)
+            data = (jnp.asarray(active), *packed.data_core)
+            with tr.span("fleet/step", t0=t + 1, t1=seg_end, **labels):
+                while t < seg_end:
+                    t += 1
+                    state = packed.step(t, data, state)
+            for i in range(T):
+                if not conv[i]:
+                    iters[i] = t
+            if not observe:
+                continue
+            with tr.span("fleet/unpack", **labels):
+                ws, alphas = packed.unpack(state)
+            now = time.perf_counter() - t0
+            for i, p in enumerate(problems):
+                if conv[i]:
+                    continue        # frozen: state is bit-preserved
+                iters[i] = t
+                f = float(loss.objective(p.X, p.y, ws[i], p.lam))
+                entry = {"iter": t, "time_s": now, "objective": f}
+                if alphas is not None:
+                    entry["duality_gap"] = float(
+                        f - loss.dual_objective(p.X, p.y, alphas[i], p.lam))
+                if p.f_star is not None:
+                    entry["rel_opt"] = float(rel_opt(f, p.f_star))
+                    if reg is not None:
+                        reg.gauge("fleet/rel_opt", tenant=p.tenant_id,
+                                  **labels).set(entry["rel_opt"])
+                if record_history:
+                    hist[i].append(entry)
+                stop = False
+                if tol is not None:
+                    if "rel_opt" in entry:
+                        stop = entry["rel_opt"] < tol
+                    elif "duality_gap" in entry:
+                        stop = entry["duality_gap"] < tol
+                    elif prev_f[i] is not None:
+                        stop = abs(f - prev_f[i]) <= tol * max(1.0, abs(f))
+                prev_f[i] = f
+                if stop:
+                    conv[i] = True
+                    active[i] = 0.0
+            if reg is not None:
+                reg.gauge("fleet/active", **labels).set(float(active.sum()))
+            if tol is not None and not active.any():
+                break
+
+        ws, alphas = packed.unpack(state)
+        return [SolveResult(
+            w=ws[i], alpha=alphas[i] if alphas is not None else None,
+            history=hist[i], iters=iters[i], converged=conv[i],
+            solver=self.solver, engine=self.engine,
+            local_backend=self.local_backend,
+            block_format=self.block_format)
+            for i in range(T)]

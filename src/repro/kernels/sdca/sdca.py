@@ -24,12 +24,19 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def _static_scalar(v) -> bool:
+    """True when ``v`` can be baked into the kernel as a compile-time
+    constant (a plain host scalar, not a traced value)."""
+    return isinstance(v, (int, float, np.integer, np.floating))
+
+
 def _kernel(idx_ref,            # scalar prefetch: (steps,) int32
-            beta_ref,           # scalar prefetch: (1,) f32 (paper's beta)
+            params_ref,         # scalar prefetch: (3,) f32 [beta, lam, n]
             x_row_ref,          # (1, m_q) gathered row
             y_row_ref,          # (1, 1) label
             mask_row_ref,       # (1, 1)
@@ -39,7 +46,7 @@ def _kernel(idx_ref,            # scalar prefetch: (steps,) int32
             w_out_ref,          # out: (1, m_q)
             w_vmem,             # scratch: (1, m_q) f32
             dal_vmem,           # scratch: (n_p, 1) f32
-            *, lam, n, Q, steps, loss, use_beta):
+            *, lam, n, Q, steps, loss, use_beta, runtime):
     h = pl.program_id(0)
 
     @pl.when(h == 0)
@@ -52,27 +59,32 @@ def _kernel(idx_ref,            # scalar prefetch: (steps,) int32
     yi = y_row_ref[0, 0].astype(jnp.float32)
     mi = mask_row_ref[0, 0].astype(jnp.float32)
     a_i = alpha_row_ref[0, 0].astype(jnp.float32) + dal_vmem[i, 0]
+    # runtime mode (the fleet path): lam / n arrive as traced scalars in
+    # the prefetch params vector; static mode bakes the Python constants
+    # so the compiled kernel is unchanged
+    lam_v = params_ref[1] if runtime else lam
+    n_v = params_ref[2] if runtime else n
 
     w = w_vmem[0, :]
     zloc = jnp.sum(xi * w)
     x_sq = jnp.sum(xi * xi)
-    denom = beta_ref[0] if use_beta else x_sq
+    denom = params_ref[0] if use_beta else x_sq
     denom = jnp.maximum(denom, 1e-12)
 
     if loss == "hinge":
-        d = (yi / Q - zloc) * lam * n / denom
+        d = (yi / Q - zloc) * lam_v * n_v / denom
         lo = jnp.where(yi > 0, 0.0, -1.0)
         hi = jnp.where(yi > 0, 1.0, 0.0)
         d = jnp.clip(a_i + d, lo, hi) - a_i
     elif loss == "squared":
         num = yi / Q - a_i / (2.0 * Q) - zloc
-        den = 1.0 / (2.0 * Q) + denom / (lam * n)
+        den = 1.0 / (2.0 * Q) + denom / (lam_v * n_v)
         d = num / jnp.maximum(den, 1e-12)
     else:
         raise ValueError(loss)
     d = d * mi
 
-    w_vmem[0, :] = w + (d / (lam * n)) * xi
+    w_vmem[0, :] = w + (d / (lam_v * n_v)) * xi
     dal_vmem[i, 0] = dal_vmem[i, 0] + d
 
     @pl.when(h == steps - 1)
@@ -87,15 +99,24 @@ def sdca_epoch_pallas(x, y, mask, alpha0, w0, idx, *, lam, n, Q,
 
     x: (n_p, m_q) f32; idx: (steps,) int32.  ``beta`` (a runtime scalar,
     may be traced) selects the paper's step_mode="beta" denominator.
+    ``lam`` / ``n`` may also be traced (the fleet's per-tenant path);
+    they then ride the same scalar-prefetch vector as beta.
     Returns (dalpha, w_final).
     """
     n_p, m_q = x.shape
     steps = idx.shape[0]
     use_beta = beta is not None
-    beta_arr = jnp.reshape(
-        jnp.asarray(beta if use_beta else 0.0, jnp.float32), (1,))
-    kern = functools.partial(_kernel, lam=float(lam), n=int(n), Q=int(Q),
-                             steps=steps, loss=loss, use_beta=use_beta)
+    runtime = not (_static_scalar(lam) and _static_scalar(n))
+    params = jnp.stack([
+        jnp.asarray(beta if use_beta else 0.0, jnp.float32),
+        jnp.asarray(lam, jnp.float32),
+        jnp.asarray(n, jnp.float32)])
+    kern = functools.partial(
+        _kernel,
+        lam=None if runtime else float(lam),
+        n=None if runtime else int(n),
+        Q=int(Q), steps=steps, loss=loss, use_beta=use_beta,
+        runtime=runtime)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(steps,),
@@ -123,6 +144,6 @@ def sdca_epoch_pallas(x, y, mask, alpha0, w0, idx, *, lam, n, Q,
             jax.ShapeDtypeStruct((1, m_q), jnp.float32),
         ],
         interpret=interpret,
-    )(idx, beta_arr, x, y[:, None], mask[:, None], alpha0[:, None],
+    )(idx, params, x, y[:, None], mask[:, None], alpha0[:, None],
       w0[None, :])
     return dalpha[:, 0], w_fin[0]

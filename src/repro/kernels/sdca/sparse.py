@@ -27,9 +27,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .sdca import _static_scalar
+
 
 def _kernel(idx_ref,            # scalar prefetch: (steps,) int32
-            beta_ref,           # scalar prefetch: (1,) f32 (paper's beta)
+            params_ref,         # scalar prefetch: (3,) f32 [beta, lam, n]
             cols_row_ref,       # (1, k) gathered ELL column ids
             vals_row_ref,       # (1, k) gathered ELL values
             y_row_ref,          # (1, 1) label
@@ -40,7 +42,7 @@ def _kernel(idx_ref,            # scalar prefetch: (steps,) int32
             w_out_ref,          # out: (1, m_q)
             w_vmem,             # scratch: (1, m_q) f32
             dal_vmem,           # scratch: (n_p, 1) f32
-            *, lam, n, Q, steps, loss, use_beta):
+            *, lam, n, Q, steps, loss, use_beta, runtime):
     h = pl.program_id(0)
 
     @pl.when(h == 0)
@@ -54,27 +56,31 @@ def _kernel(idx_ref,            # scalar prefetch: (steps,) int32
     yi = y_row_ref[0, 0].astype(jnp.float32)
     mi = mask_row_ref[0, 0].astype(jnp.float32)
     a_i = alpha_row_ref[0, 0].astype(jnp.float32) + dal_vmem[i, 0]
+    # runtime mode (fleet): traced lam / n from the prefetch params;
+    # static mode bakes the Python constants (kernel unchanged)
+    lam_v = params_ref[1] if runtime else lam
+    n_v = params_ref[2] if runtime else n
 
     w = w_vmem[0, :]
     zloc = jnp.sum(vi * jnp.take(w, ci, axis=0))
     x_sq = jnp.sum(vi * vi)
-    denom = beta_ref[0] if use_beta else x_sq
+    denom = params_ref[0] if use_beta else x_sq
     denom = jnp.maximum(denom, 1e-12)
 
     if loss == "hinge":
-        d = (yi / Q - zloc) * lam * n / denom
+        d = (yi / Q - zloc) * lam_v * n_v / denom
         lo = jnp.where(yi > 0, 0.0, -1.0)
         hi = jnp.where(yi > 0, 1.0, 0.0)
         d = jnp.clip(a_i + d, lo, hi) - a_i
     elif loss == "squared":
         num = yi / Q - a_i / (2.0 * Q) - zloc
-        den = 1.0 / (2.0 * Q) + denom / (lam * n)
+        den = 1.0 / (2.0 * Q) + denom / (lam_v * n_v)
         d = num / jnp.maximum(den, 1e-12)
     else:
         raise ValueError(loss)
     d = d * mi
 
-    w_vmem[0, :] = w.at[ci].add((d / (lam * n)) * vi)
+    w_vmem[0, :] = w.at[ci].add((d / (lam_v * n_v)) * vi)
     dal_vmem[i, 0] = dal_vmem[i, 0] + d
 
     @pl.when(h == steps - 1)
@@ -90,17 +96,25 @@ def sdca_epoch_sparse_pallas(cols, vals, y, mask, alpha0, w0, idx, *, lam, n,
 
     cols/vals: (n_p, k) padded-ELL block; w0: (m_q,) dense primal block;
     idx: (steps,) int32.  ``beta`` (a runtime scalar, may be traced)
-    selects the paper's step_mode="beta" denominator.
+    selects the paper's step_mode="beta" denominator; ``lam`` / ``n``
+    may also be traced (the fleet's per-tenant path).
     Returns (dalpha, w_final).
     """
     n_p, k = cols.shape
     m_q = w0.shape[0]
     steps = idx.shape[0]
     use_beta = beta is not None
-    beta_arr = jnp.reshape(
-        jnp.asarray(beta if use_beta else 0.0, jnp.float32), (1,))
-    kern = functools.partial(_kernel, lam=float(lam), n=int(n), Q=int(Q),
-                             steps=steps, loss=loss, use_beta=use_beta)
+    runtime = not (_static_scalar(lam) and _static_scalar(n))
+    params = jnp.stack([
+        jnp.asarray(beta if use_beta else 0.0, jnp.float32),
+        jnp.asarray(lam, jnp.float32),
+        jnp.asarray(n, jnp.float32)])
+    kern = functools.partial(
+        _kernel,
+        lam=None if runtime else float(lam),
+        n=None if runtime else int(n),
+        Q=int(Q), steps=steps, loss=loss, use_beta=use_beta,
+        runtime=runtime)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(steps,),
@@ -129,6 +143,6 @@ def sdca_epoch_sparse_pallas(cols, vals, y, mask, alpha0, w0, idx, *, lam, n,
             jax.ShapeDtypeStruct((1, m_q), jnp.float32),
         ],
         interpret=interpret,
-    )(idx, beta_arr, cols, vals, y[:, None], mask[:, None], alpha0[:, None],
+    )(idx, params, cols, vals, y[:, None], mask[:, None], alpha0[:, None],
       w0[None, :])
     return dalpha[:, 0], w_fin[0]

@@ -35,7 +35,7 @@ def _grad(loss, z, y):
 
 def _kernel(idx_ref,            # scalar prefetch: (L,) int32
             lo_ref,             # scalar prefetch: (1,) int32 window start
-            eta_ref,            # scalar prefetch: (1,) f32 step size
+            params_ref,         # scalar prefetch: (2,) f32 [eta, lam]
             cols_row_ref,       # (1, k) gathered ELL column ids
             vals_row_ref,       # (1, k) gathered ELL values
             y_row_ref,          # (1, 1)
@@ -45,7 +45,7 @@ def _kernel(idx_ref,            # scalar prefetch: (L,) int32
             mu_ref,             # (1, m_sub)
             w_out_ref,          # out: (1, m_sub)
             w_vmem,             # scratch: (1, m_sub) f32
-            *, lam, L, m_sub, loss):
+            *, lam, L, m_sub, loss, runtime):
     h = pl.program_id(0)
 
     @pl.when(h == 0)
@@ -59,6 +59,9 @@ def _kernel(idx_ref,            # scalar prefetch: (L,) int32
     zj = z_row_ref[0, 0].astype(jnp.float32)
     wa = w_anchor_ref[0, :].astype(jnp.float32)
     mu = mu_ref[0, :].astype(jnp.float32)
+    # runtime mode (fleet): traced lam from the prefetch params;
+    # static mode bakes the Python constant (kernel unchanged)
+    lam_v = params_ref[1] if runtime else lam
 
     rel = ci - lo_ref[0]
     sel = ((rel >= 0) & (rel < m_sub)).astype(jnp.float32)
@@ -71,7 +74,7 @@ def _kernel(idx_ref,            # scalar prefetch: (L,) int32
     gscale = (_grad(loss, z, yj) - _grad(loss, zj, yj)) * mj
     g_sparse = jnp.zeros((m_sub,), jnp.float32).at[relc].add(
         gscale * vi * sel)
-    w_vmem[0, :] = w - eta_ref[0] * (g_sparse + mu + lam * diff)
+    w_vmem[0, :] = w - params_ref[0] * (g_sparse + mu + lam_v * diff)
 
     @pl.when(h == L - 1)
     def _flush():
@@ -88,13 +91,16 @@ def svrg_inner_sparse_pallas(cols, vals, y, mask, z_anchor, w_anchor, mu_sub,
     scalar, may be traced) is the window start within the block.
     Returns the updated (m_sub,) sub-block iterate.
     """
+    from repro.kernels.sdca.sdca import _static_scalar
     n_p, k = cols.shape
     m_sub = w_anchor.shape[0]
     L = idx.shape[0]
     lo_arr = jnp.reshape(jnp.asarray(lo, jnp.int32), (1,))
-    eta_arr = jnp.reshape(jnp.asarray(eta, jnp.float32), (1,))
-    kern = functools.partial(_kernel, lam=float(lam), L=L, m_sub=m_sub,
-                             loss=loss)
+    runtime = not _static_scalar(lam)
+    params = jnp.stack([jnp.asarray(eta, jnp.float32),
+                        jnp.asarray(lam, jnp.float32)])
+    kern = functools.partial(_kernel, lam=None if runtime else float(lam),
+                             L=L, m_sub=m_sub, loss=loss, runtime=runtime)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(L,),
@@ -116,6 +122,6 @@ def svrg_inner_sparse_pallas(cols, vals, y, mask, z_anchor, w_anchor, mu_sub,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((1, m_sub), jnp.float32),
         interpret=interpret,
-    )(idx, lo_arr, eta_arr, cols, vals, y[:, None], mask[:, None],
+    )(idx, lo_arr, params, cols, vals, y[:, None], mask[:, None],
       z_anchor[:, None], w_anchor[None, :], mu_sub[None, :])
     return w[0]

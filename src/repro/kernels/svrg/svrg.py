@@ -24,9 +24,9 @@ def _grad(loss, z, y):
     raise ValueError(loss)
 
 
-def _kernel(idx_ref, eta_ref, x_row_ref, y_row_ref, mask_row_ref, z_row_ref,
-            w_anchor_ref, mu_ref, w_out_ref, w_vmem,
-            *, lam, L, loss):
+def _kernel(idx_ref, params_ref, x_row_ref, y_row_ref, mask_row_ref,
+            z_row_ref, w_anchor_ref, mu_ref, w_out_ref, w_vmem,
+            *, lam, L, loss, runtime):
     h = pl.program_id(0)
 
     @pl.when(h == 0)
@@ -39,12 +39,15 @@ def _kernel(idx_ref, eta_ref, x_row_ref, y_row_ref, mask_row_ref, z_row_ref,
     zj = z_row_ref[0, 0].astype(jnp.float32)
     wa = w_anchor_ref[0, :].astype(jnp.float32)
     mu = mu_ref[0, :].astype(jnp.float32)
+    # runtime mode (fleet): traced lam from the prefetch params;
+    # static mode bakes the Python constant (kernel unchanged)
+    lam_v = params_ref[1] if runtime else lam
 
     w = w_vmem[0, :]
     z = zj + jnp.sum(xj * (w - wa))
     g = (_grad(loss, z, yj) - _grad(loss, zj, yj)) * xj * mj \
-        + mu + lam * (w - wa)
-    w_vmem[0, :] = w - eta_ref[0] * g
+        + mu + lam_v * (w - wa)
+    w_vmem[0, :] = w - params_ref[0] * g
 
     @pl.when(h == L - 1)
     def _flush():
@@ -53,10 +56,14 @@ def _kernel(idx_ref, eta_ref, x_row_ref, y_row_ref, mask_row_ref, z_row_ref,
 
 def svrg_inner_pallas(x_sub, y, mask, z_anchor, w_anchor, mu_sub, idx, *,
                       lam, eta, loss: str = "hinge", interpret: bool = True):
+    from repro.kernels.sdca.sdca import _static_scalar
     n_p, m_sub = x_sub.shape
     L = idx.shape[0]
-    eta_arr = jnp.reshape(jnp.asarray(eta, jnp.float32), (1,))
-    kern = functools.partial(_kernel, lam=float(lam), L=L, loss=loss)
+    runtime = not _static_scalar(lam)
+    params = jnp.stack([jnp.asarray(eta, jnp.float32),
+                        jnp.asarray(lam, jnp.float32)])
+    kern = functools.partial(_kernel, lam=None if runtime else float(lam),
+                             L=L, loss=loss, runtime=runtime)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(L,),
@@ -76,6 +83,6 @@ def svrg_inner_pallas(x_sub, y, mask, z_anchor, w_anchor, mu_sub, idx, *,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((1, m_sub), jnp.float32),
         interpret=interpret,
-    )(idx, eta_arr, x_sub, y[:, None], mask[:, None], z_anchor[:, None],
+    )(idx, params, x_sub, y[:, None], mask[:, None], z_anchor[:, None],
       w_anchor[None, :], mu_sub[None, :])
     return w[0]

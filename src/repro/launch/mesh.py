@@ -5,6 +5,8 @@ state (required by the dry-run's forced host-device count).
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 
 
@@ -19,8 +21,15 @@ def make_mesh(shape, axes):
     return jax.make_mesh(tuple(shape), tuple(axes))
 
 
+@functools.lru_cache(maxsize=None)
 def make_grid_mesh(P: int, Q: int):
-    """The paper's P x Q doubly distributed grid."""
+    """The paper's P x Q doubly distributed grid.
+
+    Memoized: a Mesh is immutable and building one re-enumerates
+    devices, so repeated solves (the online update loop, the fleet)
+    reuse the same object -- which also keeps jit caches warm, since
+    mesh identity participates in shard_map cache keys.
+    """
     return jax.make_mesh((P, Q), ("data", "model"))
 
 

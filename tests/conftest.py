@@ -46,3 +46,8 @@ def pytest_configure(config):
         "online: online-service integration tests that run real "
         "warm-started incremental solves (own CI matrix leg; the pure "
         "queue/store/snapshot unit tests stay in the simulated split)")
+    config.addinivalue_line(
+        "markers",
+        "fleet: multi-tenant batched-solve integration tests that run "
+        "real fleet-vs-solo equivalence solves (own CI matrix leg; the "
+        "pure packing/bucketing unit tests stay in the simulated split)")

@@ -1,0 +1,101 @@
+"""Fleet-vs-solo equivalence on the shard_map mesh (subprocess).
+
+Runs under a forced 8-device host grid (4 x 2).  For each solver x
+block_format case, a 3-tenant fleet batch is solved ONCE and every
+tenant's result is compared against a solo
+``Solver(engine="shard_map").solve`` of the same problem.
+
+Tolerance contract (docs/consistency.md):
+
+  * grid engine, mesh sparse:  BIT-identical (the solo grid path is
+    already vmap-batched, and ELL gather/scatter arithmetic does not
+    depend on the batch size);
+  * mesh DENSE with smooth-loss matvecs (d3ca, admm, radisa/squared):
+    float tolerance.  Inside shard_map, XLA lowers the batched
+    (T, n_p, m_q) @ (T, m_q) matvec differently for T > 1 than the
+    solo T-free matvec, which reassociates the contraction (~1e-8 end
+    to end).  Piecewise-linear paths (radisa/sfk hinge) and every
+    sparse gather are lowering-stable, so those stay bit-identical.
+
+All tenant lambdas keep ``lam * n`` (and ``n * sample_frac``,
+``rho * n``) a power of two so the traced-scalar division of the fleet
+path equals the solo path's constant-folded reciprocal exactly.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import numpy as np                                   # noqa: E402
+
+from repro.core import (ADMMConfig, D3CAConfig, RADiSAConfig,  # noqa: E402
+                        SFKConfig, get_solver)
+from repro.data import make_svm_data                 # noqa: E402
+from repro.fleet import FleetProblem, FleetSolver, solo_config  # noqa: E402
+
+Pn, Qn = 4, 2
+N, M = 64, 24
+LAMS = (1.0, 0.5, 0.25)     # lam * n = 64 / 32 / 16: powers of two
+
+
+def make_problems(loss):
+    probs = []
+    for i, lam in enumerate(LAMS):
+        X, y = make_svm_data(N, M, seed=10 + i)
+        probs.append(FleetProblem(tenant_id=f"t{i}", loss_name=loss,
+                                  X=X, y=y, lam=lam, seed=i))
+    return probs
+
+
+def check(name, cfg, loss, block_format, atol):
+    """One fleet batch vs three solo mesh solves; returns #failures."""
+    probs = make_problems(loss)
+    fleet = FleetSolver(solver=name, engine="shard_map",
+                        block_format=block_format)
+    batch = fleet.solve_batch(probs, P=Pn, Q=Qn, cfg=cfg,
+                              record_history=False)
+    fails = 0
+    for p, res in zip(probs, batch):
+        solo = get_solver(name)(
+            engine="shard_map", block_format=block_format).solve(
+            loss, p.X, p.y, P=Pn, Q=Qn, cfg=solo_config(cfg, p),
+            record_history=False)
+        diff = float(np.max(np.abs(np.asarray(res.w, np.float32)
+                                   - np.asarray(solo.w, np.float32))))
+        ok = (diff == 0.0) if atol == 0.0 else (diff <= atol)
+        tag = "BIT" if diff == 0.0 else f"max|dw|={diff:.3e}"
+        print(f"[fleet-mesh] {name}/{loss}/{block_format}: lam={p.lam} "
+              f"{tag} {'ok' if ok else 'FAIL'}")
+        fails += 0 if ok else 1
+        if res.alpha is not None and atol == 0.0:
+            da = float(np.max(np.abs(np.asarray(res.alpha)
+                                     - np.asarray(solo.alpha))))
+            if da != 0.0:
+                print(f"[fleet-mesh]   alpha diff {da:.3e} FAIL")
+                fails += 1
+    return fails
+
+
+def main():
+    fails = 0
+    # dense d3ca/admm: batched-matvec lowering -> float tolerance
+    fails += check("d3ca", D3CAConfig(local_steps=8, outer_iters=4),
+                   "hinge", "dense", 1e-6)
+    fails += check("admm", ADMMConfig(rho=0.5, outer_iters=4),
+                   "hinge", "dense", 1e-6)
+    # sparse and gemv-direction dense: bit-identical
+    fails += check("d3ca", D3CAConfig(local_steps=8, outer_iters=4),
+                   "hinge", "sparse", 0.0)
+    fails += check("radisa", RADiSAConfig(gamma=0.125, L=8, outer_iters=4),
+                   "squared", "dense", 1e-6)
+    fails += check("radisa", RADiSAConfig(gamma=0.125, L=8, outer_iters=4),
+                   "hinge", "dense", 0.0)
+    fails += check("sfk", SFKConfig(gamma=0.125, L=8, sample_frac=0.5,
+                                    outer_iters=4),
+                   "hinge", "dense", 0.0)
+    print(f"[fleet-mesh] total failures: {fails}")
+    return fails
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

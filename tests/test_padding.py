@@ -1,0 +1,95 @@
+"""Padding inertness: masked (padded) rows contribute EXACTLY zero to
+the objective, the dual, and every SDCA coordinate update -- the
+invariant the row-padded block layout (and the fleet subsystem's shape
+buckets) rely on.
+
+These live outside test_losses.py because that module's
+hypothesis-based property tests skip wholesale when hypothesis is
+absent; the padding guarantees must be asserted unconditionally."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.local import local_sdca
+from repro.core.losses import get_loss
+
+LOSSES = ["hinge", "squared", "logistic"]
+
+
+def _padded_problem(n=24, m=8, pad=5, fill=0.0):
+    rng = np.random.default_rng(3)      # same draw for every fill value
+    X = rng.standard_normal((n, m)).astype(np.float32)
+    y = np.where(rng.standard_normal(n) > 0, 1.0, -1.0).astype(np.float32)
+    alpha = (0.5 * y).astype(np.float32)   # dual-feasible for all 3 losses
+    Xp = np.concatenate([X, np.full((pad, m), fill, np.float32)])
+    yp = np.concatenate([y, np.zeros(pad, np.float32)])
+    ap = np.concatenate([alpha, np.zeros(pad, np.float32)])
+    mask = np.concatenate([np.ones(n), np.zeros(pad)]).astype(np.float32)
+    return X, y, alpha, Xp, yp, ap, mask
+
+
+@pytest.mark.parametrize("loss_name", LOSSES)
+def test_padded_rows_inert_in_objectives(loss_name):
+    """objective/dual over masked padded arrays == unpadded, bit for bit,
+    regardless of what the padded rows contain."""
+    loss = get_loss(loss_name)
+    n = 24
+    X, y, alpha, *_ = _padded_problem(n=n)
+    w = np.random.default_rng(5).standard_normal(X.shape[1]).astype(
+        np.float32)
+    lam = 0.5
+    f = float(loss.objective(jnp.asarray(X), jnp.asarray(y),
+                             jnp.asarray(w), lam))
+    d = float(loss.dual_objective(jnp.asarray(X), jnp.asarray(y),
+                                  jnp.asarray(alpha), lam))
+    # zero fill AND garbage fill: the mask, not the fill value, is load-
+    # bearing (garbage X rows ride y = 0 + alpha = 0 exactly like padding)
+    for fill in (0.0, 37.5):
+        _, _, _, Xp, yp, ap, mask = _padded_problem(n=n, fill=fill)
+        fp = float(loss.objective(jnp.asarray(Xp), jnp.asarray(yp),
+                                  jnp.asarray(w), lam,
+                                  mask=jnp.asarray(mask), n=n))
+        dp = float(loss.dual_objective(jnp.asarray(Xp), jnp.asarray(yp),
+                                       jnp.asarray(ap), lam,
+                                       mask=jnp.asarray(mask), n=n))
+        assert f == fp, (loss_name, fill, f, fp)
+        assert d == dp, (loss_name, fill, d, dp)
+
+
+@pytest.mark.parametrize("loss_name", LOSSES)
+def test_padded_rows_finite_grad_and_delta(loss_name):
+    """Padded rows carry y = 0; value/grad/sdca_delta must stay finite
+    there (a padded row's contribution is then x_i * (finite) = 0, and
+    the logistic Newton solve must not poison the lanes it shares with
+    real rows -- the safe_y guard)."""
+    loss = get_loss(loss_name)
+    zs = jnp.linspace(-4.0, 4.0, 17)
+    y0 = jnp.zeros_like(zs)
+    assert bool(jnp.all(jnp.isfinite(loss.value(zs, y0))))
+    assert bool(jnp.all(jnp.isfinite(loss.grad(zs, y0))))
+    d = jax.vmap(lambda z: loss.sdca_delta(
+        jnp.float32(0.0), jnp.float32(0.0), z, jnp.float32(0.0),
+        0.5, 24, 2))(zs)
+    assert bool(jnp.all(jnp.isfinite(d)))
+
+
+@pytest.mark.parametrize("loss_name", LOSSES)
+def test_padded_rows_never_move_in_local_sdca(loss_name):
+    """One local SDCA epoch over a block with garbage padded rows: the
+    padded coordinates' dual change is exactly zero (local_sdca gates
+    the delta with the row mask before it touches w or alpha)."""
+    loss = get_loss(loss_name)
+    n = 24
+    _, _, alpha, Xp, yp, ap, mask = _padded_problem(n=n, fill=3.25)
+    # nonzero w0: alpha = 0.5 y with w = 0 is exactly stationary for
+    # logistic (t = 1/2, zloc = 0), which would hide real-row movement
+    w0 = jnp.asarray(np.random.default_rng(5).standard_normal(
+        Xp.shape[1]).astype(np.float32))
+    dalpha = local_sdca(loss, jnp.asarray(Xp), jnp.asarray(yp),
+                        jnp.asarray(mask), jnp.asarray(ap), w0,
+                        lam=0.5, n=n, Q=2, steps=4 * Xp.shape[0],
+                        key=jax.random.PRNGKey(7))
+    np.testing.assert_array_equal(np.asarray(dalpha)[n:], 0.0)
+    # and the real rows did move (the epoch was not a no-op)
+    assert float(np.abs(np.asarray(dalpha)[:n]).sum()) > 0.0
