@@ -131,10 +131,13 @@ def exposed_share(cell) -> float | None:
     return None
 
 
-def compare_comm_shares(fcells, bcells, shared, comm_threshold):
+def compare_comm_shares(fcells, bcells, shared, comm_threshold,
+                        report=None):
     """Exposed-comm-share gate (see module docstring).  Returns
-    (failures, report_lines)."""
+    (failures, report_lines); when ``report`` is given, per-cell share
+    ratios land under ``report["comm_shares"]``."""
     failures, lines = [], []
+    shares = {} if report is None else report.setdefault("comm_shares", {})
     pairs = {}
     for key in shared:
         fs, bs = exposed_share(fcells[key]), exposed_share(bcells[key])
@@ -173,6 +176,9 @@ def compare_comm_shares(fcells, bcells, shared, comm_threshold):
                 f"{key}: exposed comm share {100 * bs:.1f}% -> "
                 f"{100 * fs:.1f}% of step "
                 f"({ratio:.2f}x normalized > {comm_threshold:.2f}x)")
+        shares[key] = {"baseline_share": bs, "fresh_share": fs,
+                       "ratio": ratio,
+                       "ok": verdict == "ok"}
         lines.append(f"  {key}: exposed comm {100 * bs:.1f}% -> "
                      f"{100 * fs:.1f}% ({ratio:.2f}x {verdict})")
     return failures, lines
@@ -180,32 +186,43 @@ def compare_comm_shares(fcells, bcells, shared, comm_threshold):
 
 def compare(fresh: dict, baseline: dict, threshold: float,
             comm_threshold: float | None = None):
-    """Returns (failures, report_lines)."""
+    """Returns (failures, report_lines, report) where ``report`` is the
+    machine-readable summary ``--json`` emits: per-cell normalized
+    ratios + verdicts, the comm-share gate's shares, the payload
+    medians, and this payload's pass/fail."""
     lines = []
     failures = []
+    report = {"threshold": threshold, "cells": {}}
+
+    def done():
+        report["failures"] = list(failures)
+        report["pass"] = not failures
+        return failures, lines, report
+
     for payload, name in ((fresh, "fresh"), (baseline, "baseline")):
         failures.extend(validate_payload(payload, name))
     if failures:
-        return failures, lines
+        return done()
     for payload, name in ((fresh, "fresh"), (baseline, "baseline")):
         prov = payload.get("provenance")
         if not prov:
             failures.append(f"{name} payload has no provenance stamp; "
                             "re-run benchmarks.core_bench")
-            return failures, lines
+            return done()
         if not prov.get("quick"):
             failures.append(
                 f"{name} payload is not a --quick run "
                 f"(git_sha={prov.get('git_sha', '?')[:12]}); the gate only "
                 "compares quick grids")
-            return failures, lines
+            return done()
+    report["baseline_sha"] = baseline["provenance"].get("git_sha")
 
     fcells = fresh.get("cells", {})
     bcells = baseline.get("cells", {})
     shared = sorted(set(fcells) & set(bcells))
     if not shared:
         failures.append("no cells shared between fresh and baseline")
-        return failures, lines
+        return done()
 
     def median(xs):
         xs = sorted(xs)
@@ -216,6 +233,7 @@ def compare(fresh: dict, baseline: dict, threshold: float,
     # its own payload's median, not raw wall clock (see module docstring)
     med_f = median([fcells[k]["s_per_iter"] for k in shared])
     med_b = median([bcells[k]["s_per_iter"] for k in shared])
+    report["median_s_per_iter"] = {"fresh": med_f, "baseline": med_b}
     lines.append(f"  host speed (median s_per_iter): baseline "
                  f"{med_b * 1e3:.2f} ms, fresh {med_f * 1e3:.2f} ms "
                  f"({med_f / med_b:.2f}x raw -- normalized out below)")
@@ -227,9 +245,12 @@ def compare(fresh: dict, baseline: dict, threshold: float,
     for key in sorted(set(fcells) | set(bcells)):
         f, b = fcells.get(key), bcells.get(key)
         if f is None:
+            report["cells"][key] = {"status": "baseline_only"}
             lines.append(f"  {key}: only in baseline (grid shrank?)")
             continue
         if b is None:
+            report["cells"][key] = {
+                "status": "new", "fresh_s_per_iter": f["s_per_iter"]}
             lines.append(f"  {key}: new cell {f['s_per_iter'] * 1e3:.2f} ms "
                          "(no baseline yet)")
             continue
@@ -243,14 +264,20 @@ def compare(fresh: dict, baseline: dict, threshold: float,
                 f"({ratio:.2f}x normalized > {threshold:.2f}x)")
         elif ratio < 1.0 / threshold:
             verdict = "faster (consider refreshing the baseline)"
+        report["cells"][key] = {
+            "status": "regression" if ratio > threshold else "ok",
+            "ratio": ratio,
+            "fresh_s_per_iter": f["s_per_iter"],
+            "baseline_s_per_iter": b["s_per_iter"]}
         lines.append(f"  {key}: {ratio:.2f}x {verdict}")
 
     cfails, clines = compare_comm_shares(
         fcells, bcells, shared,
-        threshold if comm_threshold is None else comm_threshold)
+        threshold if comm_threshold is None else comm_threshold,
+        report=report)
     failures.extend(cfails)
     lines.extend(clines)
-    return failures, lines
+    return done()
 
 
 DEFAULT_ONLINE_BASELINE = os.path.join(
@@ -287,12 +314,20 @@ def main(argv=None):
     ap.add_argument("--fleet-min-speedup", type=float, default=3.0,
                     help="fail when the largest fleet cell's batched-vs-"
                          "sequential solves/s ratio drops below this")
+    ap.add_argument("--json", default=None, metavar="OUT.json",
+                    dest="json_out",
+                    help="write a machine-readable summary here: "
+                         "per-payload pass/fail, per-cell normalized "
+                         "ratios, comm shares, and the failure list "
+                         "(the CI bench job annotates runs from it)")
     args = ap.parse_args(argv)
 
     fresh = load(args.fresh)
     baseline = load(args.baseline)
-    failures, lines = compare(fresh, baseline, args.threshold,
-                              comm_threshold=args.comm_threshold)
+    failures, lines, core_report = compare(
+        fresh, baseline, args.threshold,
+        comm_threshold=args.comm_threshold)
+    reports = {"core": core_report}
 
     print(f"[check_regression] fresh={args.fresh}")
     print(f"[check_regression] baseline={args.baseline} "
@@ -306,14 +341,18 @@ def main(argv=None):
     if os.path.exists(args.online_fresh):
         ofresh = load(args.online_fresh)
         obase = load(args.online_baseline)
-        ofails, olines = compare(ofresh, obase, args.threshold,
-                                 comm_threshold=args.comm_threshold)
+        ofails, olines, oreport = compare(
+            ofresh, obase, args.threshold,
+            comm_threshold=args.comm_threshold)
         failures.extend(f"[online] {f}" for f in ofails)
+        reports["online"] = oreport
         print(f"[check_regression] online fresh={args.online_fresh} "
               f"baseline={args.online_baseline}")
         for line in olines:
             print(line)
     else:
+        reports["online"] = {"status": "skipped",
+                             "reason": f"no {args.online_fresh}"}
         print(f"[check_regression] online: no {args.online_fresh}; "
               "skipping the online-service gate (run "
               "benchmarks.online_bench --quick to produce it)")
@@ -325,9 +364,11 @@ def main(argv=None):
     if os.path.exists(args.fleet_fresh):
         ffresh = load(args.fleet_fresh)
         fbase = load(args.fleet_baseline)
-        ffails, flines = compare(ffresh, fbase, args.threshold,
-                                 comm_threshold=args.comm_threshold)
+        ffails, flines, freport = compare(
+            ffresh, fbase, args.threshold,
+            comm_threshold=args.comm_threshold)
         failures.extend(f"[fleet] {f}" for f in ffails)
+        reports["fleet"] = freport
         print(f"[check_regression] fleet fresh={args.fleet_fresh} "
               f"baseline={args.fleet_baseline}")
         for line in flines:
@@ -337,17 +378,33 @@ def main(argv=None):
         if big is not None and "speedup" in big:
             line = (f"  fleet speedup at T={big['tenants']}: "
                     f"{big['speedup']:.2f}x batched vs sequential")
+            freport["speedup"] = {"tenants": big["tenants"],
+                                  "value": big["speedup"],
+                                  "floor": args.fleet_min_speedup,
+                                  "ok": big["speedup"]
+                                  >= args.fleet_min_speedup}
             if big["speedup"] < args.fleet_min_speedup:
                 failures.append(
                     f"[fleet] speedup {big['speedup']:.2f}x at "
                     f"T={big['tenants']} below the "
                     f"{args.fleet_min_speedup:.1f}x floor")
+                freport["pass"] = False
+                freport["failures"].append(failures[-1])
                 line += f" (< {args.fleet_min_speedup:.1f}x FLOOR)"
             print(line)
     else:
+        reports["fleet"] = {"status": "skipped",
+                            "reason": f"no {args.fleet_fresh}"}
         print(f"[check_regression] fleet: no {args.fleet_fresh}; "
               "skipping the fleet gate (run benchmarks.fleet_bench "
               "--quick to produce it)")
+
+    if args.json_out:
+        summary = {"pass": not failures, "failures": failures,
+                   "threshold": args.threshold, "payloads": reports}
+        with open(args.json_out, "w") as fh:
+            json.dump(summary, fh, indent=1)
+        print(f"[check_regression] json -> {args.json_out}")
 
     if failures:
         print(f"[check_regression] FAIL ({len(failures)}):",

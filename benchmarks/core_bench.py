@@ -81,8 +81,15 @@ def trace_overhead(name, cfg, X, y, P, Q, iters, reps):
     The tracer's cost is a fixed few microseconds per outer iteration,
     so the *fraction* depends on step duration; the probe uses a
     realistic inner-epoch count rather than the quick grid's micro-step
-    (on a 0.1 ms step even a perfect tracer misses a 3% budget)."""
+    (on a 0.1 ms step even a perfect tracer misses a 3% budget).
+
+    The same probe also measures the FlightRecorder (the ring-buffer
+    tracer the long-running services leave on): its capacity is set
+    BELOW the span count of the run so every recorded iteration pays
+    the drop-oldest path -- the steady state of a service that has been
+    up for hours."""
     from repro.core.engines import drive
+    from repro.obs import FlightRecorder
 
     cfg = type(cfg)(lam=cfg.lam, outer_iters=cfg.outer_iters,
                     local_steps=max(1024, cfg.local_steps))
@@ -99,8 +106,14 @@ def trace_overhead(name, cfg, X, y, P, Q, iters, reps):
     run(Tracer())                                        # warm both paths
     untraced = min(run(None) for _ in range(reps))
     traced = min(run(Tracer()) for _ in range(reps))
+    # capacity < spans per run (2/iter: outer_iter + step) => the whole
+    # run exercises the at-capacity drop path
+    recorded = min(run(FlightRecorder(capacity=max(2, iters)))
+                   for _ in range(reps))
     return {"untraced_s_per_iter": untraced, "traced_s_per_iter": traced,
-            "overhead_frac": traced / untraced - 1.0}
+            "overhead_frac": traced / untraced - 1.0,
+            "recorder_s_per_iter": recorded,
+            "recorder_overhead_frac": recorded / untraced - 1.0}
 
 
 def main(argv=None):
@@ -204,11 +217,17 @@ def main(argv=None):
     print(f"[core_bench] trace overhead: "
           f"{ov['untraced_s_per_iter'] * 1e3:.3f} -> "
           f"{ov['traced_s_per_iter'] * 1e3:.3f} ms/iter "
-          f"({100 * ov['overhead_frac']:+.2f}%)")
+          f"({100 * ov['overhead_frac']:+.2f}%); recorder "
+          f"{ov['recorder_s_per_iter'] * 1e3:.3f} ms/iter "
+          f"({100 * ov['recorder_overhead_frac']:+.2f}%)")
     budget = (ov["untraced_s_per_iter"] * (1.0 + args.max_trace_overhead)
               + 5e-4)
     assert ov["traced_s_per_iter"] <= budget, (
         f"enabled tracer adds {100 * ov['overhead_frac']:.1f}% per iter "
+        f"(> {100 * args.max_trace_overhead:.0f}% budget)")
+    assert ov["recorder_s_per_iter"] <= budget, (
+        f"flight recorder adds "
+        f"{100 * ov['recorder_overhead_frac']:.1f}% per iter at capacity "
         f"(> {100 * args.max_trace_overhead:.0f}% budget)")
 
     if args.trace_out:

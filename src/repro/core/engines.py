@@ -113,12 +113,12 @@ class EngineProgram:
 
 
 def drive(prog: EngineProgram, outer_iters: int, observe=None, *,
-          tracer=None, on_step=None):
+          tracer=None, on_step=None, monitor=None):
     """Run the outer loop.  ``observe(t, state) -> bool`` is called after
     every step; returning True stops early.  Returns
     (final state, iterations run, stopped_early).
 
-    Telemetry (both optional, default off -- the untimed loop is
+    Telemetry (all optional, default off -- the untimed loop is
     bit-identical to the pre-telemetry driver and adds no syncs):
 
       * ``tracer`` -- a :class:`repro.obs.trace.Tracer`; each iteration
@@ -127,7 +127,11 @@ def drive(prog: EngineProgram, outer_iters: int, observe=None, *,
         measures real device wall-clock;
       * ``on_step(t, t_begin, step_s)`` -- fires after every timed step
         (the solver driver uses it to synthesize per-collective
-        attribution spans and feed per-iter phase fields into history).
+        attribution spans and feed per-iter phase fields into history);
+      * ``monitor`` -- a :class:`repro.obs.health.HealthMonitor`; its
+        rate-limited ``poll()`` runs once per iteration (a clock read
+        when not due -- health rules only *read* the registry, so the
+        iterates are untouched).
     """
     tracing = tracer is not None and getattr(tracer, "enabled", False)
     state = prog.state
@@ -142,6 +146,8 @@ def drive(prog: EngineProgram, outer_iters: int, observe=None, *,
         for t in range(1, outer_iters + 1):
             state = prog.step(t, state)
             done = t
+            if monitor is not None:
+                monitor.poll()
             if observe is not None and observe(t, state):
                 return state, done, True
         return state, done, False
@@ -163,6 +169,8 @@ def drive(prog: EngineProgram, outer_iters: int, observe=None, *,
             if on_step is not None:
                 on_step(t, t0, step_s)
             done = t
+            if monitor is not None:
+                monitor.poll()
             if observe is not None:
                 with tr.span("observe", iter=t):
                     stop = observe(t, state)

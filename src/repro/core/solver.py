@@ -337,7 +337,8 @@ class Solver:
               tol: Optional[float] = None, f_star: Optional[float] = None,
               record_history: bool = True,
               callback: Optional[Callable] = None,
-              tracer=None, registry=None, row_gate=None) -> SolveResult:
+              tracer=None, registry=None, monitor=None,
+              row_gate=None) -> SolveResult:
         """Run the solver.
 
         Early stopping (when ``tol`` is given) uses, in order of
@@ -361,6 +362,9 @@ class Solver:
           callback: ``callback(t, w, alpha)`` per outer iteration.
           tracer: a :class:`repro.obs.Tracer` (enables the timed path).
           registry: a :class:`repro.obs.Registry` for per-iter metrics.
+          monitor: a :class:`repro.obs.HealthMonitor`; polled once per
+            outer iteration (rules read the registry only -- iterates
+            are untouched).
 
         Returns:
           A :class:`SolveResult`.
@@ -378,7 +382,8 @@ class Solver:
                 loss_name, X, y, P=P, Q=Q, cfg=cfg, mesh=mesh,
                 warm_start=warm_start, tol=tol, f_star=f_star,
                 record_history=record_history, callback=callback,
-                tracer=tracer, registry=registry, row_gate=row_gate)
+                tracer=tracer, registry=registry, monitor=monitor,
+                row_gate=row_gate)
             return res
         history: List[Dict[str, float]] = []
         warm = warm_start
@@ -397,7 +402,8 @@ class Solver:
                     loss_name, X, y, P=P, Q=Q, cfg=stage_cfg, mesh=mesh,
                     warm_start=warm, tol=tol, f_star=f_star,
                     record_history=record_history, callback=callback,
-                    tracer=tracer, registry=registry, row_gate=row_gate,
+                    tracer=tracer, registry=registry, monitor=monitor,
+                    row_gate=row_gate,
                     advance=None if last else sched,
                     iter_offset=iters_done, time_offset=time_off,
                     bytes_offset=bytes_off, stage=si)
@@ -416,7 +422,7 @@ class Solver:
 
     def update(self, loss_name: str, X, y, *, touched, warm_start,
                P: int = None, Q: int = None, cfg=None, mesh=None,
-               passes: int = 1, tracer=None, registry=None,
+               passes: int = 1, tracer=None, registry=None, monitor=None,
                record_history: bool = True) -> SolveResult:
         """Incremental-update entry point for the online service.
 
@@ -464,6 +470,7 @@ class Solver:
             return self.solve(loss_name, X, y, P=P, Q=Q, cfg=cfg, mesh=mesh,
                               warm_start=warm_start, row_gate=gate,
                               tracer=tracer, registry=registry,
+                              monitor=monitor,
                               record_history=record_history)
         finally:
             self.program_cache = prev_cache
@@ -474,7 +481,8 @@ class Solver:
                      f_star: Optional[float] = None,
                      record_history: bool = True,
                      callback: Optional[Callable] = None,
-                     tracer=None, registry=None, row_gate=None,
+                     tracer=None, registry=None, monitor=None,
+                     row_gate=None,
                      advance=None, iter_offset: int = 0,
                      time_offset: float = 0.0, bytes_offset: int = 0,
                      stage: Optional[int] = None):
@@ -650,7 +658,8 @@ class Solver:
             state, iters, stopped = drive(
                 prog, cfg.outer_iters, observe,
                 tracer=tr if tr.enabled else None,
-                on_step=on_step if timed else None)
+                on_step=on_step if timed else None,
+                monitor=monitor)
             res = SolveResult(
                 w=prog.w_of(state),
                 alpha=prog.alpha_of(state) if prog.alpha_of else None,

@@ -44,6 +44,9 @@ class FleetScheduler:
         hook -- see ``repro/launch/fleet.py``).
       tracer, registry: :mod:`repro.obs` hooks, forwarded per batch;
         the scheduler adds per-bucket ``fleet/bucket_tenants`` gauges.
+      monitor: a :class:`repro.obs.HealthMonitor`; polled after each
+        bucket's gauges land and once per drained batch, so bucket
+        starvation / divergence verdicts track the live queue.
     """
 
     def __init__(self, *, P: int, Q: int, solver: str = "d3ca",
@@ -54,7 +57,7 @@ class FleetScheduler:
                  warm_registry: bool = True,
                  on_result: Optional[Callable[[str, SolveResult], None]]
                  = None,
-                 tracer=None, registry=None):
+                 tracer=None, registry=None, monitor=None):
         self.P, self.Q = P, Q
         self.fleet = FleetSolver(solver=solver, engine=engine,
                                  local_backend=local_backend,
@@ -67,6 +70,7 @@ class FleetScheduler:
         self.on_result = on_result
         self.tracer = tracer
         self.registry = registry
+        self.monitor = monitor
         self._queue: List[FleetProblem] = []
         self._warm: Dict[str, SolveResult] = {}
 
@@ -129,6 +133,8 @@ class FleetScheduler:
                     results[p.tenant_id] = res
                     if self.on_result is not None:
                         self.on_result(p.tenant_id, res)
+                if self.monitor is not None:
+                    self.monitor.poll()
         ordered: Dict[str, SolveResult] = collections.OrderedDict()
         for key in results:
             ordered[key] = results[key]

@@ -103,7 +103,34 @@ def build_parser():
                     help="record fleet gauges (tenants per bucket, "
                          "active tenants, per-tenant rel_opt) and print "
                          "the registry snapshot in the summary JSON")
+    ap.add_argument("--min-tenants", type=int, default=2,
+                    help="--health: WARN when a shape bucket runs with "
+                         "fewer tenants than this (starved bucket)")
+    from .obs import add_obs_flags
+    add_obs_flags(ap)
     return ap
+
+
+def _report_round(r, problems, results, tenants, books, args):
+    """Record + print one round's per-tenant lines."""
+    for p in problems:
+        res = results[p.tenant_id]
+        entry = {
+            "tenant": p.tenant_id, "lam": p.lam,
+            "n": p.n, "m": p.m, "iters": res.iters,
+            "converged": res.converged,
+            "objective": (res.history[-1]["objective"]
+                          if res.history else None),
+        }
+        if args.publish_snapshots and p.tenant_id in books:
+            entry["snapshot_version"] = \
+                books[p.tenant_id].current().version
+        tenants[p.tenant_id] = entry
+        obj = (f"f={entry['objective']:.6f}"
+               if entry["objective"] is not None else "f=?")
+        print(f"  round={r} {p.tenant_id:>10} lam={p.lam:<8g} "
+              f"n={p.n} iters={res.iters} {obj}"
+              + (" converged" if res.converged else ""))
 
 
 def main(argv=None):
@@ -154,6 +181,16 @@ def main(argv=None):
     if args.metrics:
         from repro.obs import Registry
         registry = Registry()
+    from .obs import build_plane
+    plane_rules = None
+    if args.health:
+        from repro.obs import fleet_rules
+        plane_rules = fleet_rules(min_tenants=args.min_tenants)
+    plane = build_plane(args, rules=plane_rules, registry=registry,
+                        meta={"cli": "fleet", "solver": args.solver,
+                              "engine": args.engine,
+                              "tenants": args.tenants})
+    registry = plane.registry if plane.active else registry
 
     books, scorers = {}, {}
 
@@ -174,7 +211,8 @@ def main(argv=None):
         local_backend=args.backend, block_format=args.block_format,
         cfg=cfg, tol=args.tol, check_every=args.check_every,
         max_tenants=args.max_tenants, on_result=on_result,
-        tracer=tracer, registry=registry)
+        tracer=plane.tracer_or(tracer), registry=registry,
+        monitor=plane.monitor)
 
     print(f"[fleet] {args.solver} engine={args.engine} "
           f"backend={args.backend} block_format={args.block_format} "
@@ -183,29 +221,13 @@ def main(argv=None):
 
     tenants = {}
     t0 = time.perf_counter()
-    for r in range(args.rounds):
-        for p in problems:
-            sched.submit(p)
-        buckets = len(sched.buckets())
-        results = sched.run()
-        for p in problems:
-            res = results[p.tenant_id]
-            entry = {
-                "tenant": p.tenant_id, "lam": p.lam,
-                "n": p.n, "m": p.m, "iters": res.iters,
-                "converged": res.converged,
-                "objective": (res.history[-1]["objective"]
-                              if res.history else None),
-            }
-            if args.publish_snapshots and p.tenant_id in books:
-                entry["snapshot_version"] = \
-                    books[p.tenant_id].current().version
-            tenants[p.tenant_id] = entry
-            obj = (f"f={entry['objective']:.6f}"
-                   if entry["objective"] is not None else "f=?")
-            print(f"  round={r} {p.tenant_id:>10} lam={p.lam:<8g} "
-                  f"n={p.n} iters={res.iters} {obj}"
-                  + (" converged" if res.converged else ""))
+    with plane.crash_guard():
+        for r in range(args.rounds):
+            for p in problems:
+                sched.submit(p)
+            buckets = len(sched.buckets())
+            results = sched.run()
+            _report_round(r, problems, results, tenants, books, args)
     total_s = time.perf_counter() - t0
 
     solves = args.tenants * args.rounds
@@ -219,6 +241,8 @@ def main(argv=None):
     }
     if registry is not None:
         summary["metrics"] = registry.snapshot()
+    if plane.active:
+        summary["obs"] = plane.finalize()
     if tracer is not None:
         tracer.write_chrome_trace(args.trace)
         base, _ = os.path.splitext(args.trace)

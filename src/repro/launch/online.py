@@ -84,6 +84,15 @@ def build_parser():
                     help="include the service's metrics snapshot "
                          "(staleness gauge, update/swap histograms, "
                          "throughput counters) in the summary JSON")
+    ap.add_argument("--max-staleness", type=float, default=60.0,
+                    help="--health: CRIT when the served snapshot is "
+                         "older than this many seconds")
+    ap.add_argument("--max-lag", type=float, default=10_000,
+                    help="--health: CRIT when the served model trails "
+                         "the stream by more than this many admitted "
+                         "observations")
+    from .obs import add_obs_flags
+    add_obs_flags(ap)
     return ap
 
 
@@ -120,6 +129,16 @@ def main(argv=None):
     if args.metrics:
         from repro.obs import Registry
         registry = Registry()
+    from .obs import build_plane
+    plane_rules = None
+    if args.health:
+        from repro.obs import online_rules
+        plane_rules = online_rules(max_staleness_s=args.max_staleness,
+                                   max_lag=args.max_lag)
+    plane = build_plane(args, rules=plane_rules, registry=registry,
+                        meta={"cli": "online", "solver": args.solver,
+                              "engine": args.engine})
+    registry = plane.registry if plane.active else registry
 
     cls = get_solver(args.solver)
     cfg = cls.config_cls(lam=args.lam)
@@ -131,7 +150,8 @@ def main(argv=None):
         topology=args.topology, solver_cfg=cfg, passes=args.passes,
         queue_capacity=args.queue_capacity)
     svc = OnlineSolverService(config, mesh=mesh, manager=manager,
-                              tracer=tracer, registry=registry)
+                              tracer=plane.tracer_or(tracer),
+                              registry=registry, monitor=plane.monitor)
     recovered = svc.recover()
     if recovered is not None:
         print(f"[online] recovered snapshot version {recovered} from "
@@ -150,20 +170,21 @@ def main(argv=None):
           f"backend={args.backend} grid={P}x{Q} m={args.m} "
           f"capacity={svc.store.capacity} passes={args.passes} "
           f"loss={args.loss} lam={args.lam}")
-    for r in range(args.rounds):
-        svc.submit(*stream(args.batch))
-        version = svc.run_pending()
-        Xs, ys = stream(args.score_batch)
-        acc = float(np.mean(svc.predict(Xs) * ys > 0)) \
-            if args.loss != "logistic" else float("nan")
-        mask = svc.store.filled_mask > 0
-        f = float(objective(args.loss, svc.store.X[mask],
-                            svc.store.y[mask],
-                            svc.book.current().w, args.lam))
-        print(f"  round={r:3d} version={version} "
-              f"filled={svc.store.filled}/{svc.store.capacity} "
-              f"f={f:.5f} acc={acc:.3f} lag={svc.version_lag} "
-              f"staleness={svc.staleness_s * 1e3:.1f}ms")
+    with plane.crash_guard():
+        for r in range(args.rounds):
+            svc.submit(*stream(args.batch))
+            version = svc.run_pending()
+            Xs, ys = stream(args.score_batch)
+            acc = float(np.mean(svc.predict(Xs) * ys > 0)) \
+                if args.loss != "logistic" else float("nan")
+            mask = svc.store.filled_mask > 0
+            f = float(objective(args.loss, svc.store.X[mask],
+                                svc.store.y[mask],
+                                svc.book.current().w, args.lam))
+            print(f"  round={r:3d} version={version} "
+                  f"filled={svc.store.filled}/{svc.store.capacity} "
+                  f"f={f:.5f} acc={acc:.3f} lag={svc.version_lag} "
+                  f"staleness={svc.staleness_s * 1e3:.1f}ms")
     if manager is not None:
         svc.book.flush()
 
@@ -175,6 +196,8 @@ def main(argv=None):
                    batch=args.batch, objective=f)
     if registry is not None:
         summary["metrics"] = registry.snapshot()
+    if plane.active:
+        summary["obs"] = plane.finalize()
     if tracer is not None:
         tracer.write_chrome_trace(args.trace)
         base, _ = os.path.splitext(args.trace)

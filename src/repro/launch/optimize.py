@@ -149,6 +149,8 @@ def build_parser():
     ap.add_argument("--metrics", action="store_true",
                     help="record solver metrics into a registry and "
                          "print its snapshot in the summary JSON")
+    from .obs import add_obs_flags
+    add_obs_flags(ap)
     return ap
 
 
@@ -243,8 +245,20 @@ def main(argv=None):
     if args.metrics:
         from repro.obs import Registry
         registry = Registry()
-    res = solver.solve(args.loss, X, y, P=P, Q=Q, cfg=cfg, tol=args.tol,
-                       f_star=f_star, tracer=tracer, registry=registry)
+    from .obs import build_plane
+    plane_rules = None
+    if args.health:
+        from repro.obs import solver_rules
+        plane_rules = solver_rules()
+    plane = build_plane(args, rules=plane_rules, registry=registry,
+                        meta={"cli": "optimize", "solver": args.solver,
+                              "engine": args.engine})
+    registry = plane.registry if plane.active else registry
+    with plane.crash_guard():
+        res = solver.solve(args.loss, X, y, P=P, Q=Q, cfg=cfg,
+                           tol=args.tol, f_star=f_star,
+                           tracer=plane.tracer_or(tracer),
+                           registry=registry, monitor=plane.monitor)
     if res.comm_bytes is not None:
         acct = res.comm_bytes
         detail = ", ".join(
@@ -296,6 +310,8 @@ def main(argv=None):
     }
     if registry is not None:
         summary["metrics"] = registry.snapshot()
+    if plane.active:
+        summary["obs"] = plane.finalize()
     if tracer is not None:
         tracer.write_chrome_trace(args.trace)
         base, _ = os.path.splitext(args.trace)
@@ -361,6 +377,16 @@ def _fanout(ap, args, P, Q):
     if args.metrics:
         from repro.obs import Registry
         registry = Registry()
+    from .obs import build_plane
+    plane_rules = None
+    if args.health:
+        from repro.obs import fleet_rules
+        plane_rules = fleet_rules()
+    plane = build_plane(args, rules=plane_rules, registry=registry,
+                        meta={"cli": "optimize", "solver": args.solver,
+                              "engine": args.engine,
+                              "problems": args.problems})
+    registry = plane.registry if plane.active else registry
 
     print(f"[optimize] {args.solver} engine={fleet.engine} "
           f"backend={args.backend} block_format={args.block_format} "
@@ -368,8 +394,10 @@ def _fanout(ap, args, P, Q):
           f"{args.dataset}({args.n}x{args.m}) loss={args.loss} "
           f"lam={args.lam} (fleet fan-out)")
     t0 = time.perf_counter()
-    results = fleet.solve_batch(probs, P=P, Q=Q, cfg=cfg, tol=args.tol,
-                                tracer=tracer, registry=registry)
+    with plane.crash_guard():
+        results = fleet.solve_batch(probs, P=P, Q=Q, cfg=cfg, tol=args.tol,
+                                    tracer=plane.tracer_or(tracer),
+                                    registry=registry)
     total_s = time.perf_counter() - t0
     for p, res in zip(probs, results):
         obj = res.history[-1]["objective"] if res.history else None
@@ -393,6 +421,8 @@ def _fanout(ap, args, P, Q):
     }
     if registry is not None:
         summary["metrics"] = registry.snapshot()
+    if plane.active:
+        summary["obs"] = plane.finalize()
     if tracer is not None:
         tracer.write_chrome_trace(args.trace)
         base, _ = os.path.splitext(args.trace)

@@ -152,6 +152,8 @@ def main(argv=None):
     ap.add_argument("--metrics", action="store_true",
                     help="print the metrics-registry snapshot (the same "
                          "schema solver telemetry uses) after the run")
+    from .obs import add_obs_flags
+    add_obs_flags(ap)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -182,11 +184,20 @@ def main(argv=None):
     if args.metrics:
         from repro.obs import Registry
         registry = Registry()
+    from .obs import build_plane
+    plane_rules = None
+    if args.health:
+        from repro.obs import serve_rules
+        plane_rules = serve_rules()
+    plane = build_plane(args, rules=plane_rules, registry=registry,
+                        meta={"cli": "serve", "arch": args.arch})
+    registry = plane.registry if plane.active else registry
     try:
         engine = InferenceEngine(model, params, EngineConfig(
             max_slots=args.slots, page_size=args.page_size,
             num_pages=args.num_pages, max_seq_len=args.max_seq_len),
-            tracer=tracer, registry=registry)
+            tracer=plane.tracer_or(tracer), registry=registry,
+            monitor=plane.monitor)
     except NotImplementedError as e:
         print(f"note: {e}")
         print("falling back to the seed static loop (greedy, fixed batch)")
@@ -194,7 +205,8 @@ def main(argv=None):
         print("generated token ids (first request):",
               outputs[min(outputs)][:16])
         return outputs
-    outputs = engine.run(reqs)
+    with plane.crash_guard():
+        outputs = engine.run(reqs)
 
     s = engine.metrics.summary()
     print(f"{len(outputs)} requests, {s['generated_tokens']} tokens in "
@@ -204,6 +216,8 @@ def main(argv=None):
     print(json.dumps(s, indent=1))
     if registry is not None:
         print(json.dumps(registry.snapshot(), indent=1))
+    if plane.active:
+        print(json.dumps({"obs": plane.finalize()}, indent=1))
     if tracer is not None:
         tracer.write_chrome_trace(args.trace)
         print(f"trace: {len(tracer.events)} events -> {args.trace}")

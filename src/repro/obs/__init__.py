@@ -29,12 +29,37 @@ Modules:
                    percentiles) written through a Registry; the legacy
                    ``repro.serve.metrics.ServeMetrics`` is a deprecated
                    shim over it
+  * ``recorder``-- :class:`FlightRecorder`: bounded ring-buffer tracer
+                   (drop-oldest, O(capacity) memory) for the services
+                   that run indefinitely, with atomic postmortem
+                   bundles (``dump`` / ``crash_guard`` /
+                   :func:`load_bundle`)
+  * ``health``  -- declarative :class:`HealthRule` catalog over the
+                   registry (divergence, gap stall, staleness, queue
+                   shed, fleet starvation, exposed-comm share) and the
+                   :class:`HealthMonitor` that evaluates them, records
+                   verdicts as metrics, and edge-triggers recorder
+                   dumps on CRIT
+  * ``export``  -- Prometheus text-format rendering of a registry
+                   snapshot (:func:`render_prometheus`) and its
+                   validating inverse (:func:`parse_prometheus_text`)
+  * ``http``    -- :class:`ObsServer`: stdlib-only background HTTP
+                   endpoint with ``/metrics`` (Prometheus),
+                   ``/healthz`` (503 on CRIT), and ``/varz``
 
 Nothing in this package imports ``repro.core`` or ``repro.serve`` --
 the observability layer sits below both and is threaded through them.
 """
+from .export import parse_prometheus_text, render_prometheus
+from .health import (CRIT, OK, WARN, HealthEvent, HealthMonitor, HealthRule,
+                     fleet_rules, online_rules, rule_comm_exposed,
+                     rule_divergence, rule_fleet_starvation, rule_gap_stall,
+                     rule_queue_shed, rule_staleness, rule_version_lag,
+                     serve_rules, solver_rules)
+from .http import ObsServer
 from .metrics import Counter, Gauge, Histogram, Registry, percentiles
 from .phases import PhaseSplit, bench_codecs, calibrate_phases
+from .recorder import BUNDLE_SCHEMA, FlightRecorder, load_bundle
 from .serve import RequestMetrics
 from .trace import NULL_TRACER, NullTracer, Tracer, as_tracer
 
@@ -43,4 +68,12 @@ __all__ = [
     "PhaseSplit", "bench_codecs", "calibrate_phases",
     "RequestMetrics",
     "NULL_TRACER", "NullTracer", "Tracer", "as_tracer",
+    "BUNDLE_SCHEMA", "FlightRecorder", "load_bundle",
+    "OK", "WARN", "CRIT", "HealthEvent", "HealthRule", "HealthMonitor",
+    "rule_divergence", "rule_gap_stall", "rule_staleness",
+    "rule_version_lag", "rule_queue_shed", "rule_fleet_starvation",
+    "rule_comm_exposed",
+    "solver_rules", "online_rules", "serve_rules", "fleet_rules",
+    "render_prometheus", "parse_prometheus_text",
+    "ObsServer",
 ]

@@ -93,14 +93,20 @@ class OnlineSolverService:
         ``online/scored`` / ``online/rejected``, gauges
         ``online/staleness_s`` (age of the served snapshot) and
         ``online/version_lag`` (admitted observations the served model
-        has not seen), and histograms ``online/update_s`` /
-        ``online/swap_s``.
+        has not seen) and ``online/w_norm`` (L2 norm of the published
+        weights -- the divergence health rule's NaN sentinel, since
+        incremental updates skip the per-iter objective evaluation),
+        and histograms ``online/update_s`` / ``online/swap_s``.
+      monitor: a :class:`repro.obs.HealthMonitor`; its rate-limited
+        ``poll()`` runs after every publish and on every ingest, so a
+        NaN model, a staleness breach, or queue saturation is noticed
+        (and its postmortem dump fired) while the service is live.
       clock: injectable wall-clock for staleness math (tests freeze it).
     """
 
     def __init__(self, config: OnlineConfig, *, mesh=None, manager=None,
                  tracer=None, registry: Optional[Registry] = None,
-                 clock=time.monotonic):
+                 monitor=None, clock=time.monotonic):
         solver_cls = get_solver(config.solver)
         if not solver_cls.supports_row_gate:
             raise ValueError(
@@ -125,6 +131,7 @@ class OnlineSolverService:
         self.scorer = LinearScorer(np.zeros((config.m,), np.float32),
                                    mesh, loss=config.loss)
         self._labels = {"solver": config.solver, "engine": config.engine}
+        self.monitor = monitor
         self.last_result = None
 
     # ------------------------------------------------------------------
@@ -140,10 +147,14 @@ class OnlineSolverService:
             except Exception:
                 self.registry.counter("online/rejected", **self._labels)\
                     .inc(int(np.shape(X)[0]))
+                if self.monitor is not None:
+                    self.monitor.poll()
                 raise
         self.registry.counter("online/ingested", **self._labels)\
             .inc(int(np.shape(X)[0]))
         self._gauge_staleness()
+        if self.monitor is not None:
+            self.monitor.poll()
         return seq
 
     # ------------------------------------------------------------------
@@ -186,8 +197,16 @@ class OnlineSolverService:
             self.registry.histogram("online/swap_s", **self._labels)\
                 .observe(self.clock() - t0)
         self.registry.counter("online/updates", **self._labels).inc()
+        # L2 norm of the published weights: NaN/inf anywhere in w makes
+        # the norm non-finite, which is what the divergence health rule
+        # watches (incremental updates run with record_history=False, so
+        # no solver/objective gauge is written on this path)
+        self.registry.gauge("online/w_norm", **self._labels)\
+            .set(float(np.linalg.norm(np.asarray(snap.w))))
         self.last_result = res
         self._gauge_staleness()
+        if self.monitor is not None:
+            self.monitor.poll()
         return snap.version
 
     def drain_all(self) -> int:
@@ -209,6 +228,8 @@ class OnlineSolverService:
         self.registry.counter("online/scored", **self._labels)\
             .inc(int(np.shape(X)[0]))
         self._gauge_staleness()
+        if self.monitor is not None:
+            self.monitor.poll()     # staleness grows while only scoring
         return out
 
     def predict(self, X) -> np.ndarray:
@@ -256,7 +277,7 @@ class OnlineSolverService:
     def stats(self) -> dict:
         """One-call service summary (counters + staleness + store)."""
         cur = self.book.current()
-        return {
+        out = {
             "version": cur.version,
             "trained_seq": cur.trained_seq,
             "ingested": self.queue.admitted,
@@ -269,3 +290,6 @@ class OnlineSolverService:
             "rows_scored": self.scorer.rows_scored,
             "score_rows_per_sec": self.scorer.rows_per_sec,
         }
+        if self.monitor is not None:
+            out["health"] = self.monitor.status
+        return out

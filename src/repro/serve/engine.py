@@ -81,7 +81,8 @@ class _Slot:
 
 class InferenceEngine:
     def __init__(self, model, params, cfg: EngineConfig = EngineConfig(),
-                 clock=time.perf_counter, tracer=None, registry=None):
+                 clock=time.perf_counter, tracer=None, registry=None,
+                 monitor=None):
         paged_kinds(model.cfg)      # raises for unsupported archs
         self.model = model
         self.params = params
@@ -94,6 +95,10 @@ class InferenceEngine:
         #: optional repro.obs Tracer; spans the admission/prefill/decode
         #: phases of every step and marks preempt/finish/reject instants
         self.tracer = as_tracer(tracer)
+        #: optional repro.obs HealthMonitor; poll()ed once per engine
+        #: step (rate-limited inside the monitor, so per-step cost is a
+        #: clock read when not due)
+        self.monitor = monitor
 
         self.queue: collections.deque = collections.deque()
         self.slots: List[Optional[_Slot]] = [None] * cfg.max_slots
@@ -285,7 +290,10 @@ class InferenceEngine:
     def step(self) -> bool:
         """Admit + grow + one decode step.  False when fully idle."""
         with self.tracer.span("engine_step"):
-            return self._step_inner()
+            out = self._step_inner()
+        if self.monitor is not None:
+            self.monitor.poll()
+        return out
 
     def _step_inner(self) -> bool:
         with self.tracer.span("admission"):
